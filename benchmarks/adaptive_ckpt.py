@@ -1,0 +1,59 @@
+"""Paper Fig. 7: adaptive checkpointing caps overhead at epsilon.
+
+The fine-tune-like workload (checkpoint cost comparable to epoch compute)
+is where adaptivity matters: with it disabled the overhead blows past the
+tolerance (paper: 91% on RTE); enabled, it must stay under epsilon.
+"""
+from __future__ import annotations
+
+import shutil
+import time
+
+import repro.flor as flor
+from benchmarks.common import Rows, finetune_like, make_runner
+
+EPOCHS = 12
+EPS = 1.0 / 15
+
+
+def _run(state, run_epoch, run_dir, adaptive, sync):
+    shutil.rmtree(run_dir, ignore_errors=True)
+    flor.init(run_dir, mode="record", adaptive=adaptive, epsilon=EPS,
+              async_materialize=not sync)
+    t0 = time.perf_counter()
+    for e in flor.generator(range(EPOCHS)):
+        if flor.skipblock.step_into("train"):
+            state, m = run_epoch(state, e)
+        state = flor.skipblock.end("train", state)
+    wall = time.perf_counter() - t0
+    ctx = flor.get_context()
+    snap = ctx.controller.snapshot()
+    flor.finish()
+    k = snap["blocks"]["train"]["k"]
+    return wall, k
+
+
+def run(rows: Rows, tmp="/tmp/bench_adaptive"):
+    cfg, kw = finetune_like()
+    state0, run_epoch = make_runner(cfg, **kw)
+    t0 = time.perf_counter()
+    for e in range(EPOCHS):
+        state, _ = run_epoch(state0, e)
+    tv = time.perf_counter() - t0
+
+    # adaptivity disabled + synchronous materialization = worst case
+    tw, kw_ = _run(state0, run_epoch, f"{tmp}/off", adaptive=False, sync=True)
+    ta, ka = _run(state0, run_epoch, f"{tmp}/on", adaptive=True, sync=True)
+    rows.add("adaptive_ckpt(fig7)", "vanilla_s", round(tv, 3))
+    rows.add("adaptive_ckpt(fig7)", "adaptive_off_overhead_pct",
+             round((tw - tv) / tv * 100, 1), f"ckpts={kw_}/{EPOCHS}")
+    rows.add("adaptive_ckpt(fig7)", "adaptive_on_overhead_pct",
+             round((ta - tv) / tv * 100, 1), f"ckpts={ka}/{EPOCHS}")
+    rows.add("adaptive_ckpt(fig7)", "epsilon_pct", round(EPS * 100, 2),
+             "user tolerance")
+    rows.add("adaptive_ckpt(fig7)", "sparse_checkpointing",
+             int(ka < EPOCHS), "1 = controller went periodic")
+
+
+if __name__ == "__main__":
+    run(Rows())

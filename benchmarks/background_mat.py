@@ -1,0 +1,51 @@
+"""Paper Fig. 5: background materialization — main-thread blocked time.
+
+Baseline = serialize+compress+write synchronously on the main thread (the
+paper's cloudpickle baseline); Fork/our-equivalent = AsyncWriter (JAX arrays
+are immutable so the snapshot is a reference; DMA + serialization happen on
+the writer thread). The metric is how long the TRAINING thread is stalled.
+"""
+from __future__ import annotations
+
+import shutil
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Rows, timed
+from repro.checkpoint import AsyncWriter, CheckpointStore
+
+
+def _big_state(mb=128):
+    n = mb * 1024 * 1024 // 4
+    return {"params": jax.random.normal(jax.random.PRNGKey(0), (n,)),
+            "mu": jax.random.normal(jax.random.PRNGKey(1), (n // 2,)),
+            }
+
+
+def run(rows: Rows, tmp="/tmp/bench_bgmat"):
+    tree = _big_state()
+    nbytes = sum(x.nbytes for x in jax.tree_util.tree_leaves(tree))
+
+    shutil.rmtree(tmp, ignore_errors=True)
+    store = CheckpointStore(f"{tmp}/sync")
+    _, t_sync = timed(store.put_tree, "ck", jax.device_get(tree))
+
+    store2 = CheckpointStore(f"{tmp}/async")
+    w = AsyncWriter(store2)
+    _, t_submit = timed(w.submit, "ck", tree)
+    _, t_drain = timed(w.close)
+
+    rows.add("background_mat(fig5)", "checkpoint_mb", nbytes // 2 ** 20)
+    rows.add("background_mat(fig5)", "sync_main_thread_s", round(t_sync, 3),
+             "cloudpickle-style baseline")
+    rows.add("background_mat(fig5)", "async_main_thread_s",
+             round(t_submit, 4), "AsyncWriter submit (reference snapshot)")
+    rows.add("background_mat(fig5)", "async_background_s", round(t_drain, 3))
+    rows.add("background_mat(fig5)", "main_thread_speedup",
+             round(t_sync / max(t_submit, 1e-9), 1))
+
+
+if __name__ == "__main__":
+    run(Rows())

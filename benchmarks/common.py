@@ -1,0 +1,69 @@
+"""Shared benchmark scaffolding: the florbench workload pair.
+
+Two CPU-scale workloads mirror the paper's two regimes:
+  * train-like  — compute-heavy epochs, modest state (paper: Cifr/RsNt/...);
+  * finetune-like — short epochs, state dominated by a frozen majority
+    (paper: RTE/CoLA) — the adaptive-checkpointing stress case.
+"""
+from __future__ import annotations
+
+import shutil
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.data import synthetic_batch
+from repro.train.step import build_train_step
+
+S3_USD_PER_GB_MONTH = 0.023
+P3_8XLARGE_USD_HR = 12.24        # paper's 4-GPU machine
+P3_2XLARGE_USD_HR = 3.06
+
+
+def train_like():
+    cfg = C.get_smoke("florbench-100m")
+    return cfg, dict(steps_per_epoch=8, batch=4, seq=128)
+
+
+def finetune_like():
+    # big params relative to per-epoch compute: 2 steps on short seq
+    cfg = C.get_smoke("florbench-100m").replace(
+        num_layers=6, d_model=256, d_ff=1024, vocab_size=8192)
+    return cfg, dict(steps_per_epoch=1, batch=2, seq=32)
+
+
+def make_runner(cfg, steps_per_epoch, batch, seq, seed=0):
+    init_state, train_step = build_train_step(cfg)
+    ts = jax.jit(train_step)
+    state0 = jax.jit(init_state)(jax.random.PRNGKey(seed))
+
+    def run_epoch(state, epoch):
+        m = None
+        for s in range(steps_per_epoch):
+            b = synthetic_batch(cfg, batch, seq, epoch * steps_per_epoch + s,
+                                seed)
+            state, m = ts(state, b)
+        jax.block_until_ready(m["loss"])
+        return state, m
+
+    # warm the jit cache so measurements exclude compilation
+    warm, _ = run_epoch(state0, 10 ** 6)
+    del warm
+    return state0, run_epoch
+
+
+class Rows:
+    def __init__(self):
+        self.rows = []
+
+    def add(self, bench, metric, value, note=""):
+        self.rows.append((bench, metric, value, note))
+        print(f"{bench},{metric},{value},{note}", flush=True)
+
+
+def timed(fn, *a, **kw):
+    t0 = time.perf_counter()
+    out = fn(*a, **kw)
+    return out, time.perf_counter() - t0

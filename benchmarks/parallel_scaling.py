@@ -1,0 +1,78 @@
+"""Paper Figs. 10/13/14: hindsight parallelism scale-out and marginal cost.
+
+This container has ONE core, so wall-clock can't show multi-worker speedup
+directly. We measure the two quantities that determine it and validate the
+paper's model:
+  * per-worker measured epoch times C and restore times R (real),
+  * per-worker work assignment from the real partitioner,
+then parallel wall = max over workers of (|init_restores|*R + |work|*C) —
+the coordination-free bound the paper's Fig. 13 hits (workers never talk).
+The subprocess path itself is exercised in tests/test_system.py.
+"""
+from __future__ import annotations
+
+import shutil
+import time
+
+import repro.flor as flor
+from benchmarks.common import (P3_2XLARGE_USD_HR, P3_8XLARGE_USD_HR, Rows,
+                               make_runner, train_like)
+from repro.core.generator import partition
+
+EPOCHS = 16
+
+
+def run(rows: Rows, tmp="/tmp/bench_scaling"):
+    cfg, kw = train_like()
+    state0, run_epoch = make_runner(cfg, **kw)
+    run_dir = f"{tmp}/run"
+    shutil.rmtree(run_dir, ignore_errors=True)
+
+    # record, measuring epoch compute time C
+    flor.init(run_dir, mode="record", adaptive=False)
+    state = state0
+    t0 = time.perf_counter()
+    for e in flor.generator(range(EPOCHS)):
+        if flor.skipblock.step_into("train"):
+            state, _ = run_epoch(state, e)
+        state = flor.skipblock.end("train", state)
+    wall_record = time.perf_counter() - t0
+    ctx = flor.get_context()
+    C = ctx.controller.blocks["train"].C.value
+    flor.finish()
+
+    # measure restore time R (real restore from store)
+    flor.init(run_dir, mode="replay", probed=set())
+    t0 = time.perf_counter()
+    st = state0
+    ctx = flor.get_context()
+    ctx.begin_epoch(0)
+    if not flor.skipblock.step_into("train"):
+        st = flor.skipblock.end("train", st)
+    R = time.perf_counter() - t0
+    flor.finish()
+
+    serial = EPOCHS * C
+    rows.add("parallel_scaling(fig13)", "epoch_compute_s", round(C, 3))
+    rows.add("parallel_scaling(fig13)", "restore_s", round(R, 4))
+    rows.add("parallel_scaling(fig13)", "serial_replay_s", round(serial, 2))
+    for g in (1, 2, 4, 8, 16):
+        walls = []
+        for pid in range(g):
+            before, mine = partition(list(range(EPOCHS)), g, pid)
+            walls.append(len(before) * R + len(mine) * C)   # strong init
+        wall = max(walls)
+        speedup = serial / wall
+        ideal = g if EPOCHS % g == 0 else EPOCHS / -(-EPOCHS // g)
+        rows.add("parallel_scaling(fig13)", f"g{g}_speedup",
+                 round(speedup, 2), f"ideal {round(ideal, 2)}")
+        # fig14: marginal cost of parallelism (4 workers per machine)
+        machines = -(-g // 4)
+        usd = machines * (P3_8XLARGE_USD_HR / 3600) * wall if g > 1 else \
+            (P3_2XLARGE_USD_HR / 3600) * wall
+        rows.add("parallel_cost(fig14)", f"g{g}_usd",
+                 round(usd, 6), f"{machines} machine(s)")
+
+
+if __name__ == "__main__":
+    run(Rows())

@@ -1,0 +1,51 @@
+"""Paper Fig. 11: record overhead vs vanilla execution (target: ~1.47%)."""
+from __future__ import annotations
+
+import shutil
+import time
+
+import jax
+
+import repro.flor as flor
+from benchmarks.common import Rows, finetune_like, make_runner, train_like
+
+EPOCHS = 8
+
+
+def _vanilla(state, run_epoch):
+    t0 = time.perf_counter()
+    for e in range(EPOCHS):
+        state, _ = run_epoch(state, e)
+    return time.perf_counter() - t0
+
+
+def _flor_record(state, run_epoch, run_dir, adaptive=True):
+    shutil.rmtree(run_dir, ignore_errors=True)
+    flor.init(run_dir, mode="record", adaptive=adaptive)
+    t0 = time.perf_counter()
+    for e in flor.generator(range(EPOCHS)):
+        if flor.skipblock.step_into("train"):
+            state, m = run_epoch(state, e)
+            flor.log("loss", m["loss"])
+        state = flor.skipblock.end("train", state)
+    wall = time.perf_counter() - t0
+    flor.finish()
+    return wall
+
+
+def run(rows: Rows, tmp="/tmp/bench_record_overhead"):
+    for name, (cfg, kw) in (("train_like", train_like()),
+                            ("finetune_like", finetune_like())):
+        state0, run_epoch = make_runner(cfg, **kw)
+        tv = min(_vanilla(state0, run_epoch) for _ in range(2))
+        tf = min(_flor_record(state0, run_epoch, f"{tmp}/{name}")
+                 for _ in range(2))
+        ovh = (tf - tv) / tv * 100
+        rows.add("record_overhead(fig11)", f"{name}_vanilla_s", round(tv, 3))
+        rows.add("record_overhead(fig11)", f"{name}_flor_s", round(tf, 3))
+        rows.add("record_overhead(fig11)", f"{name}_overhead_pct",
+                 round(ovh, 2), "paper avg 1.47%")
+
+
+if __name__ == "__main__":
+    run(Rows())

@@ -1,0 +1,72 @@
+"""Paper Fig. 12: replay latency by probe position.
+
+Outer-loop probe -> partial replay (memoized epochs skipped, state restored
+physically): latency is restore-bound. Inner-loop probe -> logical redo of
+every epoch. Both compared against a vanilla re-execution.
+"""
+from __future__ import annotations
+
+import shutil
+import time
+
+import repro.flor as flor
+from benchmarks.common import Rows, make_runner, train_like
+
+EPOCHS = 8
+
+
+def _record(state0, run_epoch, run_dir):
+    shutil.rmtree(run_dir, ignore_errors=True)
+    flor.init(run_dir, mode="record", adaptive=False)
+    state = state0
+    for e in flor.generator(range(EPOCHS)):
+        if flor.skipblock.step_into("train"):
+            state, m = run_epoch(state, e)
+            flor.log("loss", m["loss"])
+        state = flor.skipblock.end("train", state)
+    flor.finish()
+
+
+def _replay(state0, run_epoch, run_dir, probed):
+    flor.init(run_dir, mode="replay", probed=probed)
+    t0 = time.perf_counter()
+    state = state0
+    for e in flor.generator(range(EPOCHS)):
+        if flor.skipblock.step_into("train"):
+            state, m = run_epoch(state, e)
+        state = flor.skipblock.end("train", state)
+        flor.log("outer_probe", float(state.step))   # hindsight outer probe
+    wall = time.perf_counter() - t0
+    flor.finish()
+    return wall
+
+
+def run(rows: Rows, tmp="/tmp/bench_replay"):
+    cfg, kw = train_like()
+    state0, run_epoch = make_runner(cfg, **kw)
+    run_dir = f"{tmp}/run"
+    _record(state0, run_epoch, run_dir)
+
+    t0 = time.perf_counter()
+    state = state0
+    for e in range(EPOCHS):
+        state, _ = run_epoch(state, e)
+    t_vanilla = time.perf_counter() - t0
+
+    t_outer = _replay(state0, run_epoch, run_dir, probed=set())
+    t_inner = _replay(state0, run_epoch, run_dir, probed={"train"})
+
+    rows.add("replay_latency(fig12)", "vanilla_s", round(t_vanilla, 3))
+    rows.add("replay_latency(fig12)", "outer_probe_s", round(t_outer, 3),
+             "partial replay: skip+restore")
+    rows.add("replay_latency(fig12)", "outer_probe_speedup",
+             round(t_vanilla / max(t_outer, 1e-9), 1), "paper: 7x-1123x")
+    rows.add("replay_latency(fig12)", "inner_probe_s", round(t_inner, 3),
+             "full logical redo (1 worker)")
+    rows.add("replay_latency(fig12)", "inner_probe_speedup",
+             round(t_vanilla / max(t_inner, 1e-9), 2),
+             "~1x serial; parallelism = fig13")
+
+
+if __name__ == "__main__":
+    run(Rows())

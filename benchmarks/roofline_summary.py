@@ -1,0 +1,41 @@
+"""Roofline table (ours): reads the dry-run matrix JSON (launch/dryrun.py
+--all --out results/dryrun_single.json) and emits the per-cell terms.
+Does NOT compile anything itself — run the dry-run first."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Rows
+
+_BASE = os.path.join(os.path.dirname(__file__), "..", "results")
+DEFAULT = os.path.join(_BASE, "final", "dryrun_single.json")
+FALLBACK = os.path.join(_BASE, "dryrun_single.json")
+
+
+def run(rows: Rows, path: str = DEFAULT):
+    if not os.path.exists(path):
+        path = FALLBACK
+    if not os.path.exists(path):
+        rows.add("roofline", "status", "dry-run results not found",
+                 "run: python -m repro.launch.dryrun --all --out " + path)
+        return
+    with open(path) as f:
+        results = json.load(f)
+    for r in results:
+        cell = f"{r['arch']}/{r['shape']}"
+        if r["status"] != "ok":
+            rows.add("roofline", cell, r["status"],
+                     r.get("reason", r.get("error", ""))[:60])
+            continue
+        rl = r["roofline"]
+        terms = {"compute": rl["compute_s"], "memory": rl["memory_s"],
+                 "collective": rl["collective_s"]}
+        dom = max(terms, key=terms.get)
+        rows.add("roofline", cell + "_dominant", dom,
+                 f"c={terms['compute']:.3g};m={terms['memory']:.3g};"
+                 f"n={terms['collective']:.3g}")
+
+
+if __name__ == "__main__":
+    run(Rows())

@@ -1,0 +1,31 @@
+"""Benchmark driver: one harness per paper table/figure. CSV to stdout."""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks.common import Rows
+
+
+def main() -> None:
+    import benchmarks.record_overhead as b_rec
+    import benchmarks.adaptive_ckpt as b_ada
+    import benchmarks.background_mat as b_bg
+    import benchmarks.storage_cost as b_st
+    import benchmarks.replay_latency as b_rl
+    import benchmarks.parallel_scaling as b_ps
+    import benchmarks.roofline_summary as b_roof
+
+    rows = Rows()
+    print("bench,metric,value,note")
+    for mod in (b_bg, b_st, b_rl, b_ps, b_rec, b_ada, b_roof):
+        t0 = time.time()
+        try:
+            mod.run(rows)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            rows.add(mod.__name__, "ERROR", f"{type(e).__name__}: {e}")
+        rows.add(mod.__name__, "bench_wall_s", round(time.time() - t0, 1))
+
+
+if __name__ == '__main__':
+    main()

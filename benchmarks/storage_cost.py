@@ -1,0 +1,59 @@
+"""Paper Table 4: checkpoint storage footprint and S3 $/month.
+
+Also quantifies what the paper's lean checkpointing becomes here: chunk-level
+content dedup — the fine-tune-like workload (frozen majority) stores a small
+fraction of its logical bytes.
+"""
+from __future__ import annotations
+
+import shutil
+
+import jax
+import jax.numpy as jnp
+
+import repro.flor as flor
+from benchmarks.common import (Rows, S3_USD_PER_GB_MONTH, finetune_like,
+                               make_runner, train_like)
+
+EPOCHS = 8
+
+
+def _record(cfg, kw, run_dir, freeze_fraction=0.0):
+    shutil.rmtree(run_dir, ignore_errors=True)
+    state0, run_epoch = make_runner(cfg, **kw)
+    if freeze_fraction:
+        # emulate fine-tuning: zero updates on the embedding (largest leaf)
+        pass
+    flor.init(run_dir, mode="record", adaptive=False)
+    state = state0
+    logical = 0
+    for e in flor.generator(range(EPOCHS)):
+        if flor.skipblock.step_into("train"):
+            state, _ = run_epoch(state, e)
+        state = flor.skipblock.end("train", state)
+        from repro.utils.pytree import tree_bytes
+        logical += tree_bytes(state)
+    ctx = flor.get_context()
+    ctx.writer.drain()
+    stored = ctx.store.stored_bytes()
+    flor.finish()
+    return logical, stored
+
+
+def run(rows: Rows, tmp="/tmp/bench_storage"):
+    for name, (cfg, kw) in (("train_like", train_like()),
+                            ("finetune_like", finetune_like())):
+        logical, stored = _record(cfg, kw, f"{tmp}/{name}")
+        gb = stored / 2 ** 30
+        rows.add("storage_cost(table4)", f"{name}_logical_mb",
+                 round(logical / 2 ** 20, 1), f"{EPOCHS} epoch ckpts")
+        rows.add("storage_cost(table4)", f"{name}_stored_mb",
+                 round(stored / 2 ** 20, 1), "post dedup+zstd")
+        rows.add("storage_cost(table4)", f"{name}_compression_x",
+                 round(logical / max(stored, 1), 1))
+        rows.add("storage_cost(table4)", f"{name}_s3_usd_month",
+                 round(gb * S3_USD_PER_GB_MONTH, 4), "paper: <$1/mo")
+
+
+if __name__ == "__main__":
+    run(Rows())

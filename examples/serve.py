@@ -1,0 +1,39 @@
+"""Serve a small model with batched requests: prefill + greedy decode.
+
+    PYTHONPATH=src python examples/serve.py --arch granite-3-2b --steps 16
+
+Uses the reduced config on CPU. Exercises the same prefill/decode step
+functions the multi-pod dry-run lowers for the decode_32k / long_500k cells
+(SWA ring caches, SSM states, MLA latent cache — per arch).
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.data import synthetic_batch
+from repro.models import build_model
+from repro.serve.step import greedy_generate
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="granite-3-2b", choices=C.ARCHS + C.EXTRA)
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--prompt-len", type=int, default=32)
+ap.add_argument("--steps", type=int, default=16)
+args = ap.parse_args()
+
+cfg = C.get_smoke(args.arch)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+prompt = synthetic_batch(cfg, args.batch, args.prompt_len, 0)
+
+t0 = time.time()
+out = greedy_generate(cfg, params, prompt, steps=args.steps,
+                      max_len=args.prompt_len + args.steps)
+wall = time.time() - t0
+print(f"arch={args.arch} family={cfg.family}")
+print(f"generated {args.batch}x{args.steps} tokens in {wall:.2f}s "
+      f"({args.batch * args.steps / wall:.1f} tok/s incl. compile)")
+print("sample token ids:", np.asarray(out[0])[:12].tolist())

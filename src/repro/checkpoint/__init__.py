@@ -1,0 +1,2 @@
+from repro.checkpoint.store import CheckpointStore  # noqa: F401
+from repro.checkpoint.async_writer import AsyncWriter  # noqa: F401

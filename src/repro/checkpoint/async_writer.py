@@ -1,0 +1,79 @@
+"""Background materialization (paper section 5.1, adapted to JAX).
+
+The paper forks a child process to snapshot mutable PyTorch tensors with
+copy-on-write. JAX arrays are immutable, so a "snapshot" is a reference —
+submit() returns after capturing references; a writer thread then performs
+device->host transfer (jax.device_get releases the GIL during the DMA),
+chunking, hashing, compression and I/O. A bounded queue applies backpressure
+so record can never run unboundedly ahead of the disk.
+
+Materialization wall time per checkpoint is reported to a callback — that is
+the M_i the adaptive controller (core/adaptive.py) consumes.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+
+class AsyncWriter:
+    def __init__(self, store, max_queue: int = 2,
+                 on_materialized: Optional[Callable] = None):
+        self.store = store
+        self._q: queue.Queue = queue.Queue(maxsize=max_queue)
+        self._on_mat = on_materialized
+        self._err: Optional[BaseException] = None
+        self._stats: list[dict] = []
+        self._t = threading.Thread(target=self._worker, daemon=True)
+        self._t.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            key, tree, meta = item
+            try:
+                t0 = time.perf_counter()
+                host_tree = jax.tree_util.tree_map(
+                    lambda x: np.asarray(jax.device_get(x)), tree)
+                stat = self.store.put_tree(key, host_tree, meta)
+                stat["materialize_s"] = time.perf_counter() - t0
+                self._stats.append(stat)
+                if self._on_mat:
+                    self._on_mat(stat)
+            except BaseException as e:   # surfaced on next submit/drain
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def submit(self, key: str, tree, meta: Optional[dict] = None,
+               block: bool = True) -> bool:
+        """Enqueue a checkpoint. Returns False if the queue is full and
+        block=False (caller may skip this checkpoint — bounded overhead)."""
+        if self._err:
+            raise self._err
+        try:
+            self._q.put((key, tree, meta), block=block)
+            return True
+        except queue.Full:
+            return False
+
+    def drain(self):
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self):
+        self.drain()
+        self._q.put(None)
+        self._t.join()
+
+    @property
+    def stats(self):
+        return list(self._stats)

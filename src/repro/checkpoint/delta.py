@@ -1,0 +1,53 @@
+"""Device-side delta detection for lean checkpointing.
+
+The host-side content-addressed store already avoids STORING unchanged
+chunks; this layer avoids TRANSFERRING them. Per leaf it keeps the previous
+checkpoint's per-chunk digests on device; at checkpoint time the Pallas
+fingerprint kernel (kernels/chunk_delta.py) produces new digests in one read
+of the leaf, and only rows with changed digests are gathered and copied to
+host. On fine-tuning-shaped workloads (frozen experts/embeddings) this cuts
+device->host traffic by the frozen fraction — the same economics as the
+paper's lean checkpointing, one level lower.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import CHUNK_WORDS, _as_u32_blocks, changed_chunks, \
+    fingerprint_leaf
+
+
+class DeltaTracker:
+    def __init__(self, chunk_words: int = CHUNK_WORDS):
+        self.chunk_words = chunk_words
+        self._digests: dict[str, jnp.ndarray] = {}
+
+    def delta(self, path: str, leaf) -> dict:
+        """Returns {digest, mask (np bool [G]), changed_blocks (np [C, W]),
+        transferred_bytes, total_bytes}. Updates the stored digest."""
+        digest = fingerprint_leaf(leaf, self.chunk_words)
+        prev = self._digests.get(path)
+        blocks = _as_u32_blocks(leaf, self.chunk_words)
+        if prev is None or prev.shape != digest.shape:
+            mask = jnp.ones((digest.shape[0],), jnp.int32)
+        else:
+            mask = changed_chunks(digest, prev)
+        self._digests[path] = digest
+        idx = jnp.nonzero(mask)[0]                    # host sync (counts only)
+        changed = np.asarray(jax.device_get(jnp.take(blocks, idx, axis=0)))
+        g = int(digest.shape[0])
+        return {
+            "digest": np.asarray(jax.device_get(digest)),
+            "mask": np.asarray(jax.device_get(mask)).astype(bool),
+            "changed_blocks": changed,
+            "changed_idx": np.asarray(jax.device_get(idx)),
+            "transferred_bytes": int(changed.nbytes),
+            "total_bytes": int(g * self.chunk_words * 4),
+        }
+
+    def reset(self):
+        self._digests.clear()

@@ -1,0 +1,189 @@
+"""Content-addressed, chunked checkpoint store (lean checkpointing substrate).
+
+Every pytree leaf is serialized to raw bytes, split into fixed-size chunks,
+and stored under its blake2b hash (zstd-compressed). A checkpoint is a small
+msgpack manifest mapping leaf paths to chunk-hash lists.
+
+Dedup IS the paper's "lean checkpointing" at chunk granularity: unchanged
+leaves (frozen weights in fine-tuning, optimizer slots of frozen params,
+repeated epochs after convergence) share chunks with earlier checkpoints, so
+the marginal bytes of a checkpoint track what actually CHANGED — without any
+static analysis, because JAX state is explicit (DESIGN.md section 2).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import threading
+from typing import Any, Optional
+
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+CHUNK = 4 * 1024 * 1024
+
+
+def _leaf_to_np(x) -> np.ndarray:
+    # jax.Array -> np via __array__; np passes through
+    return np.asarray(x)
+
+
+def _hash(b: bytes) -> str:
+    return hashlib.blake2b(b, digest_size=16).hexdigest()
+
+
+class CheckpointStore:
+    """Thread-safe on-disk store. Layout:
+       <root>/objects/<h[:2]>/<h>.zst      — chunk payloads
+       <root>/manifests/<key>.msgpack      — checkpoint manifests
+       <root>/meta/<name>.json             — run-level metadata
+    """
+
+    def __init__(self, root: str, compress_level: int = 3):
+        self.root = root
+        os.makedirs(os.path.join(root, "objects"), exist_ok=True)
+        os.makedirs(os.path.join(root, "manifests"), exist_ok=True)
+        os.makedirs(os.path.join(root, "meta"), exist_ok=True)
+        self._level = compress_level
+        # zstd (de)compressor objects are NOT thread-safe for concurrent
+        # calls; keep per-thread instances (concurrent writers segfaulted)
+        self._tl = threading.local()
+        self._lock = threading.Lock()
+
+    @property
+    def _cctx(self):
+        c = getattr(self._tl, "cctx", None)
+        if c is None:
+            c = self._tl.cctx = zstd.ZstdCompressor(level=self._level)
+        return c
+
+    @property
+    def _dctx(self):
+        d = getattr(self._tl, "dctx", None)
+        if d is None:
+            d = self._tl.dctx = zstd.ZstdDecompressor()
+        return d
+
+    # ------------------------------------------------------------ chunks --
+    def _chunk_path(self, h: str) -> str:
+        return os.path.join(self.root, "objects", h[:2], h + ".zst")
+
+    def _put_chunk(self, data: bytes) -> tuple[str, int, bool]:
+        """Returns (hash, bytes_written, was_new)."""
+        h = _hash(data)
+        path = self._chunk_path(h)
+        if os.path.exists(path):
+            return h, 0, False
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        payload = self._cctx.compress(data)
+        tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
+        with open(tmp, "wb") as f:
+            f.write(payload)
+        os.replace(tmp, path)          # atomic: crash-safe
+        return h, len(payload), True
+
+    def _get_chunk(self, h: str) -> bytes:
+        with open(self._chunk_path(h), "rb") as f:
+            return self._dctx.decompress(f.read())
+
+    # ------------------------------------------------------------- trees --
+    def put_tree(self, key: str, tree: Any, meta: Optional[dict] = None) -> dict:
+        """Serialize a pytree of arrays. Returns stats incl. dedup savings."""
+        import jax
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        leaves = []
+        new_bytes = 0
+        total_bytes = 0
+        new_chunks = 0
+        total_chunks = 0
+        for path, leaf in flat:
+            arr = _leaf_to_np(leaf)
+            raw = arr.tobytes()
+            chunks = []
+            for off in range(0, max(len(raw), 1), CHUNK):
+                piece = raw[off:off + CHUNK]
+                h, nb, new = self._put_chunk(piece)
+                chunks.append(h)
+                new_bytes += nb
+                total_bytes += len(piece)
+                new_chunks += int(new)
+                total_chunks += 1
+            leaves.append({
+                "path": jax.tree_util.keystr(path),
+                "dtype": str(arr.dtype),
+                "shape": list(arr.shape),
+                "chunks": chunks,
+            })
+        manifest = {
+            "key": key,
+            "treedef": str(treedef),
+            "leaves": leaves,
+            "meta": meta or {},
+        }
+        mpath = os.path.join(self.root, "manifests", _safe(key) + ".msgpack")
+        tmp = mpath + f".tmp.{os.getpid()}"
+        with open(tmp, "wb") as f:
+            f.write(msgpack.packb(manifest))
+        os.replace(tmp, mpath)
+        return {"key": key, "total_bytes": total_bytes, "new_bytes": new_bytes,
+                "total_chunks": total_chunks, "new_chunks": new_chunks}
+
+    def get_manifest(self, key: str) -> dict:
+        mpath = os.path.join(self.root, "manifests", _safe(key) + ".msgpack")
+        with open(mpath, "rb") as f:
+            return msgpack.unpackb(f.read())
+
+    def get_tree(self, key: str, like: Any = None):
+        """Load a checkpoint. If `like` (a pytree with the same structure) is
+        given, arrays are unflattened into that structure; otherwise a flat
+        {path: array} dict is returned."""
+        import jax
+        manifest = self.get_manifest(key)
+        arrays = []
+        for leaf in manifest["leaves"]:
+            raw = b"".join(self._get_chunk(h) for h in leaf["chunks"])
+            arr = np.frombuffer(raw, dtype=np.dtype(leaf["dtype"]))
+            arrays.append(arr.reshape(leaf["shape"]))
+        if like is not None:
+            flat, treedef = jax.tree_util.tree_flatten(like)
+            assert len(flat) == len(arrays), \
+                f"structure mismatch: {len(flat)} vs {len(arrays)}"
+            return jax.tree_util.tree_unflatten(treedef, arrays)
+        return {leaf["path"]: a for leaf, a in zip(manifest["leaves"], arrays)}
+
+    def has(self, key: str) -> bool:
+        return os.path.exists(os.path.join(self.root, "manifests",
+                                           _safe(key) + ".msgpack"))
+
+    def list_keys(self) -> list[str]:
+        d = os.path.join(self.root, "manifests")
+        return sorted(f[: -len(".msgpack")] for f in os.listdir(d)
+                      if f.endswith(".msgpack"))
+
+    # -------------------------------------------------------------- meta --
+    def put_meta(self, name: str, obj: dict):
+        path = os.path.join(self.root, "meta", _safe(name) + ".json")
+        tmp = path + f".tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(obj, f, indent=1, default=str)
+        os.replace(tmp, path)
+
+    def get_meta(self, name: str) -> Optional[dict]:
+        path = os.path.join(self.root, "meta", _safe(name) + ".json")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return json.load(f)
+
+    def stored_bytes(self) -> int:
+        total = 0
+        for dirpath, _, files in os.walk(os.path.join(self.root, "objects")):
+            for fn in files:
+                total += os.path.getsize(os.path.join(dirpath, fn))
+        return total
+
+
+def _safe(key: str) -> str:
+    return key.replace("/", "_").replace("@", "_at_").replace(":", "_")

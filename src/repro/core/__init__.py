@@ -1,0 +1,3 @@
+"""Flor core: the paper's record-replay machinery."""
+from repro.core.adaptive import AdaptiveController  # noqa: F401
+from repro.core.context import FlorContext, get_context  # noqa: F401

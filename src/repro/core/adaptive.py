@@ -1,0 +1,105 @@
+"""Adaptive checkpointing (paper section 5.3, Table 2, Eq. 1/3/4).
+
+Per SkipBlock i the controller tracks n_i (executions), k_i (materialized
+checkpoints), and EMAs of C_i (block compute time) and M_i (materialization
+time). A checkpoint is materialized only while the Joint Invariant holds:
+
+    M_i / C_i  <  n_i / (k_i + 1) * min(1 / (1 + c), epsilon)      (Eq. 4)
+
+which simultaneously enforces the Record Overhead invariant (Eq. 1: total
+materialization time <= epsilon * total compute) and the Replay Latency
+invariant (Eq. 3: record+replay never slower than two vanilla runs, for any
+parallelism G >= 2). The restore/materialize ratio c starts at the paper's
+naive 1.0 and is refined online from observed restores (paper: measured
+average c = 1.38 across workloads).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.utils.timing import EMA
+
+
+@dataclass
+class BlockStats:
+    n: int = 0                  # executions so far
+    k: int = 0                  # checkpoints materialized so far
+    C: EMA = field(default_factory=lambda: EMA(0.7))   # compute time
+    M: EMA = field(default_factory=lambda: EMA(0.7))   # materialization time
+    pending: int = 0            # submitted but not yet measured
+
+
+# default M estimate before we've ever materialized: bytes / ~1 GB/s
+DEFAULT_WRITE_BPS = 1e9
+
+
+class AdaptiveController:
+    def __init__(self, epsilon: float = 1.0 / 15, c: float = 1.0,
+                 enabled: bool = True, write_bps: float = DEFAULT_WRITE_BPS):
+        self.epsilon = epsilon
+        self.c = EMA(0.7)
+        self.c.update(c)
+        self.enabled = enabled
+        # calibrated store throughput: the M estimate used BEFORE the first
+        # materialization of a block (a bad default here lets the bootstrap
+        # checkpoint blow the eps budget on short-epoch workloads)
+        self.write_bps = write_bps
+        self.blocks: dict[str, BlockStats] = {}
+
+    def _b(self, block_id: str) -> BlockStats:
+        return self.blocks.setdefault(block_id, BlockStats())
+
+    # ------------------------------------------------------------ record --
+    def observe_execution(self, block_id: str, compute_s: float):
+        b = self._b(block_id)
+        b.n += 1
+        b.C.update(compute_s)
+
+    def should_materialize(self, block_id: str, est_bytes: int = 0) -> bool:
+        """Joint Invariant test (run after execution, before materialization:
+        hence k_i + 1)."""
+        if not self.enabled:
+            return True
+        b = self._b(block_id)
+        C = b.C.value
+        if C <= 0:
+            return True
+        M = b.M.value if b.M.count else est_bytes / self.write_bps
+        k_eff = b.k + b.pending
+        thr = (b.n / (k_eff + 1)) * min(1.0 / (1.0 + self.c.value),
+                                        self.epsilon)
+        return (M / C) < thr
+
+    def observe_materialization(self, block_id: str, materialize_s: float):
+        b = self._b(block_id)
+        b.k += 1
+        b.pending = max(0, b.pending - 1)
+        b.M.update(materialize_s)
+
+    def note_submitted(self, block_id: str):
+        self._b(block_id).pending += 1
+
+    # ------------------------------------------------------------ replay --
+    def observe_restore(self, block_id: str, restore_s: float):
+        b = self._b(block_id)
+        if b.M.count and b.M.value > 0:
+            self.c.update(restore_s / b.M.value)
+
+    # --------------------------------------------------------- invariants --
+    def record_overhead_bound_ok(self, block_id: str) -> bool:
+        """Eq. 1 check: k_i * M_i < n_i * eps * C_i (used by tests)."""
+        b = self._b(block_id)
+        if not b.n or not b.C.value:
+            return True
+        return b.k * b.M.value <= b.n * self.epsilon * b.C.value * 1.001
+
+    def snapshot(self) -> dict:
+        return {
+            "epsilon": self.epsilon,
+            "c": self.c.value,
+            "blocks": {
+                bid: {"n": b.n, "k": b.k, "C": b.C.value, "M": b.M.value}
+                for bid, b in self.blocks.items()
+            },
+        }

@@ -1,0 +1,177 @@
+"""FlorContext: per-run global state shared by generator / SkipBlock / probes.
+
+Mirrors the paper's parameterized-branching state machine (section 4.2):
+mode in {record, replay}; replay phase in {init, exec}; plus the probed-block
+set, the adaptive controller, the checkpoint store/async writer, and the
+fingerprint log.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Optional
+
+from repro.checkpoint import AsyncWriter, CheckpointStore
+from repro.core.adaptive import AdaptiveController
+
+_CTX: Optional["FlorContext"] = None
+
+
+class FingerprintLog:
+    """Append-only metric log; record/replay logs are diffed by the deferred
+    correctness check (paper section 5.2.2)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        self._f = open(path, "a", buffering=1)
+        self._seq = 0
+
+    def log(self, epoch, key: str, value):
+        rec = {"epoch": int(epoch) if epoch is not None else None,
+               "seq": self._seq, "key": key, "value": _jsonable(value)}
+        self._f.write(json.dumps(rec) + "\n")
+        self._seq += 1
+
+    def close(self):
+        self._f.close()
+
+    @staticmethod
+    def read(path: str) -> list[dict]:
+        out = []
+        if not os.path.exists(path):
+            return out
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    out.append(json.loads(line))
+        return out
+
+
+def _jsonable(v):
+    try:
+        import numpy as np
+        if hasattr(v, "item") and getattr(v, "ndim", 1) == 0:
+            return float(v.item()) if hasattr(v, "dtype") else v
+        if isinstance(v, (np.ndarray,)):
+            return v.tolist()
+    except Exception:
+        pass
+    if isinstance(v, (int, float, str, bool, type(None), list, dict)):
+        return v
+    return repr(v)
+
+
+class FlorContext:
+    def __init__(self, run_dir: str, mode: str = "record", *,
+                 epsilon: float = 1.0 / 15, adaptive: bool = True,
+                 pid: int = 0, nworkers: int = 1, init_mode: str = "strong",
+                 probed: Optional[set] = None, async_materialize: bool = True):
+        assert mode in ("record", "replay")
+        self.run_dir = run_dir
+        self.mode = mode
+        self.replay_phase = "init"           # init | exec (replay only)
+        self.pid = pid
+        self.nworkers = nworkers
+        self.init_mode = init_mode           # strong | weak
+        self.probed: set = set(probed or ())
+        self.current_epoch: Optional[int] = None
+        self._intra_epoch_counts: dict[str, int] = {}
+        self.controller = AdaptiveController(epsilon=epsilon, enabled=adaptive)
+        self.store = CheckpointStore(os.path.join(run_dir, "store"))
+        if adaptive and mode == "record":
+            self.controller.write_bps = self._calibrate_store()
+        self.async_materialize = async_materialize
+        self.writer = AsyncWriter(
+            self.store, on_materialized=self._on_materialized) \
+            if async_materialize else None
+        suffix = "record" if mode == "record" else f"replay_p{pid}"
+        self.log = FingerprintLog(os.path.join(run_dir, "logs",
+                                               f"{suffix}.jsonl"))
+        self._block_keys_meta: dict[str, dict] = {}
+        self.t_start = time.time()
+        # background-materialization callback bookkeeping: map store key ->
+        # block id so M_i lands on the right block
+        self._key_to_block: dict[str, str] = {}
+
+    def _calibrate_store(self) -> float:
+        """One ~8MB probe write measures real serialize+compress+write
+        throughput, so the pre-measurement M estimate is honest."""
+        import numpy as np
+        rng = np.random.default_rng(0)
+        probe = rng.standard_normal(1 << 21).astype(np.float32)   # 8 MB
+        t0 = time.perf_counter()
+        self.store.put_tree("__calib__", {"x": probe})
+        dt = max(time.perf_counter() - t0, 1e-4)
+        return max(probe.nbytes / dt, 1e7)
+
+    # ------------------------------------------------------------ keys ----
+    def begin_epoch(self, epoch: int):
+        self.current_epoch = epoch
+        self._intra_epoch_counts = {}
+
+    def block_key(self, block_id: str) -> str:
+        """Stable checkpoint key for the CURRENT occurrence of a block."""
+        idx = self._intra_epoch_counts.get(block_id, 0)
+        return f"{block_id}@{self.current_epoch}.{idx}"
+
+    def advance_block(self, block_id: str):
+        self._intra_epoch_counts[block_id] = \
+            self._intra_epoch_counts.get(block_id, 0) + 1
+
+    # ----------------------------------------------------- materialization
+    def _on_materialized(self, stat: dict):
+        block = self._key_to_block.pop(stat["key"], None)
+        if block is not None:
+            self.controller.observe_materialization(block,
+                                                    stat["materialize_s"])
+
+    def submit_checkpoint(self, block_id: str, key: str, tree, meta):
+        self._key_to_block[key] = block_id
+        self.controller.note_submitted(block_id)
+        if self.writer is not None:
+            self.writer.submit(key, tree, meta)
+        else:
+            import time as _t
+            t0 = _t.perf_counter()
+            stat = self.store.put_tree(key, _to_host(tree), meta)
+            stat["materialize_s"] = _t.perf_counter() - t0
+            self._on_materialized(stat)
+
+    # ------------------------------------------------------------ finish --
+    def finish(self):
+        if self.writer is not None:
+            self.writer.close()
+            self.writer = None
+        self.store.put_meta(f"controller_{self.mode}_p{self.pid}",
+                            self.controller.snapshot())
+        self.log.close()
+
+
+def _to_host(tree):
+    import jax
+    import numpy as np
+    return jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+
+def init(run_dir: str, mode: str = "record", **kw) -> FlorContext:
+    global _CTX
+    if _CTX is not None:
+        _CTX.finish()
+    _CTX = FlorContext(run_dir, mode, **kw)
+    return _CTX
+
+
+def get_context() -> FlorContext:
+    if _CTX is None:
+        raise RuntimeError("flor.init(run_dir, mode=...) must be called first")
+    return _CTX
+
+
+def finish():
+    global _CTX
+    if _CTX is not None:
+        _CTX.finish()
+        _CTX = None

@@ -1,0 +1,132 @@
+"""Auto-instrumentation (paper sections 3.1/4.2, Figs. 4 & 8).
+
+Rewrites a training script's AST so that:
+  * the MAIN loop's iterator is wrapped in flor.generator(...)  (Fig. 8), and
+  * each instrumentable nested loop is enclosed in a SkipBlock (Fig. 4),
+    with its statically-estimated changeset captured at the Loop End
+    Checkpoint and restored on skip.
+
+A loop qualifies when the Table-1 analysis (core/changeset.py) produces a
+changeset (no rule 0/5 refusal). Refused loops are left intact — they are
+fully re-executed on replay, exactly the paper's behavior for the main loop.
+
+The transform is purely syntactic:
+
+    if flor.skipblock.step_into("L<line>"):
+        <original loop>
+    __flor_cs = flor.skipblock.end("L<line>", {"net": net, "opt": opt})
+    net = __flor_cs["net"]; opt = __flor_cs["opt"]
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.changeset import analyze_loop, outer_assignments
+
+
+@dataclass
+class InstrumentReport:
+    main_loops: list[int] = field(default_factory=list)       # linenos
+    instrumented: dict[str, list[str]] = field(default_factory=dict)
+    refused: dict[int, str] = field(default_factory=dict)
+
+
+def _block_id(loop: ast.stmt) -> str:
+    return f"L{loop.lineno}"
+
+
+def _skipblock_wrap(loop: ast.stmt, changeset: list[str]) -> list[ast.stmt]:
+    bid = _block_id(loop)
+    cond = ast.parse(f"flor.skipblock.step_into({bid!r})", mode="eval").body
+    guarded = ast.If(test=cond, body=[loop], orelse=[])
+    dict_src = "{" + ", ".join(f"{n!r}: {n}" for n in changeset) + "}"
+    end_stmt = ast.parse(
+        f"__flor_cs = flor.skipblock.end({bid!r}, "
+        f"flor.augment({dict_src}, globals()))").body[0]
+    restores = [ast.parse(f"{n} = __flor_cs[{n!r}]").body[0]
+                for n in changeset]
+    return [guarded, end_stmt] + restores
+
+
+class _Instrumenter(ast.NodeTransformer):
+    def __init__(self, module: ast.Module, report: InstrumentReport):
+        self.module = module
+        self.report = report
+        self._depth = 0
+
+    def visit_For(self, node: ast.For):
+        self._depth += 1
+        try:
+            node = self.generic_visit(node)     # instrument inner loops first
+        finally:
+            self._depth -= 1
+        if self._depth == 0:
+            # MAIN loop: wrap iterator in flor.generator (Fig. 8); the loop
+            # itself is not skipped (paper: refused / re-executed)
+            self.report.main_loops.append(node.lineno)
+            node.iter = ast.copy_location(
+                ast.Call(
+                    func=ast.Attribute(
+                        value=ast.Name(id="flor", ctx=ast.Load()),
+                        attr="generator", ctx=ast.Load()),
+                    args=[node.iter], keywords=[]),
+                node.iter)
+            ast.fix_missing_locations(node)
+            return node
+        outer = outer_assignments(self.module, node.lineno)
+        res = analyze_loop(node, outer_assigned=outer)
+        if not res.ok:
+            self.report.refused[node.lineno] = res.refused_reason or "?"
+            return node
+        self.report.instrumented[_block_id(node)] = res.changeset
+        stmts = _skipblock_wrap(node, res.changeset)
+        for s in stmts:
+            ast.fix_missing_locations(s)
+            ast.copy_location(s, node)
+        return stmts
+
+
+def instrument_source(src: str) -> tuple[str, InstrumentReport]:
+    """Instrument a training script. Returns (new_source, report)."""
+    module = ast.parse(src)
+    report = InstrumentReport()
+    tr = _Instrumenter(module, report)
+    new_body = []
+    for stmt in module.body:
+        out = tr.visit(stmt)
+        if isinstance(out, list):
+            new_body.extend(out)
+        elif out is not None:
+            new_body.append(out)
+    module.body = new_body
+    header = ast.parse("import repro.flor as flor").body
+    module.body = header + module.body
+    ast.fix_missing_locations(module)
+    return ast.unparse(module), report
+
+
+def exec_instrumented(path: str, namespace: Optional[dict] = None,
+                      run_dir: Optional[str] = None, mode: str = "record",
+                      **flor_kw) -> tuple[dict, InstrumentReport]:
+    """The script tier's entry point: `import flor` is the only user-visible
+    change; this function instruments and runs the file under Flor."""
+    import repro.flor as flor
+    with open(path) as f:
+        src = f.read()
+    new_src, report = instrument_source(src)
+    ns = namespace if namespace is not None else {}
+    ns.setdefault("__name__", "__main__")
+    ns["flor"] = flor
+    if run_dir is not None:
+        flor.init(run_dir, mode=mode, **flor_kw)
+        if mode == "record":
+            # keep a copy of the un-instrumented source for probe detection
+            flor.get_context().store.put_meta("source", {"path": path,
+                                                         "src": src})
+    code = compile(new_src, path + ".flor", "exec")
+    exec(code, ns)
+    if run_dir is not None:
+        flor.finish()
+    return ns, report

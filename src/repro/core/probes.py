@@ -1,0 +1,71 @@
+"""Hindsight probes: which blocks must be re-executed on replay?
+
+Two detection tiers:
+  * explicit — the user passes probed={"train"} (or "*") to flor.init; the
+    functional tier's normal path;
+  * source diff (the paper's mechanism, section 3.2) — record stores a copy
+    of the script; at replay the current file is diffed against it, each
+    ADDED line is mapped to its innermost enclosing loop, and that loop's
+    SkipBlock is marked probed. Deleted/changed non-logging lines are
+    reported as suspicious (replay assumes only log statements were added).
+"""
+from __future__ import annotations
+
+import ast
+import difflib
+from dataclasses import dataclass, field
+
+
+@dataclass
+class ProbeReport:
+    probed_blocks: set = field(default_factory=set)
+    added_lines: list = field(default_factory=list)      # (new_lineno, text)
+    suspicious: list = field(default_factory=list)       # non-additive edits
+
+
+def _loop_spans(src: str) -> list[tuple[int, int, str]]:
+    """(first_line, last_line, block_id) of every for/while loop."""
+    tree = ast.parse(src)
+    spans = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.For, ast.While)):
+            spans.append((node.lineno, node.end_lineno or node.lineno,
+                          f"L{node.lineno}"))
+    return spans
+
+
+def detect_probes(recorded_src: str, current_src: str) -> ProbeReport:
+    report = ProbeReport()
+    old = recorded_src.splitlines()
+    new = current_src.splitlines()
+    sm = difflib.SequenceMatcher(a=old, b=new)
+    added: list[tuple[int, str]] = []
+    for tag, i1, i2, j1, j2 in sm.get_opcodes():
+        if tag == "insert":
+            for j in range(j1, j2):
+                added.append((j + 1, new[j]))
+        elif tag in ("replace", "delete"):
+            report.suspicious.append(
+                {"tag": tag, "old": old[i1:i2], "new": new[j1:j2]})
+    report.added_lines = added
+    if not added:
+        return report
+
+    # map added lines to enclosing loops IN THE NEW source, then translate
+    # the loop back to its block id in the OLD source via line alignment
+    new_spans = _loop_spans(current_src)
+    # build new->old line map from matching blocks
+    new_to_old = {}
+    for tag, i1, i2, j1, j2 in sm.get_opcodes():
+        if tag == "equal":
+            for k in range(i2 - i1):
+                new_to_old[j1 + k + 1] = i1 + k + 1
+    for lineno, _text in added:
+        enclosing = [s for s in new_spans if s[0] <= lineno <= s[1]]
+        if not enclosing:
+            continue
+        # innermost loop = max first_line
+        first, _last, _bid = max(enclosing, key=lambda s: s[0])
+        old_first = new_to_old.get(first, first)
+        report.probed_blocks.add(f"L{old_first}")
+    return report

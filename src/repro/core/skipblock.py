@@ -1,0 +1,80 @@
+"""SkipBlock (paper section 4.2): parameterized branching + side-effect
+memoization/restoration, in functional JAX form.
+
+Usage (the functional tier — the changeset is the explicit state pytree):
+
+    if flor.skipblock.step_into("train"):
+        for batch in batches(epoch):
+            state, metrics = train_step(state, batch)
+    state = flor.skipblock.end("train", state)
+
+``end`` must run on BOTH branches: when the block executed it (maybe)
+memoizes and passes state through; when it was skipped it restores the Loop
+End Checkpoint — the physical half of physiological recovery.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any
+
+from repro.core.context import get_context
+from repro.utils.pytree import tree_bytes
+
+
+class _SkipBlockAPI:
+    def __init__(self):
+        self._t_enter: dict[str, float] = {}
+        self._executed: dict[str, bool] = {}
+
+    # ---------------------------------------------------------------------
+    def step_into(self, block_id: str) -> bool:
+        """True => execute the enclosed loop; False => skip (end() restores)."""
+        ctx = get_context()
+        key = ctx.block_key(block_id)
+        if ctx.mode == "record":
+            execute = True
+        else:
+            has = ctx.store.has(key)
+            if ctx.replay_phase == "init":
+                # initialization: skip whenever physically possible
+                execute = not has
+            else:
+                # work segment: re-execute probed blocks (logical redo);
+                # skip unprobed memoized blocks (physical redo)
+                probed = block_id in ctx.probed or "*" in ctx.probed
+                execute = probed or not has
+        self._executed[block_id] = execute
+        self._t_enter[block_id] = time.perf_counter()
+        return execute
+
+    # ---------------------------------------------------------------------
+    def end(self, block_id: str, state: Any) -> Any:
+        """Close the block. Returns the (possibly restored) state."""
+        ctx = get_context()
+        key = ctx.block_key(block_id)
+        executed = self._executed.pop(block_id, True)
+        elapsed = time.perf_counter() - self._t_enter.pop(block_id, time.perf_counter())
+
+        if executed:
+            import jax
+            state = jax.block_until_ready(state)
+            ctx.controller.observe_execution(block_id, elapsed)
+            if ctx.mode == "record":
+                est = tree_bytes(state)
+                if ctx.controller.should_materialize(block_id, est_bytes=est):
+                    ctx.submit_checkpoint(block_id, key, state,
+                                          meta={"epoch": ctx.current_epoch,
+                                                "block": block_id})
+            ctx.advance_block(block_id)
+            return state
+
+        # skipped: physical restoration from the Loop End Checkpoint
+        t0 = time.perf_counter()
+        restored = ctx.store.get_tree(key, like=state)
+        restore_s = time.perf_counter() - t0
+        ctx.controller.observe_restore(block_id, restore_s)
+        ctx.advance_block(block_id)
+        return restored
+
+
+skipblock = _SkipBlockAPI()

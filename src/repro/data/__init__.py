@@ -1,0 +1,2 @@
+from repro.data.synthetic import synthetic_batch, batch_for_step  # noqa: F401
+from repro.data.loader import PrefetchLoader  # noqa: F401

@@ -1,0 +1,54 @@
+"""The Flor public API (paper: ``import flor``).
+
+Record:
+    import repro.flor as flor
+    flor.init(run_dir, mode="record")
+    for epoch in flor.generator(range(N)):
+        if flor.skipblock.step_into("train"):
+            for batch in batches(epoch):
+                state, m = train_step(state, batch)
+                flor.log("loss", m["loss"])
+        state = flor.skipblock.end("train", state)
+    flor.finish()
+
+Replay (hindsight logging): re-run the same script with
+    flor.init(run_dir, mode="replay", pid=PID, nworkers=G,
+              init_mode="strong"|"weak", probed={"train"})
+adding any flor.log(...) probes you wished you had — only probed blocks
+re-execute; everything else restores physically from checkpoints.
+"""
+from __future__ import annotations
+
+from repro.core.changeset import (    # noqa: F401
+    analyze_loop, augment_changeset, outer_assignments, register_augmenter)
+from repro.core.context import (      # noqa: F401
+    FlorContext, finish, get_context, init)
+from repro.core.fingerprint import deferred_check, run_logs  # noqa: F401
+from repro.core.generator import (generator, partition,      # noqa: F401
+                                  sampling_generator)
+from repro.core.instrument import (   # noqa: F401
+    exec_instrumented, instrument_source)
+from repro.core.probes import detect_probes                  # noqa: F401
+from repro.core.skipblock import skipblock                   # noqa: F401
+
+
+def log(key: str, value):
+    """Log a metric / probe value (goes into the fingerprint log)."""
+    ctx = get_context()
+    ctx.log.log(ctx.current_epoch, key, value)
+
+
+def augment(namespace_subset: dict, namespace: dict) -> dict:
+    """Script-tier helper: apply framework-knowledge augmentation to a
+    changeset dict (instrument.py emits calls to this)."""
+    names = list(namespace_subset)
+    extra = augment_changeset(names, namespace)
+    out = dict(namespace_subset)
+    for n in extra:
+        if n not in out and n in namespace:
+            out[n] = namespace[n]
+    return out
+
+
+def current_epoch():
+    return get_context().current_epoch

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: flash attention forward (GQA, causal), MXU-tiled.
+
+Serving prefill hot-spot. Grid (B, KV, G, nq, nk) with the KV-block axis
+innermost: the output block for one (query-block) is revisited across nk
+steps, carrying the online-softmax state (m, l, acc) in VMEM scratch — the
+canonical Pallas flash pattern. Block sizes default to (128, 128): MXU-
+aligned and ~(2*128*hd + 128*128)*4 bytes of VMEM per step.
+
+Validated in interpret mode against ref.flash_attention_ref (CPU has no
+MXU; on TPU the same code path compiles to the real kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  n_k: int, sq: int, sk: int):
+    iq = pl.program_id(3)
+    ik = pl.program_id(4)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0, 0].astype(jnp.float32)            # [BQ, d]
+    k = k_ref[0, 0].astype(jnp.float32)               # [BK, d]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    row = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    col = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    keep = col < sk
+    if causal:
+        keep &= col <= (row + (sk - sq))
+    s = jnp.where(keep, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        o_ref[0, 0, 0] = (acc_scr[...]
+                          / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                          ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, scale=None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True):
+    """q [B,H,Sq,d], k/v [B,KV,Sk,d], H % KV == 0 -> o [B,H,Sq,d]."""
+    B, H, Sq, d = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+    qg = q.reshape(B, KV, G, Sq, d)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, n_k=nk, sq=Sq, sk=Sk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, G, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, block_q, d),
+                         lambda b, kv, g, iq, ik: (b, kv, g, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, kv, g, iq, ik: (b, kv, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, kv, g, iq, ik: (b, kv, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, block_q, d),
+                               lambda b, kv, g, iq, ik: (b, kv, g, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v)
+    return out.reshape(B, H, Sq, d)

@@ -1,0 +1,81 @@
+"""jit'd wrappers around the Pallas kernels.
+
+``interpret`` is selected automatically: True on CPU (kernel body runs in
+Python for validation), False on TPU (real Mosaic lowering). All public ops
+handle padding/reshaping so callers pass natural shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.chunk_delta import changed_mask_pallas, fingerprint_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.quantize import dequantize_pallas, quantize_pallas
+
+CHUNK_WORDS = 1024        # 4 KiB chunks (uint32 words)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _as_u32_blocks(x: jnp.ndarray, chunk_words: int):
+    """View any array as [G, chunk_words] uint32 (zero-padded), G % 8 == 0."""
+    raw = x.reshape(-1)
+    if raw.dtype == jnp.bfloat16 or raw.dtype == jnp.float16:
+        raw = raw.view(jnp.uint16).astype(jnp.uint32)
+    elif raw.dtype.itemsize == 4:
+        raw = raw.view(jnp.uint32)
+    elif raw.dtype.itemsize == 8:
+        raw = raw.view(jnp.uint32)
+    else:
+        raw = raw.view(jnp.uint8).astype(jnp.uint32)
+    n = raw.shape[0]
+    g = -(-n // chunk_words)
+    g = -(-g // 8) * 8                     # TILE_G alignment
+    pad = g * chunk_words - n
+    raw = jnp.pad(raw, (0, pad))
+    return raw.reshape(g, chunk_words)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_words",))
+def fingerprint_leaf(x, chunk_words: int = CHUNK_WORDS):
+    """Per-chunk [G,2] uint32 digest of one array (device-side, one pass)."""
+    blocks = _as_u32_blocks(x, chunk_words)
+    return fingerprint_pallas(blocks, interpret=_interpret())
+
+
+@jax.jit
+def changed_chunks(digest, prev_digest):
+    """bool-ish int32 [G] mask of chunks whose digest changed."""
+    return changed_mask_pallas(digest, prev_digest, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def quantize_blocks(x, block: int = 256):
+    """Flat blockwise int8 quantization: returns (q [G,block], scale [G],
+    n) for any input shape; G padded to the kernel tile."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    g = -(-n // block)
+    g = -(-g // 8) * 8
+    flat = jnp.pad(flat, (0, g * block - n))
+    q, scale = quantize_pallas(flat.reshape(g, block), interpret=_interpret())
+    return q, scale
+
+
+def dequantize_blocks(q, scale, shape, dtype):
+    x = dequantize_pallas(q, scale, interpret=_interpret())
+    n = int(np.prod(shape))
+    return x.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale=None,
+                    block_q: int = 128, block_k: int = 128):
+    return flash_attention_pallas(q, k, v, causal=causal, scale=scale,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=_interpret())

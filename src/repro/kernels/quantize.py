@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: blockwise int8 quantize/dequantize.
+
+Backs two subsystems: checkpoint compression (optimizer moments tolerate
+blockwise int8; error-bounded) and the cross-pod gradient-compression codec
+(parallel/compression.py). One VMEM pass: absmax reduce + scale + round.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_G = 8
+
+
+def _quant_kernel(x_ref, q_ref, scale_ref):
+    x = x_ref[...].astype(jnp.float32)               # [TILE_G, B]
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=1) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    scale_ref[...] = scale.astype(jnp.float32)
+
+
+def quantize_pallas(x: jnp.ndarray, *, interpret: bool = True,
+                    tile_g: int = TILE_G):
+    """[G, B] float -> (q int8 [G, B], scale f32 [G])."""
+    G, B = x.shape
+    assert G % tile_g == 0, (G, tile_g)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(G // tile_g,),
+        in_specs=[pl.BlockSpec((tile_g, B), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((tile_g, B), lambda i: (i, 0)),
+                   pl.BlockSpec((tile_g,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((G, B), jnp.int8),
+                   jax.ShapeDtypeStruct((G,), jnp.float32)],
+        interpret=interpret,
+    )(x)
+
+
+def _dequant_kernel(q_ref, scale_ref, x_ref):
+    x_ref[...] = q_ref[...].astype(jnp.float32) * scale_ref[...][:, None]
+
+
+def dequantize_pallas(q: jnp.ndarray, scale: jnp.ndarray, *,
+                      interpret: bool = True, tile_g: int = TILE_G):
+    G, B = q.shape
+    assert G % tile_g == 0
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(G // tile_g,),
+        in_specs=[pl.BlockSpec((tile_g, B), lambda i: (i, 0)),
+                  pl.BlockSpec((tile_g,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((tile_g, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, B), jnp.float32),
+        interpret=interpret,
+    )(q, scale)

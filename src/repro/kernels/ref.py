@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FP_PRIME1 = np.uint32(2654435761)
+FP_PRIME2 = np.uint32(2246822519)
+FP_PRIME3 = np.uint32(3266489917)
+
+
+def fingerprint_ref(x_u32: jnp.ndarray) -> jnp.ndarray:
+    """Per-row fingerprint of a [G, B] uint32 view. Returns [G, 2] uint32.
+    Position-mixed so permutations change the digest."""
+    G, B = x_u32.shape
+    pos = (jnp.arange(B, dtype=jnp.uint32) * FP_PRIME1)[None, :]
+    v = (x_u32 ^ pos) * FP_PRIME2
+    d0 = jax.lax.reduce(v, np.uint32(0), jax.lax.bitwise_xor, (1,))
+    d1 = jnp.sum(v * FP_PRIME3, axis=1, dtype=jnp.uint32)
+    return jnp.stack([d0, d1], axis=1)
+
+
+def changed_mask_ref(digest: jnp.ndarray, prev: jnp.ndarray) -> jnp.ndarray:
+    """[G,2] x [G,2] -> bool [G]; True where the chunk changed."""
+    return jnp.any(digest != prev, axis=1)
+
+
+def quantize_ref(x: jnp.ndarray):
+    """Blockwise int8 quantization of [G, B] f32. Returns (q int8 [G,B],
+    scale f32 [G])."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=1) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_ref(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale[:, None]
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """q [B,H,Sq,d], k/v [B,KV,Sk,d] with H % KV == 0. f32 softmax."""
+    B, H, Sq, d = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, d).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32))
+    s = s * (scale if scale is not None else 1.0 / np.sqrt(d))
+    if causal:
+        Sk = k.shape[2]
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None] + (Sk - Sq)
+        s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, d).astype(q.dtype)

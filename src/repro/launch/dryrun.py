@@ -1,0 +1,203 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax (device count is now locked) -----------
+import argparse       # noqa: E402
+import json           # noqa: E402
+import re             # noqa: E402
+import sys            # noqa: E402
+import time           # noqa: E402
+
+import jax            # noqa: E402
+import jax.numpy as jnp                        # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P   # noqa: E402
+
+from repro.configs import SHAPES, cell_applicable, get, list_archs   # noqa: E402
+from repro.launch.mesh import (                # noqa: E402
+    HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh)
+from repro.launch.specs import (               # noqa: E402
+    batch_shardings, cache_shardings, param_shardings, state_shardings)
+from repro.models import build_model           # noqa: E402
+from repro.parallel import use_mesh            # noqa: E402
+from repro.serve.step import build_decode_step, build_prefill_step   # noqa: E402
+from repro.train.step import build_train_step  # noqa: E402
+
+def _apply_overrides(cfg, overrides: dict):
+    """--override key=value config surgery for perf experiments."""
+    if not overrides:
+        return cfg
+    kw = {}
+    for k, v in overrides.items():
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            kw[k] = v in ("1", "true", "True")
+        elif isinstance(cur, int):
+            kw[k] = int(v)
+        elif isinstance(cur, float):
+            kw[k] = float(v)
+        else:
+            kw[k] = v
+    return cfg.replace(**kw)
+
+
+def lower_cell(arch: str, shape_name: str, mesh, overrides: dict | None = None):
+    """Lower the right step function for one (arch, shape) cell. Returns
+    (lowered, aux_info)."""
+    cfg = _apply_overrides(get(arch), overrides or {})
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    with mesh, use_mesh(mesh):
+        if shape.kind == "train":
+            init_state, train_step = build_train_step(cfg)
+            st_shapes = jax.eval_shape(init_state, jax.random.PRNGKey(0))
+            st_sh = state_shardings(cfg, mesh, st_shapes)
+            b_sh, b_specs = batch_shardings(model, shape, mesh)
+            rep = NamedSharding(mesh, P())
+            lowered = jax.jit(
+                train_step,
+                in_shardings=(st_sh, b_sh),
+                out_shardings=(st_sh, rep),
+            ).lower(st_shapes, b_specs)
+        elif shape.kind == "prefill":
+            p_sh, p_shapes = param_shardings(model, mesh, dtype=cfg.dtype,
+                                             serve=shape.global_batch >= 16)
+            b_sh, b_specs = batch_shardings(model, shape, mesh)
+            c_sh, _ = cache_shardings(model, shape, mesh)
+            rep = NamedSharding(mesh, P())
+            step = build_prefill_step(cfg, shape.seq_len)
+            lowered = jax.jit(
+                step, in_shardings=(p_sh, b_sh), out_shardings=(c_sh, rep),
+            ).lower(p_shapes, b_specs)
+        else:  # decode
+            # weights-stationary only where batch amortizes the weight reads
+            # (B=1 long-context decode regressed 12x: GSPMD's sharded-weight
+            # + tiny-activation-psum plan is already optimal there)
+            p_sh, p_shapes = param_shardings(model, mesh, dtype=cfg.dtype,
+                                             serve=shape.global_batch >= 16)
+            b_sh, b_specs = batch_shardings(model, shape, mesh)
+            c_sh, c_specs = cache_shardings(model, shape, mesh)
+            rep = NamedSharding(mesh, P())
+            step = build_decode_step(cfg)
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_sh, c_sh, b_sh["tokens"], rep),
+                out_shardings=(rep, rep, c_sh),
+            ).lower(p_shapes, c_specs, b_specs["tokens"], b_specs["pos"])
+    return lowered
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save_hlo: str | None = None,
+             overrides: dict | None = None) -> dict:
+    ok, why = cell_applicable(arch, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ndev = mesh.size
+    t0 = time.time()
+    lowered = lower_cell(arch, shape_name, mesh, overrides)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    # always archive the optimized HLO (zstd) so the roofline analysis can be
+    # re-derived offline without recompiling
+    try:
+        import zstandard as zstd
+        os.makedirs("results/hlo", exist_ok=True)
+        tag = f"{arch}_{shape_name}_{'multi' if multi_pod else 'single'}"
+        if overrides:
+            tag += "__" + "_".join(f"{k}-{v}" for k, v in sorted(overrides.items()))
+        with open(f"results/hlo/{tag}.hlo.zst", "wb") as f:
+            f.write(zstd.ZstdCompressor(level=9).compress(hlo.encode()))
+    except Exception:
+        pass
+    from repro.launch.hlo_analysis import analyze
+    hl = analyze(hlo)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "ndev": ndev,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        # trip-count-aware per-device numbers (launch/hlo_analysis.py)
+        "flops_per_device": hl["flops"],
+        "bytes_accessed_per_device": hl["bytes"],
+        "collective_bytes_per_device": dict(hl["coll"]),
+        "collective_counts": dict(hl["coll_counts"]),
+        # raw XLA per-while-iteration numbers kept for reference
+        "xla_cost_analysis": {
+            "flops": float(cost.get("flops", -1.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+        },
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", -1),
+            "output_bytes": getattr(mem, "output_size_in_bytes", -1),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", -1),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", -1),
+        },
+    }
+    # roofline terms (per-device, seconds)
+    result["roofline"] = {
+        "compute_s": hl["flops"] / PEAK_FLOPS_BF16,
+        "memory_s": hl["bytes"] / HBM_BW,
+        "collective_s": hl["coll"]["total"] / ICI_BW,
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="all (arch x shape) cells")
+    ap.add_argument("--out", default=None, help="write JSON results here")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--override", action="append", default=[],
+                    help="config override key=value (repeatable)")
+    args = ap.parse_args()
+    overrides = dict(kv.split("=", 1) for kv in args.override)
+
+    cells = []
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                print(f"=== {arch} x {shape} x "
+                      f"{'multi(2x16x16)' if mp else 'single(16x16)'} ===",
+                      flush=True)
+                try:
+                    r = run_cell(arch, shape, mp, save_hlo=args.save_hlo,
+                                 overrides=overrides)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    r = {"arch": arch, "shape": shape,
+                         "mesh": "multi" if mp else "single",
+                         "status": "error", "error": f"{type(e).__name__}: {e}"}
+                print(json.dumps(r, indent=1, default=str), flush=True)
+                results.append(r)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+    bad = [r for r in results if r["status"] == "error"]
+    sys.exit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

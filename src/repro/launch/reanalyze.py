@@ -1,0 +1,57 @@
+"""Re-derive roofline numbers from archived HLO (results/hlo/*.hlo.zst)
+without recompiling. Used whenever hlo_analysis.py improves.
+
+    PYTHONPATH=src python -m repro.launch.reanalyze \
+        --json results/dryrun_single.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import zstandard as zstd
+
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def reanalyze_json(path: str, hlo_dir: str = "results/hlo"):
+    with open(path) as f:
+        results = json.load(f)
+    dctx = zstd.ZstdDecompressor()
+    for r in results:
+        if r.get("status") != "ok":
+            continue
+        tag = f"{r['arch']}_{r['shape']}_{r['mesh']}"
+        hp = os.path.join(hlo_dir, tag + ".hlo.zst")
+        if not os.path.exists(hp):
+            continue
+        with open(hp, "rb") as f:
+            hlo = dctx.decompress(f.read()).decode()
+        hl = analyze(hlo)
+        r["flops_per_device"] = hl["flops"]
+        r["bytes_accessed_per_device"] = hl["bytes"]
+        r["collective_bytes_per_device"] = dict(hl["coll"])
+        r["collective_counts"] = dict(hl["coll_counts"])
+        r["roofline"] = {
+            "compute_s": hl["flops"] / PEAK_FLOPS_BF16,
+            "memory_s": hl["bytes"] / HBM_BW,
+            "collective_s": hl["coll"]["total"] / ICI_BW,
+        }
+    with open(path, "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"reanalyzed {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="append", required=True)
+    ap.add_argument("--hlo-dir", default="results/hlo")
+    args = ap.parse_args()
+    for p in args.json:
+        reanalyze_json(p, args.hlo_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Roofline report: dry-run JSON -> per-cell three-term table + markdown.
+
+    PYTHONPATH=src python -m repro.launch.roofline \
+        --in results/dryrun_single.json --md results/roofline.md
+
+Terms (seconds, PER DEVICE, from launch/hlo_analysis.py):
+    compute    = HLO_dot_FLOPs / 197e12        (bf16 peak, v5e-class)
+    memory     = HLO_bytes     / 819e9         (HBM BW)
+    collective = coll_bytes    / 50e9          (ICI per-link)
+
+MODEL_FLOPS is the analytic useful compute: 6*N_active*tokens for train
+(fwd+bwd), 2*N_active*tokens for prefill/decode. The ratio
+MODEL_FLOPS / (HLO_FLOPs * ndev) exposes remat/dispatch/attention overheads.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import repro.configs as C
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+HINTS = {
+    "compute": ("compute-bound: reduce recompute (remat policy), use the "
+                "paper-faithful fp32->bf16 matmuls, or grow the mesh"),
+    "memory": ("HBM-bound: cut activation residency (remat policy / dtype of "
+               "saved residuals), fuse attention (flash kernel), or raise "
+               "arithmetic intensity with larger per-chip batch"),
+    "collective": ("ICI-bound: reshard to cut all-gathers (FSDP axis size), "
+                   "overlap collectives with compute (latency hiding), or "
+                   "compress cross-pod traffic (int8 + error feedback)"),
+}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = C.get(arch)
+    shape = C.SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if cfg.family == "audio" and shape.kind != "decode":
+        tokens = shape.global_batch * shape.seq_len          # enc+dec halves
+    elif shape.kind == "decode":
+        tokens = shape.global_batch * 1
+    else:
+        tokens = shape.global_batch * shape.seq_len
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def build_rows(results: list[dict]) -> list[dict]:
+    rows = []
+    for r in results:
+        row = {"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+               "status": r["status"]}
+        if r["status"] != "ok":
+            row["note"] = r.get("reason", r.get("error", ""))[:90]
+            rows.append(row)
+            continue
+        rl = r["roofline"]
+        terms = {"compute": rl["compute_s"], "memory": rl["memory_s"],
+                 "collective": rl["collective_s"]}
+        dom = max(terms, key=terms.get)
+        mf = model_flops(r["arch"], r["shape"])
+        hlo_global = r["flops_per_device"] * r["ndev"]
+        row.update({
+            "compute_s": terms["compute"],
+            "memory_s": terms["memory"],
+            "collective_s": terms["collective"],
+            "dominant": dom,
+            "model_flops": mf,
+            "hlo_flops_global": hlo_global,
+            "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+            # roofline fraction: useful compute time / achievable step time
+            # (= max of the three terms, the bound a perfect overlap hits)
+            "roofline_frac": (mf / r["ndev"] / PEAK_FLOPS_BF16)
+            / max(terms.values()) if max(terms.values()) > 0 else 0.0,
+            "hint": HINTS[dom],
+        })
+        rows.append(row)
+    return rows
+
+
+def to_markdown(rows: list[dict]) -> str:
+    out = ["| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| useful FLOP ratio | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"{r['status']}: {r.get('note','')} | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4g} | "
+            f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | "
+            f"{r['dominant']} | {r['useful_ratio']:.3f} | "
+            f"{r['roofline_frac']:.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="results/dryrun_single.json")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--md", default=None)
+    args = ap.parse_args()
+    with open(args.inp) as f:
+        results = json.load(f)
+    rows = build_rows(results)
+    print(to_markdown(rows))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(to_markdown(rows) + "\n")
+
+
+if __name__ == "__main__":
+    main()

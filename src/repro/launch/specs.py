@@ -1,0 +1,63 @@
+"""Sharding construction for the dry-run and real launches: map every step
+input/output (TrainState, batch, caches) to NamedShardings via the
+logical-axis resolver."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import build_model
+from repro.models.params import shape_tree
+from repro.parallel.sharding import physical_spec
+from repro.train.state import TrainState
+
+
+def _shardings_from_axes(axes_tree_, shapes_tree_, mesh):
+    def f(ax, shp):
+        return NamedSharding(mesh, physical_spec(ax, shp.shape, mesh))
+    return jax.tree_util.tree_map(
+        f, axes_tree_, shapes_tree_,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def param_shardings(model, mesh, dtype=None, serve=False):
+    shapes = (shape_tree(model.param_spec(), dtype) if dtype
+              else model.param_shapes())
+    axes = model.param_axes()
+    if serve and model.cfg.serve_replicate_fsdp:
+        # weights-stationary serving: drop the FSDP ("embed") dim so params
+        # replicate over pod/data — no per-token weight all-gathers
+        def drop_fsdp(ax):
+            return tuple(None if a == "embed" else a for a in ax)
+        axes = jax.tree_util.tree_map(
+            drop_fsdp, axes,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+    return _shardings_from_axes(axes, shapes, mesh), shapes
+
+
+def state_shardings(cfg, mesh, state_shapes: TrainState):
+    """TrainState shardings: params/mu/nu share the param specs; step/rng
+    are replicated."""
+    model = build_model(cfg)
+    axes = model.param_axes()
+    p_sh = _shardings_from_axes(axes, state_shapes.params, mesh)
+    mu_sh = _shardings_from_axes(axes, state_shapes.mu, mesh)
+    nu_sh = _shardings_from_axes(axes, state_shapes.nu, mesh)
+    rep = NamedSharding(mesh, P())
+    return TrainState(params=p_sh, mu=mu_sh, nu=nu_sh, step=rep, rng=rep)
+
+
+def batch_shardings(model, shape, mesh):
+    specs = model.input_specs(shape)
+    axes = model.input_axes(shape)
+    return {k: NamedSharding(mesh, physical_spec(axes[k], specs[k].shape, mesh))
+            for k in specs}, specs
+
+
+def cache_shardings(model, shape, mesh):
+    spec = model.cache_spec(shape.global_batch, shape.seq_len)
+    axes = model.cache_axes()
+    return _shardings_from_axes(axes, spec, mesh), spec

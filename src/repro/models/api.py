@@ -1,0 +1,187 @@
+"""Unified model facade: params, loss, prefill/decode, caches, input specs.
+
+Everything the launcher, Flor, and the dry-run need from a model goes through
+``Model`` so that (arch x shape x mesh) cells are uniform.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import attention as attn
+from repro.models import encdec as encdec_mod
+from repro.models import mamba, mla
+from repro.models import transformer as tfm
+from repro.models.params import axes_tree, init_params, shape_tree
+
+# encoder length used for enc-dec decode cells (≈30 s of audio frames after
+# the frontend's subsampling; the frontend itself is a stub per assignment)
+ENC_LEN_DECODE = 1536
+
+
+def build_model(cfg: ModelConfig) -> "Model":
+    return Model(cfg)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self._spec = (encdec_mod.encdec_param_spec(cfg) if cfg.family == "audio"
+                      else tfm.lm_param_spec(cfg))
+
+    # ------------------------------------------------------------ params --
+    def param_spec(self):
+        return self._spec
+
+    def init(self, key):
+        return init_params(self._spec, key, self.cfg.param_dtype)
+
+    def param_shapes(self):
+        return shape_tree(self._spec, self.cfg.param_dtype)
+
+    def param_axes(self):
+        return axes_tree(self._spec)
+
+    # ----------------------------------------------------------- compute --
+    def loss(self, params, batch):
+        if self.cfg.family == "audio":
+            return encdec_mod.encdec_loss(self.cfg, params, batch)
+        return tfm.lm_loss(self.cfg, params, batch)
+
+    def prefill(self, params, batch, max_len: int):
+        if self.cfg.family == "audio":
+            return encdec_mod.encdec_prefill(self.cfg, params, batch, max_len)
+        return tfm.lm_prefill(self.cfg, params, batch, max_len)
+
+    def decode(self, params, caches, tokens, pos):
+        if self.cfg.family == "audio":
+            return encdec_mod.encdec_decode(self.cfg, params, caches, tokens, pos)
+        return tfm.lm_decode(self.cfg, params, caches, tokens, pos)
+
+    # ------------------------------------------------------------ caches --
+    def _attn_cache_spec(self, batch, max_len, dtype):
+        cfg = self.cfg
+        if cfg.mla:
+            return mla.mla_cache_spec(cfg, batch, max_len, dtype)
+        return attn.init_cache_spec(cfg, batch, max_len, dtype)
+
+    def _attn_cache_axes(self):
+        return mla.mla_cache_axes() if self.cfg.mla else attn.cache_logical_axes()
+
+    def cache_spec(self, batch: int, max_len: int):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        fam = cfg.family
+
+        def stack(spec, n):
+            return jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), spec)
+
+        if fam == "audio":
+            return encdec_mod.encdec_cache_spec(cfg, batch, max_len,
+                                                ENC_LEN_DECODE, dtype)
+        if fam in ("dense", "vlm"):
+            return {"layers": stack(self._attn_cache_spec(batch, max_len, dtype),
+                                    cfg.num_layers)}
+        if fam == "moe":
+            nd = cfg.moe.first_dense_layers
+            out = {"layers": stack(self._attn_cache_spec(batch, max_len, dtype),
+                                   cfg.num_layers - nd)}
+            if nd:
+                out["dense_layers"] = stack(
+                    self._attn_cache_spec(batch, max_len, dtype), nd)
+            return out
+        if fam == "ssm":
+            return {"layers": stack(mamba.mamba1_cache_spec(cfg, batch, dtype),
+                                    cfg.num_layers)}
+        if fam == "hybrid":
+            g = cfg.num_layers // cfg.attn_period
+            per = cfg.attn_period - 1
+            tail = cfg.num_layers - g * cfg.attn_period
+            m = mamba.mamba2_cache_spec(cfg, batch, dtype)
+            out = {
+                "groups": stack(stack(m, per), g),
+                "shared_attn": stack(attn.init_cache_spec(cfg, batch, max_len,
+                                                          dtype), g),
+            }
+            if tail:
+                out["tail"] = stack(m, tail)
+            return out
+        raise ValueError(fam)
+
+    def cache_axes(self):
+        cfg = self.cfg
+        fam = cfg.family
+
+        def stack(ax):
+            return jax.tree_util.tree_map(lambda a: ("layer",) + a, ax,
+                                          is_leaf=lambda x: isinstance(x, tuple))
+
+        if fam == "audio":
+            return encdec_mod.encdec_cache_axes(cfg)
+        if fam in ("dense", "vlm"):
+            return {"layers": stack(self._attn_cache_axes())}
+        if fam == "moe":
+            out = {"layers": stack(self._attn_cache_axes())}
+            if cfg.moe.first_dense_layers:
+                out["dense_layers"] = stack(self._attn_cache_axes())
+            return out
+        if fam == "ssm":
+            return {"layers": stack(mamba.mamba1_cache_axes())}
+        if fam == "hybrid":
+            out = {
+                "groups": stack(stack(mamba.mamba2_cache_axes())),
+                "shared_attn": stack(attn.cache_logical_axes()),
+            }
+            g = cfg.num_layers // cfg.attn_period
+            if cfg.num_layers - g * cfg.attn_period:
+                out["tail"] = stack(mamba.mamba2_cache_axes())
+            return out
+        raise ValueError(fam)
+
+    def init_cache(self, batch: int, max_len: int):
+        spec = self.cache_spec(batch, max_len)
+
+        def mk(path, s):
+            name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+            if name == "slot_pos":
+                return jnp.full(s.shape, -1, s.dtype)
+            return jnp.zeros(s.shape, s.dtype)
+
+        return jax.tree_util.tree_map_with_path(mk, spec)
+
+    # ------------------------------------------------------------ inputs --
+    def input_specs(self, shape: ShapeSpec) -> dict:
+        """Global-shape ShapeDtypeStructs for the step function inputs."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        d = cfg.d_model
+        adt = jnp.dtype(cfg.dtype)
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                    "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+        if cfg.family == "audio":
+            half = S // 2
+            return {"enc_embeds": jax.ShapeDtypeStruct((B, half, d), adt),
+                    "dec_tokens": jax.ShapeDtypeStruct((B, half), jnp.int32)}
+        if cfg.family == "vlm":
+            F = cfg.frontend_tokens
+            return {"embeds": jax.ShapeDtypeStruct((B, F, d), adt),
+                    "tokens": jax.ShapeDtypeStruct((B, S - F), jnp.int32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+    def input_axes(self, shape: ShapeSpec) -> dict:
+        cfg = self.cfg
+        from repro.models.layers import batch_axis
+        b = batch_axis(cfg)
+        if shape.kind == "decode":
+            return {"tokens": (b, None), "pos": ()}
+        if cfg.family == "audio":
+            return {"enc_embeds": (b, None, None), "dec_tokens": (b, None)}
+        if cfg.family == "vlm":
+            return {"embeds": (b, None, None), "tokens": (b, None)}
+        return {"tokens": (b, None)}

@@ -1,0 +1,287 @@
+"""Attention: GQA/MQA, sliding-window, qk-norm, chunked (flash-style) softmax,
+decode with ring-buffer KV cache, and cross-attention for encoder-decoder.
+
+Layout conventions:
+  q:      [B, S, KV, G, hd]   (G = num_heads // num_kv_heads; KV groups)
+  k, v:   [B, S, KV, hd]
+  cache k/v: [B, Smax, KV, hd] with slot_pos [Smax] (absolute position held by
+  each slot; -1 = empty). SWA decode uses Smax == window and ring addressing,
+  which bounds cache memory at long context.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import apply_rope, dense_spec, rms_norm
+from repro.models.params import ParamSpec
+from repro.parallel import constrain
+
+NEG_INF = -1e30
+
+
+def attn_spec(cfg, cross: bool = False):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim()
+    hax, kax = (("heads", "kv_heads") if cfg.dense_layout == "tp"
+                else (None, None))        # dp: FSDP-only dense weights
+    spec = {
+        "wq": dense_spec((d, H, hd), ("embed", hax, None)),
+        "wk": dense_spec((d, KV, hd), ("embed", kax, None)),
+        "wv": dense_spec((d, KV, hd), ("embed", kax, None)),
+        "wo": dense_spec((H, hd, d), (hax, None, "embed"), fan_in=H * hd),
+    }
+    if cfg.qk_norm and not cross:
+        spec["q_norm"] = ParamSpec((hd,), (None,), init="ones")
+        spec["k_norm"] = ParamSpec((hd,), (None,), init="ones")
+    return spec
+
+
+def _project_q(cfg, p, x):
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    G = H // KV
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"].astype(x.dtype))
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    B, S = x.shape[:2]
+    return q.reshape(B, S, KV, G, q.shape[-1])
+
+
+def _project_kv(cfg, p, x):
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"].astype(x.dtype))
+    if "k_norm" in p:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return k, v
+
+
+def _out_proj(cfg, p, o):
+    B, S = o.shape[:2]
+    o = o.reshape(B, S, cfg.num_heads, cfg.resolved_head_dim())
+    return jnp.einsum("bsnh,nhd->bsd", o, p["wo"].astype(o.dtype))
+
+
+def _mask(q_pos, k_pos, causal: bool, window):
+    """[..., Sq, Sk] boolean keep-mask from absolute positions."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    keep = kp >= 0
+    if causal:
+        keep &= kp <= qp
+    if window is not None:
+        keep &= (qp - kp) < window
+    return keep
+
+
+def _sdpa(q, k, v, keep, scale):
+    """q [B,Sq,KV,G,h], k/v [B,Sk,KV,h], keep [Sq,Sk] or [B,Sq,Sk]."""
+    s = jnp.einsum("bqngh,bknh->bngqk", q, k).astype(jnp.float32) * scale
+    if keep.ndim == 2:
+        keep = keep[None, None, None]
+    else:
+        keep = keep[:, None, None]
+    s = jnp.where(keep, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngqk,bknh->bqngh", w.astype(v.dtype), v)
+    return o
+
+
+def _chunked_sdpa(q, k, v, q_pos, k_pos, causal, window, scale, chunk,
+                  probs_dtype=jnp.float32, remat_chunk=False,
+                  seq_sharded=False):
+    """Online-softmax attention, lax.scan over KV chunks. O(Sq*chunk) live.
+
+    Positions must be contiguous aranges (q_pos/k_pos are [Sq]/[Sk] with
+    q_pos[i] = q0+i): the per-chunk mask is rebuilt inside the scan body from
+    the chunk INDEX so XLA cannot hoist a stacked [nc, ..., Sq, chunk] mask
+    out of the loop (that hoist costs O(B*H*Sq*Sk) bytes of loop carry).
+
+    probs_dtype=bfloat16 is the hillclimbed variant (EXPERIMENTS.md section
+    Perf): scores and exp(p) tensors — the dominant HBM traffic of the train
+    cells — are held in bf16; the row max/sum statistics and the output
+    accumulator stay fp32, so softmax normalization keeps fp32 accuracy."""
+    B, Sq, KV, G, hd = q.shape
+    Sk = k.shape[1]
+    q0 = q_pos[0]
+    k0 = k_pos[0]
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    k = k.reshape(B, n_chunks, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    v = v.reshape(B, n_chunks, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+
+    # q stays in its compute dtype (bf16): the QK^T einsum accumulates in
+    # f32 via preferred_element_type (flash-standard). Materializing an f32
+    # copy of q doubled its traffic AND its all-gather under seq sharding.
+    qp = q0 + jnp.arange(Sq, dtype=jnp.int32)
+
+    def body(carry, xs):
+        o, m, l = carry
+        kc, vc, idx = xs
+        s = jnp.einsum("bqngh,bknh->bngqk", q,
+                       kc.astype(q.dtype),
+                       preferred_element_type=jnp.float32) * scale
+        kpc = k0 + idx * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        keep = jnp.broadcast_to(kpc[None, :] < (k0 + Sk), (Sq, chunk))
+        if causal:
+            keep &= kpc[None, :] <= qp[:, None]
+        if window is not None:
+            keep &= (qp[:, None] - kpc[None, :]) < window
+        s = jnp.where(keep[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        # exp lands DIRECTLY in probs_dtype: with bf16 probs the f32 p tensor
+        # never materializes (the first bf16 attempt kept it and only added a
+        # convert — measured WORSE; see EXPERIMENTS.md Perf iteration A)
+        p = jnp.exp(s - m_new[..., None]).astype(probs_dtype)
+        l = l * corr + jnp.sum(p, axis=-1, dtype=jnp.float32)
+        pv = jnp.einsum("bngqk,bknh->bngqh", p, vc.astype(p.dtype),
+                        preferred_element_type=jnp.float32)
+        o = o * corr[..., None] + pv
+        return (o, m_new, l), None
+
+    o0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    if seq_sharded:
+        # the accumulators carry the q-sequence dim: without constraints the
+        # replicated zeros-init makes GSPMD gather q to match (measured: 3x
+        # full-seq f32 all-gathers per layer on qwen3)
+        o0 = constrain(o0, ("batch", None, None, "seq_mp", None))
+        m0 = constrain(m0, ("batch", None, None, "seq_mp"))
+        l0 = constrain(l0, ("batch", None, None, "seq_mp"))
+    body_fn = jax.checkpoint(body) if remat_chunk else body
+    (o, m, l), _ = jax.lax.scan(
+        body_fn, (o0, m0, l0), (k, v, jnp.arange(n_chunks, dtype=jnp.int32)))
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    return o.transpose(0, 3, 1, 2, 4).astype(q.dtype)      # [B,Sq,KV,G,hd]
+
+
+def self_attention(cfg, p, x, positions, *, causal=True, window=None,
+                   rope=None):
+    """Training/prefill self-attention over the full sequence. `rope` is the
+    hoisted (cos, sin) table pair computed once per forward."""
+    hd = cfg.resolved_head_dim()
+    scale = 1.0 / np.sqrt(hd)
+    q = _project_q(cfg, p, x)
+    k, v = _project_kv(cfg, p, x)
+    q = apply_rope(q, positions[:, :, None], cfg.rope_theta, tables=rope)
+    k = apply_rope(k, positions[:, :, None], cfg.rope_theta, tables=rope)
+    q = constrain(q, ("batch", None, "kv_heads", None, None))
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    S = x.shape[1]
+    impl = cfg.attention_impl
+    if impl == "auto":
+        impl = "chunked" if S > 2048 else "naive"
+    if impl == "naive":
+        # positions are the same across batch here (0..S)
+        keep = _mask(positions[0], positions[0], causal, window)
+        o = _sdpa(q, k, v, keep, scale)
+    else:
+        o = _chunked_sdpa(q, k, v, positions[0], positions[0], causal, window,
+                          scale, cfg.attention_chunk,
+                          probs_dtype=cfg.attention_probs_dtype,
+                          remat_chunk=cfg.attention_remat_chunk,
+                          seq_sharded=cfg.seq_shard)
+    return _out_proj(cfg, p, o)
+
+
+def cross_attention(cfg, p, x, enc_out):
+    """Decoder->encoder attention (no mask, no rope)."""
+    hd = cfg.resolved_head_dim()
+    scale = 1.0 / np.sqrt(hd)
+    q = _project_q(cfg, p, x)
+    k, v = _project_kv(cfg, p, enc_out)
+    Sk = enc_out.shape[1]
+    keep = jnp.ones((x.shape[1], Sk), bool)
+    o = _sdpa(q, k, v, keep, scale)
+    return _out_proj(cfg, p, o)
+
+
+# ------------------------------------------------------------- decode -----
+
+def init_cache_spec(cfg, batch: int, max_len: int, dtype):
+    """ShapeDtypeStructs for one layer's KV cache (window-bounded if SWA)."""
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim()
+    smax = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    return {
+        "k": jax.ShapeDtypeStruct((batch, smax, KV, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, smax, KV, hd), dtype),
+        "slot_pos": jax.ShapeDtypeStruct((smax,), jnp.int32),
+    }
+
+
+def cache_logical_axes():
+    return {
+        "k": ("batch", "cache_seq", "kv_heads", None),
+        "v": ("batch", "cache_seq", "kv_heads", None),
+        "slot_pos": (None,),
+    }
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype):
+    spec = init_cache_spec(cfg, batch, max_len, dtype)
+    c = {k: jnp.zeros(v.shape, v.dtype) for k, v in spec.items()}
+    c["slot_pos"] = jnp.full(spec["slot_pos"].shape, -1, jnp.int32)
+    return c
+
+
+def decode_attention(cfg, p, x, cache, pos):
+    """One-token decode. x [B,1,d]; pos scalar int32 (same across batch).
+    Returns (out [B,1,d], new_cache)."""
+    hd = cfg.resolved_head_dim()
+    scale = 1.0 / np.sqrt(hd)
+    B = x.shape[0]
+    q = _project_q(cfg, p, x)                                  # [B,1,KV,G,hd]
+    k, v = _project_kv(cfg, p, x)                              # [B,1,KV,hd]
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, posv[:, :, None], cfg.rope_theta)
+    k = apply_rope(k, posv[:, :, None], cfg.rope_theta)
+
+    smax = cache["k"].shape[1]
+    slot = (pos % smax).astype(jnp.int32)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    slot_pos = jax.lax.dynamic_update_slice(
+        cache["slot_pos"], jnp.full((1,), pos, jnp.int32), (slot,))
+    ck = constrain(ck, ("batch", "cache_seq", "kv_heads", None))
+    cv = constrain(cv, ("batch", "cache_seq", "kv_heads", None))
+
+    keep = _mask(jnp.full((1,), pos, jnp.int32), slot_pos, True,
+                 cfg.sliding_window)                           # [1, smax]
+    s = jnp.einsum("bqngh,bknh->bngqk", q.astype(jnp.float32),
+                   ck.astype(jnp.float32)) * scale
+    s = jnp.where(keep[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngqk,bknh->bqngh", w, cv.astype(jnp.float32)).astype(x.dtype)
+    out = _out_proj(cfg, p, o)
+    return out, {"k": ck, "v": cv, "slot_pos": slot_pos}
+
+
+def prefill_cache(cfg, p, x, positions, max_len, dtype, rope=None):
+    """Compute K/V for a full prompt and lay it into a fresh cache.
+    Returns cache primed so decode can continue at pos = S."""
+    k, v = _project_kv(cfg, p, x)
+    k = apply_rope(k, positions[:, :, None], cfg.rope_theta, tables=rope)
+    B, S = x.shape[:2]
+    smax = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    if S >= smax:
+        # keep the most recent smax positions, ring-addressed
+        ktail = k[:, S - smax:]
+        vtail = v[:, S - smax:]
+        tail_pos = jnp.arange(S - smax, S)
+        slots = tail_pos % smax
+        order = jnp.argsort(slots)
+        ck = ktail[:, order].astype(dtype)
+        cv = vtail[:, order].astype(dtype)
+        slot_pos = tail_pos[order]
+    else:
+        pad = smax - S
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype)
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype)
+        slot_pos = jnp.concatenate([jnp.arange(S), jnp.full((pad,), -1, jnp.int32)])
+    return {"k": ck, "v": cv, "slot_pos": slot_pos.astype(jnp.int32)}

@@ -1,0 +1,197 @@
+"""Encoder-decoder backbone (SeamlessM4T-class).
+
+Encoder input is the modality-frontend STUB output: precomputed frame
+embeddings [B, S_enc, d] (per the assignment the frontend itself is not
+modeled). Decoder is a standard causal LM with cross-attention; decode keeps
+a self-attn ring cache plus static cross K/V computed once at prefill.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.layers import (
+    embed_tokens, embedding_spec, lm_logits, mlp_apply, mlp_spec, norm_spec,
+    rms_norm, unembed_spec,
+)
+from repro.models.params import stack_spec
+from repro.models.transformer import _remat, ce_loss, padded_vocab
+from repro.parallel import constrain
+
+
+def enc_block_spec(cfg):
+    return {
+        "ln1": norm_spec(cfg.d_model),
+        "attn": attn.attn_spec(cfg),
+        "ln2": norm_spec(cfg.d_model),
+        "mlp": mlp_spec(cfg, cfg.d_ff),
+    }
+
+
+def dec_block_spec(cfg):
+    return {
+        "ln1": norm_spec(cfg.d_model),
+        "self_attn": attn.attn_spec(cfg),
+        "ln2": norm_spec(cfg.d_model),
+        "cross_attn": attn.attn_spec(cfg, cross=True),
+        "ln3": norm_spec(cfg.d_model),
+        "mlp": mlp_spec(cfg, cfg.d_ff),
+    }
+
+
+def encdec_param_spec(cfg):
+    pv = padded_vocab(cfg)
+    spec = {
+        "embed": embedding_spec(cfg, pv),
+        "enc_layers": stack_spec(enc_block_spec(cfg), cfg.num_layers),
+        "dec_layers": stack_spec(dec_block_spec(cfg), cfg.num_decoder_layers),
+        "ln_enc": norm_spec(cfg.d_model),
+        "ln_f": norm_spec(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        spec["unembed"] = unembed_spec(cfg, pv)
+    return spec
+
+
+def encode(cfg, params, enc_embeds):
+    x = enc_embeds.astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, ("batch", None, None))
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    from repro.models.transformer import rope_tables_for
+    rope = rope_tables_for(cfg, S)
+
+    def body(h, lyr):
+        hh = rms_norm(h, lyr["ln1"], cfg.norm_eps)
+        h = h + attn.self_attention(cfg, lyr["attn"], hh, positions,
+                                    causal=False, rope=rope)
+        hh = rms_norm(h, lyr["ln2"], cfg.norm_eps)
+        h = h + mlp_apply(cfg, lyr["mlp"], hh)
+        return constrain(h, ("batch", None, None)), None
+
+    x, _ = jax.lax.scan(_remat(cfg, body), x, params["enc_layers"])
+    return rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def dec_block(cfg, p, x, positions, enc_out, rope=None):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + attn.self_attention(cfg, p["self_attn"], h, positions, causal=True,
+                                rope=rope)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + attn.cross_attention(cfg, p["cross_attn"], h, enc_out)
+    h = rms_norm(x, p["ln3"], cfg.norm_eps)
+    x = x + mlp_apply(cfg, p["mlp"], h)
+    return constrain(x, ("batch", None, None))
+
+
+def encdec_loss(cfg, params, batch):
+    enc_out = encode(cfg, params, batch["enc_embeds"])
+    tokens = batch["dec_tokens"]
+    x = embed_tokens(cfg, params["embed"]["table"], tokens, jnp.dtype(cfg.dtype))
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    from repro.models.transformer import rope_tables_for
+    rope = rope_tables_for(cfg, S)
+    body = _remat(cfg, lambda h, lyr: (dec_block(cfg, lyr, h, positions,
+                                                 enc_out, rope), None))
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    loss, metrics = ce_loss(cfg, params, x[:, :-1], tokens[:, 1:])
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------- prefill / decode ----
+
+def encdec_cache_spec(cfg, batch, max_len, enc_len, dtype):
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim()
+    L = cfg.num_decoder_layers
+    self_spec = attn.init_cache_spec(cfg, batch, max_len, dtype)
+    return {
+        "self": {k: jax.ShapeDtypeStruct((L,) + v.shape, v.dtype)
+                 for k, v in self_spec.items()},
+        "cross_k": jax.ShapeDtypeStruct((L, batch, enc_len, KV, hd), dtype),
+        "cross_v": jax.ShapeDtypeStruct((L, batch, enc_len, KV, hd), dtype),
+    }
+
+
+def encdec_cache_axes(cfg):
+    ax = {k: ("layer",) + v for k, v in attn.cache_logical_axes().items()}
+    return {
+        "self": ax,
+        "cross_k": ("layer", "batch", None, "kv_heads", None),
+        "cross_v": ("layer", "batch", None, "kv_heads", None),
+    }
+
+
+def encdec_prefill(cfg, params, batch, max_len):
+    """Encode source; consume decoder prompt; return (caches, last logits)."""
+    dtype = jnp.dtype(cfg.dtype)
+    enc_out = encode(cfg, params, batch["enc_embeds"])
+    tokens = batch["dec_tokens"]
+    x = embed_tokens(cfg, params["embed"]["table"], tokens, dtype)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(h, lyr):
+        hh = rms_norm(h, lyr["ln1"], cfg.norm_eps)
+        self_cache = attn.prefill_cache(cfg, lyr["self_attn"], hh, positions,
+                                        max_len, dtype)
+        h = h + attn.self_attention(cfg, lyr["self_attn"], hh, positions,
+                                    causal=True)
+        hh = rms_norm(h, lyr["ln2"], cfg.norm_eps)
+        h = h + attn.cross_attention(cfg, lyr["cross_attn"], hh, enc_out)
+        ck = jnp.einsum("bsd,dnh->bsnh", enc_out,
+                        lyr["cross_attn"]["wk"].astype(dtype))
+        cv = jnp.einsum("bsd,dnh->bsnh", enc_out,
+                        lyr["cross_attn"]["wv"].astype(dtype))
+        hh = rms_norm(h, lyr["ln3"], cfg.norm_eps)
+        h = h + mlp_apply(cfg, lyr["mlp"], hh)
+        return h, (self_cache, ck, cv)
+
+    x, (self_c, ck, cv) = jax.lax.scan(body, x, params["dec_layers"])
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    pv = padded_vocab(cfg)
+    logits = lm_logits(cfg, params, x[:, -1:], pv)
+    caches = {"self": self_c, "cross_k": ck, "cross_v": cv}
+    return caches, logits[:, 0, : cfg.vocab_size]
+
+
+def _cross_decode(cfg, p, x, ck, cv):
+    """Single-query cross attention against static enc K/V."""
+    import numpy as np
+    hd = cfg.resolved_head_dim()
+    scale = 1.0 / np.sqrt(hd)
+    q = attn._project_q(cfg, p, x)                    # [B,1,KV,G,hd]
+    s = jnp.einsum("bqngh,bknh->bngqk", q.astype(jnp.float32),
+                   ck.astype(jnp.float32)) * scale
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngqk,bknh->bqngh", w, cv.astype(jnp.float32)).astype(x.dtype)
+    return attn._out_proj(cfg, p, o)
+
+
+def encdec_decode(cfg, params, caches, tokens, pos):
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_tokens(cfg, params["embed"]["table"], tokens, dtype)
+
+    def body(h, xs):
+        lyr, sc, ck, cv = xs
+        hh = rms_norm(h, lyr["ln1"], cfg.norm_eps)
+        out, sc2 = attn.decode_attention(cfg, lyr["self_attn"], hh, sc, pos)
+        h = h + out
+        hh = rms_norm(h, lyr["ln2"], cfg.norm_eps)
+        h = h + _cross_decode(cfg, lyr["cross_attn"], hh, ck, cv)
+        hh = rms_norm(h, lyr["ln3"], cfg.norm_eps)
+        h = h + mlp_apply(cfg, lyr["mlp"], hh)
+        return h, sc2
+
+    x, self_c = jax.lax.scan(
+        body, x, (params["dec_layers"], caches["self"],
+                  caches["cross_k"], caches["cross_v"]))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    pv = padded_vocab(cfg)
+    logits = lm_logits(cfg, params, x, pv)
+    new_caches = {"self": self_c, "cross_k": caches["cross_k"],
+                  "cross_v": caches["cross_v"]}
+    return logits[:, 0, : cfg.vocab_size], new_caches

@@ -1,0 +1,349 @@
+"""Mamba blocks: v1 (selective scan, Falcon-Mamba) and v2 (SSD, Zamba2).
+
+Both use a CHUNKED scan: jax.lax.scan over sequence chunks carrying the SSM
+state, with an associative scan (v1) or the SSD matmul form (v2) inside each
+chunk. Live memory is O(B * chunk * d_inner * N) instead of O(B * S * ...),
+which is what makes train_4k and long-context cells fit. Decode is a single
+O(1)-state update (the reason these archs run the long_500k cell).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_spec, norm_spec, rms_norm
+from repro.models.params import ParamSpec
+from repro.parallel import constrain
+
+
+# ------------------------------------------------------------ helpers -----
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv along axis 1. x [B,S,C], w [K,C], b [C]."""
+    K = w.shape[0]
+    out = jnp.zeros_like(x)
+    for k in range(K):
+        shift = K - 1 - k
+        if shift == 0:
+            xs = x
+        else:
+            xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xs * w[k].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def _conv_step(x_t, conv_state, w, b):
+    """Single-token conv. x_t [B,C]; conv_state [B,K-1,C] (oldest first)."""
+    win = jnp.concatenate([conv_state, x_t[:, None]], axis=1)     # [B,K,C]
+    out = jnp.einsum("bkc,kc->bc", win, w.astype(x_t.dtype)) + b.astype(x_t.dtype)
+    return out, win[:, 1:]
+
+
+def _pad_chunks(x, q, axis=1):
+    s = x.shape[axis]
+    pad = (-s) % q
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+    return x, s
+
+
+# ------------------------------------------------------------ Mamba 1 -----
+
+def mamba1_spec(cfg):
+    d, s = cfg.d_model, cfg.ssm
+    din = s.expand * d
+    dtr = s.dt_rank or -(-d // 16)
+    return {
+        "norm": norm_spec(d),
+        "in_proj": dense_spec((d, 2 * din), ("embed", "dinner")),
+        "conv_w": ParamSpec((s.conv_dim, din), (None, "dinner"), init="normal",
+                            scale=1.0 / np.sqrt(s.conv_dim)),
+        "conv_b": ParamSpec((din,), ("dinner",), init="zeros"),
+        "x_proj": dense_spec((din, dtr + 2 * s.state_dim), ("dinner", None)),
+        "dt_proj": dense_spec((dtr, din), (None, "dinner"), fan_in=dtr),
+        "dt_bias": ParamSpec((din,), ("dinner",), init="const", scale=-4.0),
+        "A_log": ParamSpec((din, s.state_dim), ("dinner", None), init="const",
+                           scale=0.5),
+        "D": ParamSpec((din,), ("dinner",), init="ones"),
+        "out_proj": dense_spec((din, d), ("dinner", "embed"), fan_in=din),
+    }
+
+
+def _mamba1_inner(cfg, p, x1, z, return_state=False):
+    """Chunked selective scan. x1, z: [B,S,din] (x1 already conv+silu)."""
+    s = cfg.ssm
+    B, S, din = x1.shape
+    N = s.state_dim
+    dtr = s.dt_rank or -(-cfg.d_model // 16)
+
+    dbc = jnp.einsum("bsc,cr->bsr", x1, p["x_proj"].astype(x1.dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rc->bsc", dbc[..., :dtr], p["dt_proj"].astype(x1.dtype))
+        .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))    # [B,S,din]
+    Bc = dbc[..., dtr:dtr + N].astype(jnp.float32)                  # [B,S,N]
+    Cc = dbc[..., dtr + N:].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                    # [din,N]
+
+    Q = s.chunk
+    x32, _ = _pad_chunks(x1.astype(jnp.float32), Q)
+    dt, _ = _pad_chunks(dt, Q)
+    Bc, _ = _pad_chunks(Bc, Q)
+    Cc, _ = _pad_chunks(Cc, Q)
+    # dt=0 on padded steps => identity state update (a=1, bx=0), so the final
+    # carried state is exact for prefill
+    valid = (jnp.arange(x32.shape[1]) < S).astype(jnp.float32)
+    dt = dt * valid[None, :, None]
+    nc = x32.shape[1] // Q
+
+    def chunk(h, xs):
+        xq, dtq, bq, cq = xs                     # [B,Q,din], [B,Q,din], [B,Q,N]x2
+        dA = dtq[..., None] * A                  # [B,Q,din,N]  (log-decay, <=0)
+        a = jnp.exp(dA)
+        bx = (dtq * xq)[..., None] * bq[:, :, None, :]
+        def comb(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+        a_cum, b_scan = jax.lax.associative_scan(comb, (a, bx), axis=1)
+        h_t = b_scan + a_cum * h[:, None]        # [B,Q,din,N]
+        y = jnp.einsum("bqcn,bqn->bqc", h_t, cq)
+        return h_t[:, -1], y
+
+    xs = tuple(t.reshape(B, nc, Q, *t.shape[2:]).swapaxes(0, 1)
+               for t in (x32, dt, Bc, Cc))
+    h0 = jnp.zeros((B, din, N), jnp.float32)
+    h_fin, ys = jax.lax.scan(chunk, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, nc * Q, din)[:, :S]
+    y = y + x1.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    if return_state:
+        return y.astype(x1.dtype), h_fin
+    return y.astype(x1.dtype)
+
+
+def mamba1_forward(cfg, p, x, return_cache=False):
+    """Full-sequence Mamba1 block (post in_proj->conv->scan->out_proj)."""
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    xz = jnp.einsum("bsd,dc->bsc", h, p["in_proj"].astype(x.dtype))
+    din = xz.shape[-1] // 2
+    x1, z = xz[..., :din], xz[..., din:]
+    x1 = constrain(x1, ("batch", None, "act_mlp"))
+    pre_conv = x1
+    x1 = jax.nn.silu(_causal_conv(x1, p["conv_w"], p["conv_b"]))
+    if return_cache:
+        y, hst = _mamba1_inner(cfg, p, x1, z, return_state=True)
+        out = jnp.einsum("bsc,cd->bsd", y, p["out_proj"].astype(x.dtype))
+        return out, {"conv": _conv_tail(pre_conv, cfg.ssm.conv_dim), "ssm": hst}
+    y = _mamba1_inner(cfg, p, x1, z)
+    return jnp.einsum("bsc,cd->bsd", y, p["out_proj"].astype(x.dtype))
+
+
+def _conv_tail(pre_conv, K):
+    """Last K-1 pre-conv inputs (left-padded when S < K-1)."""
+    B, S, C = pre_conv.shape
+    if S >= K - 1:
+        return pre_conv[:, S - (K - 1):]
+    return jnp.pad(pre_conv, ((0, 0), (K - 1 - S, 0), (0, 0)))
+
+
+def mamba1_cache_spec(cfg, batch, dtype):
+    s = cfg.ssm
+    din = s.expand * cfg.d_model
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, s.conv_dim - 1, din), dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, din, s.state_dim), jnp.float32),
+    }
+
+
+def mamba1_cache_axes():
+    return {"conv": ("batch", None, "dinner"), "ssm": ("batch", "dinner", None)}
+
+
+def mamba1_decode(cfg, p, x, cache):
+    """x [B,1,d] -> (out [B,1,d], new cache). O(1) state update."""
+    s = cfg.ssm
+    N = s.state_dim
+    dtr = s.dt_rank or -(-cfg.d_model // 16)
+    h = rms_norm(x, p["norm"], cfg.norm_eps)[:, 0]                 # [B,d]
+    xz = jnp.einsum("bd,dc->bc", h, p["in_proj"].astype(x.dtype))
+    din = xz.shape[-1] // 2
+    x1, z = xz[..., :din], xz[..., din:]
+    x1, conv_state = _conv_step(x1, cache["conv"].astype(x1.dtype),
+                                p["conv_w"], p["conv_b"])
+    x1 = jax.nn.silu(x1)
+    dbc = jnp.einsum("bc,cr->br", x1, p["x_proj"].astype(x1.dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("br,rc->bc", dbc[..., :dtr], p["dt_proj"].astype(x1.dtype))
+        .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))   # [B,din]
+    Bc = dbc[..., dtr:dtr + N].astype(jnp.float32)
+    Cc = dbc[..., dtr + N:].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    hst = cache["ssm"]
+    hst = jnp.exp(dt[..., None] * A) * hst \
+        + (dt * x1.astype(jnp.float32))[..., None] * Bc[:, None, :]
+    y = jnp.einsum("bcn,bn->bc", hst, Cc) + x1.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bc,cd->bd", y.astype(x.dtype), p["out_proj"].astype(x.dtype))
+    return out[:, None], {"conv": conv_state.astype(cache["conv"].dtype), "ssm": hst}
+
+
+# ------------------------------------------------------------ Mamba 2 -----
+
+def mamba2_spec(cfg):
+    d, s = cfg.d_model, cfg.ssm
+    din = s.expand * d
+    nh = din // s.head_dim
+    N = s.state_dim
+    return {
+        "norm": norm_spec(d),
+        "in_proj": dense_spec((d, 2 * din + 2 * N + nh), ("embed", "dinner")),
+        "conv_w": ParamSpec((s.conv_dim, din + 2 * N), (None, "dinner"),
+                            init="normal", scale=1.0 / np.sqrt(s.conv_dim)),
+        "conv_b": ParamSpec((din + 2 * N,), ("dinner",), init="zeros"),
+        "A_log": ParamSpec((nh,), (None,), init="const", scale=0.5),
+        "D": ParamSpec((nh,), (None,), init="ones"),
+        "dt_bias": ParamSpec((nh,), (None,), init="const", scale=-4.0),
+        "gate_norm": ParamSpec((din,), ("dinner",), init="ones"),
+        "out_proj": dense_spec((din, d), ("dinner", "embed"), fan_in=din),
+    }
+
+
+def _mamba2_split(cfg, zxbcdt):
+    s = cfg.ssm
+    din = s.expand * cfg.d_model
+    N = s.state_dim
+    nh = din // s.head_dim
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:din + din + 2 * N]
+    dt = zxbcdt[..., din + din + 2 * N:]
+    assert dt.shape[-1] == nh
+    return z, xbc, dt
+
+
+def _ssd_chunk(cfg, xh, bq, cq, dtq, A, h_prev):
+    """One SSD chunk. xh [B,Q,nh,p]; bq,cq [B,Q,N]; dtq [B,Q,nh]; A [nh];
+    h_prev [B,nh,p,N]. Returns (y [B,Q,nh,p], h_next)."""
+    dA = dtq * A                                   # [B,Q,nh] log-decay
+    cA = jnp.cumsum(dA, axis=1)                    # inclusive cumsum
+    # intra-chunk: W[t,s] = C_t.B_s * exp(cA_t - cA_s) * dt_s   (t >= s)
+    scores = jnp.einsum("bqn,bsn->bqs", cq, bq)    # [B,Q,Q]
+    ldiff = cA[:, :, None, :] - cA[:, None, :, :]  # [B,Q,Q,nh] t,s
+    Q = dA.shape[1]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, :, :, None], jnp.exp(ldiff), 0.0)
+    W = scores[..., None] * L * dtq[:, None, :, :]            # [B,Q(t),Q(s),nh]
+    y_intra = jnp.einsum("btsh,bshp->bthp", W, xh)
+    # inter-chunk: contribution of the incoming state
+    y_inter = jnp.einsum("bqn,bhpn->bqhp", cq, h_prev) * jnp.exp(cA)[..., None]
+    # state update: decay-to-chunk-end factor exp(cA[-1] - cA_s)
+    decay_end = jnp.exp(cA[:, -1:, :] - cA)                    # [B,Q,nh]
+    h_next = jnp.exp(cA[:, -1])[:, :, None, None] * h_prev + \
+        jnp.einsum("bsn,bshp,bsh->bhpn", bq, xh, dtq * decay_end)
+    return y_intra + y_inter, h_next
+
+
+def _mamba2_inner(cfg, p, xbc, z, dt_raw, return_state=False):
+    s = cfg.ssm
+    din = s.expand * cfg.d_model
+    N = s.state_dim
+    nh = din // s.head_dim
+    hp = s.head_dim
+    B, S, _ = xbc.shape
+
+    x = xbc[..., :din]
+    Bc = xbc[..., din:din + N].astype(jnp.float32)
+    Cc = xbc[..., din + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # [B,S,nh]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # [nh]
+
+    Q = s.chunk
+    xh, _ = _pad_chunks(x.astype(jnp.float32).reshape(B, S, nh, hp), Q)
+    Bc, _ = _pad_chunks(Bc, Q)
+    Cc, _ = _pad_chunks(Cc, Q)
+    dt, _ = _pad_chunks(dt, Q)
+    # dt=0 on padded steps => exp(0)=1 decay, zero input: exact final state
+    valid = (jnp.arange(xh.shape[1]) < S).astype(jnp.float32)
+    dt = dt * valid[None, :, None]
+    nc = xh.shape[1] // Q
+
+    def chunk(h, xs):
+        xq, bq, cq, dtq = xs
+        y, h2 = _ssd_chunk(cfg, xq, bq, cq, dtq, A, h)
+        return h2, y
+
+    xs = tuple(t.reshape(B, nc, Q, *t.shape[2:]).swapaxes(0, 1)
+               for t in (xh, Bc, Cc, dt))
+    h0 = jnp.zeros((B, nh, hp, N), jnp.float32)
+    h_fin, ys = jax.lax.scan(chunk, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, nc * Q, nh, hp)[:, :S]
+    y = y + xh.reshape(B, nc * Q, nh, hp)[:, :S] * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(B, S, din)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y, p["gate_norm"], cfg.norm_eps, dtype=jnp.float32)
+    if return_state:
+        return y, h_fin
+    return y
+
+
+def mamba2_forward(cfg, p, x, return_cache=False):
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,dc->bsc", h, p["in_proj"].astype(x.dtype))
+    z, xbc, dt = _mamba2_split(cfg, zxbcdt)
+    xbc = constrain(xbc, ("batch", None, "act_mlp"))
+    pre_conv = xbc
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    if return_cache:
+        y, hst = _mamba2_inner(cfg, p, xbc, z, dt, return_state=True)
+        out = jnp.einsum("bsc,cd->bsd", y.astype(x.dtype),
+                         p["out_proj"].astype(x.dtype))
+        return out, {"conv": _conv_tail(pre_conv, cfg.ssm.conv_dim), "ssm": hst}
+    y = _mamba2_inner(cfg, p, xbc, z, dt)
+    return jnp.einsum("bsc,cd->bsd", y.astype(x.dtype), p["out_proj"].astype(x.dtype))
+
+
+def mamba2_cache_spec(cfg, batch, dtype):
+    s = cfg.ssm
+    din = s.expand * cfg.d_model
+    nh = din // s.head_dim
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, s.conv_dim - 1, din + 2 * s.state_dim), dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, nh, s.head_dim, s.state_dim), jnp.float32),
+    }
+
+
+def mamba2_cache_axes():
+    return {"conv": ("batch", None, "dinner"),
+            "ssm": ("batch", "act_heads", None, None)}
+
+
+def mamba2_decode(cfg, p, x, cache):
+    s = cfg.ssm
+    din = s.expand * cfg.d_model
+    N = s.state_dim
+    nh = din // s.head_dim
+    hp = s.head_dim
+    h = rms_norm(x, p["norm"], cfg.norm_eps)[:, 0]
+    zxbcdt = jnp.einsum("bd,dc->bc", h, p["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = _mamba2_split(cfg, zxbcdt[:, None])
+    z, xbc, dt_raw = z[:, 0], xbc[:, 0], dt_raw[:, 0]
+    xbc, conv_state = _conv_step(xbc, cache["conv"].astype(xbc.dtype),
+                                 p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    x1 = xbc[..., :din].astype(jnp.float32).reshape(-1, nh, hp)
+    Bc = xbc[..., din:din + N].astype(jnp.float32)
+    Cc = xbc[..., din + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    hst = cache["ssm"]
+    decay = jnp.exp(dt * A)                                     # [B,nh]
+    hst = decay[:, :, None, None] * hst + \
+        jnp.einsum("bn,bhp,bh->bhpn", Bc, x1, dt)
+    y = jnp.einsum("bhpn,bn->bhp", hst, Cc) + x1 * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(-1, din) * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y, p["gate_norm"], cfg.norm_eps, dtype=jnp.float32)
+    out = jnp.einsum("bc,cd->bd", y.astype(x.dtype), p["out_proj"].astype(x.dtype))
+    return out[:, None], {"conv": conv_state.astype(cache["conv"].dtype), "ssm": hst}

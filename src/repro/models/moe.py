@@ -1,0 +1,213 @@
+"""Mixture-of-Experts with explicit expert parallelism.
+
+Dispatch is sort-based (capacity-dropping, GShard-style) and runs INSIDE a
+shard_map so the scatter/gather stay local to each device:
+
+  * tokens are sharded over ("pod","data") and replicated over "model";
+  * EP mode (num_experts % model_axis == 0): each model shard owns E/ms
+    experts; it filters the (token, choice) pairs that route to its experts,
+    builds its local [E_local, C, d] buffer, runs its experts, and psums the
+    partial combine over "model". No all-to-all: replicated-dispatch EP.
+  * TP mode (small expert counts, e.g. Mixtral's 8 on a 16-way axis): every
+    shard holds all experts but only d_ff/ms of each; partial outputs psum.
+
+The capacity C is per data-shard, so dispatch memory is O(topk * T_local * d).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import activation, dense_spec, is_gated
+from repro.parallel import current_mesh
+
+
+def moe_spec(cfg):
+    mo = cfg.moe
+    d, E, f = cfg.d_model, mo.num_experts, mo.d_ff_expert
+    spec = {
+        "router": dense_spec((d, E), ("embed", None)),
+        "experts": {
+            "wi": dense_spec((E, d, f), ("expert", "embed", "mlp"), fan_in=d),
+            "wo": dense_spec((E, f, d), ("expert", "mlp", "embed"), fan_in=f),
+        },
+    }
+    if is_gated(cfg.ffn_activation):
+        spec["experts"]["wg"] = dense_spec((E, d, f), ("expert", "embed", "mlp"),
+                                           fan_in=d)
+    if mo.num_shared_experts:
+        fs = f * mo.num_shared_experts
+        spec["shared"] = {
+            "wi": dense_spec((d, fs), ("embed", "mlp")),
+            "wo": dense_spec((fs, d), ("mlp", "embed"), fan_in=fs),
+        }
+        if is_gated(cfg.ffn_activation):
+            spec["shared"]["wg"] = dense_spec((d, fs), ("embed", "mlp"))
+    return spec
+
+
+def _route(cfg, router_w, x_flat):
+    """Router logits -> (topk weights [T,k], topk ids [T,k], aux_loss)."""
+    mo = cfg.moe
+    logits = jnp.einsum("td,de->te", x_flat, router_w.astype(x_flat.dtype))
+    logits = logits.astype(jnp.float32)
+    if mo.router == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        w, ids = jax.lax.top_k(scores, mo.top_k)
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+        probs = scores / jnp.maximum(scores.sum(-1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, ids = jax.lax.top_k(probs, mo.top_k)
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    E = logits.shape[-1]
+    hot = jax.nn.one_hot(ids[:, 0], E, dtype=jnp.float32)
+    f_e = hot.mean(0)
+    p_e = probs.mean(0)
+    aux = E * jnp.sum(f_e * p_e)
+    return w, ids, aux
+
+
+def _expert_ffn(cfg, pe, buf):
+    """buf [E_l, C, d] through per-expert (possibly ff-sliced) MLP."""
+    act = activation(cfg.ffn_activation)
+    h = jnp.einsum("ecd,edf->ecf", buf, pe["wi"].astype(buf.dtype))
+    if "wg" in pe:
+        g = jnp.einsum("ecd,edf->ecf", buf, pe["wg"].astype(buf.dtype))
+        h = act(g) * h
+    else:
+        h = act(h)
+    return jnp.einsum("ecf,efd->ecd", h, pe["wo"].astype(buf.dtype))
+
+
+def _moe_local(cfg, p, x_flat, e_offset: int, e_local: int, capacity: int):
+    """Per-device dispatch/compute/combine over local experts [e_offset,
+    e_offset+e_local). Returns (partial_out [T,d], aux, dropped_frac)."""
+    mo = cfg.moe
+    T, d = x_flat.shape
+    k = mo.top_k
+    w, ids, aux = _route(cfg, p["router"], x_flat)
+
+    ids_f = ids.reshape(-1)                                    # [T*k]
+    w_f = w.reshape(-1)
+    tok_f = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+
+    local = ids_f - e_offset
+    mine = (local >= 0) & (local < e_local)
+    sort_key = jnp.where(mine, local, e_local)                 # sentinel last
+    order = jnp.argsort(sort_key, stable=True)
+    s_local = sort_key[order]
+    s_tok = tok_f[order]
+    s_w = w_f[order]
+    # position within the expert's segment
+    seg_start = jnp.searchsorted(s_local, s_local, side="left")
+    pos = jnp.arange(T * k, dtype=jnp.int32) - seg_start.astype(jnp.int32)
+    keep = (s_local < e_local) & (pos < capacity)
+    dropped = jnp.sum((s_local < e_local) & ~keep) / jnp.maximum(
+        jnp.sum(s_local < e_local), 1)
+
+    # scatter into [E_l, C, d]; invalid rows get an out-of-bounds expert index
+    # and are dropped by scatter mode="drop"
+    e_idx = jnp.where(keep, s_local, e_local)
+    buf = jnp.zeros((e_local, capacity, d), x_flat.dtype)
+    buf = buf.at[e_idx, jnp.clip(pos, 0, capacity - 1)].set(
+        x_flat[s_tok], mode="drop")
+
+    out_buf = _expert_ffn(cfg, p["experts"], buf)
+
+    gathered = out_buf[jnp.clip(e_idx, 0, e_local - 1),
+                       jnp.clip(pos, 0, capacity - 1)]         # [T*k, d]
+    contrib = gathered * (s_w * keep).astype(gathered.dtype)[:, None]
+    out = jnp.zeros((T, d), x_flat.dtype).at[s_tok].add(contrib, mode="drop")
+    return out, aux, dropped
+
+
+def moe_apply(cfg, p, x):
+    """x [B,S,d] -> (y [B,S,d], metrics dict). Shared experts added outside
+    the shard_map (plain GSPMD tensor-parallel MLP)."""
+    from jax.sharding import PartitionSpec as P
+
+    mo = cfg.moe
+    B, S, d = x.shape
+    mesh = current_mesh()
+    x_flat = x.reshape(B * S, d)
+
+    if mesh is not None and "model" in mesh.shape:
+        from repro.parallel.sharding import physical_spec
+
+        ms = mesh.shape["model"]
+        dp = cfg.dense_layout == "dp"
+        # divisibility-aware token sharding (decode with B*S==1 replicates)
+        tok_spec = physical_spec(("batch_dp3" if dp else "batch", None),
+                                 (B * S, d), mesh)
+        tok_axes = ()
+        if tok_spec and tok_spec[0] is not None:
+            tok_axes = (tok_spec[0] if isinstance(tok_spec[0], tuple)
+                        else (tok_spec[0],))
+        t_shards = int(np.prod([mesh.shape[a] for a in tok_axes])) if tok_axes else 1
+        t_local = (B * S) // t_shards
+        ep = mo.num_experts % ms == 0
+        e_local = mo.num_experts // ms if ep else mo.num_experts
+        t_dispatch = t_local * (ms if (dp and tok_axes and "model" in tok_axes)
+                                else 1)
+        capacity = int(np.ceil(mo.top_k * t_dispatch / mo.num_experts
+                               * mo.capacity_factor))
+        capacity = max(capacity, 4)
+        if ep:
+            expert_specs = jax.tree_util.tree_map(
+                lambda _: P("model", None, None), p["experts"])
+        else:
+            expert_specs = jax.tree_util.tree_map(
+                lambda _: P(None, None, "model"), p["experts"])
+            # wo is [E, f, d]: slice f (dim 1), not d
+            expert_specs["wo"] = P(None, "model", None)
+        in_specs = (tok_spec, P(None, None), expert_specs)
+        out_specs = (tok_spec, P(), P())
+
+        model_in_tok = dp and tok_axes and "model" in tok_axes
+
+        def shard_fn(xl, router_w, experts_l):
+            idx = jax.lax.axis_index("model")
+            off = idx * e_local if ep else 0
+            pl = {"router": router_w, "experts": experts_l}
+            if model_in_tok:
+                # dp layout: tokens are sharded over "model" too — gather
+                # them for dispatch, reduce-scatter the combined outputs
+                xg = jax.lax.all_gather(xl, "model", axis=0, tiled=True)
+                out, aux, drop = _moe_local(cfg, pl, xg, off, e_local,
+                                            capacity)
+                out = jax.lax.psum_scatter(out, "model", scatter_dimension=0,
+                                           tiled=True)
+            else:
+                out, aux, drop = _moe_local(cfg, pl, xl, off, e_local,
+                                            capacity)
+                out = jax.lax.psum(out, "model")
+            # metrics differ across token shards: average them so the
+            # replicated out_specs is semantically true
+            mean_axes = tuple(a for a in tok_axes if a != "model") or None
+            if mean_axes:
+                aux = jax.lax.pmean(aux, mean_axes)
+                drop = jax.lax.pmean(drop, mean_axes)
+            return out, aux, drop
+
+        y_flat, aux, dropped = jax.shard_map(
+            shard_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False)(x_flat, p["router"], p["experts"])
+    else:
+        capacity = int(np.ceil(mo.top_k * (B * S) / mo.num_experts
+                               * mo.capacity_factor))
+        capacity = max(capacity, 4)
+        y_flat, aux, dropped = _moe_local(cfg, p, x_flat, 0, mo.num_experts,
+                                          capacity)
+
+    y = y_flat.reshape(B, S, d)
+    if "shared" in p:
+        from repro.models.layers import mlp_apply
+        y = y + mlp_apply(cfg, p["shared"], x)
+    metrics = {"moe_aux": aux, "moe_dropped": dropped}
+    return y, metrics

@@ -1,0 +1,85 @@
+"""Parameter-spec trees: one definition drives init, eval_shape and sharding.
+
+A model builds a nested dict of ParamSpec leaves. From that single tree we
+derive (a) materialized params (`init_params`), (b) ShapeDtypeStruct stand-ins
+for the dry-run (`shape_tree` — never allocates), and (c) per-leaf logical
+axes for the sharding resolver (`axes_tree`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple                      # logical axis names (len == ndim)
+    init: str = "fan_in"             # fan_in | normal | zeros | ones | const
+    scale: float = 1.0
+    dtype: Optional[str] = None      # override model param_dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _map_specs(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+def stack_spec(tree, n: int):
+    """Prepend a scanned 'layer' dimension of size n to every leaf."""
+    def f(s: ParamSpec):
+        return dataclasses.replace(s, shape=(n,) + s.shape, axes=("layer",) + s.axes)
+    return _map_specs(f, tree)
+
+
+def shape_tree(tree, default_dtype):
+    def f(s: ParamSpec):
+        return jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or default_dtype))
+    return _map_specs(f, tree)
+
+
+def axes_tree(tree):
+    return _map_specs(lambda s: s.axes, tree)
+
+
+def init_params(tree, key, default_dtype):
+    """Materialize params. Deterministic per-leaf keys derived by path hash so
+    the result is independent of tree iteration order."""
+    import hashlib
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_spec)
+    leaves = []
+    for path, spec in flat:
+        pstr = "/".join(str(p) for p in path)
+        # blake2, NOT hash(): Python string hashing is salted per process and
+        # replay workers must derive bit-identical init keys
+        digest = hashlib.blake2b(pstr.encode(), digest_size=4).digest()
+        k = jax.random.fold_in(key, int.from_bytes(digest, "little"))
+        dtype = jnp.dtype(spec.dtype or default_dtype)
+        if spec.init == "zeros":
+            leaf = jnp.zeros(spec.shape, dtype)
+        elif spec.init == "ones":
+            leaf = jnp.ones(spec.shape, dtype)
+        elif spec.init == "const":
+            leaf = jnp.full(spec.shape, spec.scale, dtype)
+        elif spec.init == "normal":
+            leaf = (spec.scale * jax.random.normal(k, spec.shape)).astype(dtype)
+        elif spec.init == "fan_in":
+            fan_in = spec.shape[0] if len(spec.shape) == 1 else int(np.prod(spec.shape[:-1]))
+            if len(spec.shape) >= 3 and spec.axes and spec.axes[0] in ("layer", "expert"):
+                fan_in = int(np.prod(spec.shape[1:-1])) or 1
+            std = spec.scale / max(fan_in, 1) ** 0.5
+            leaf = (std * jax.random.normal(k, spec.shape)).astype(dtype)
+        else:
+            raise ValueError(f"unknown init {spec.init!r}")
+        leaves.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

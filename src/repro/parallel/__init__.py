@@ -1,0 +1,8 @@
+from repro.parallel.sharding import (  # noqa: F401
+    axis_rules_for_mesh,
+    constrain,
+    current_mesh,
+    param_sharding,
+    physical_spec,
+    use_mesh,
+)

@@ -1,0 +1,72 @@
+"""Gradient compression for cross-pod all-reduce (beyond-paper, opt-in).
+
+Blockwise int8 quantization with error feedback: each gradient leaf is
+quantized per 256-value block to int8 + f32 scale (~4x over f32, ~2x over
+bf16 on the wire), the quantization residual is carried into the next step
+(error feedback keeps SGD/Adam convergence unbiased in practice).
+
+The same codec backs checkpoint compression (kernels/quantize.py holds the
+Pallas TPU kernel; this module is the jnp reference/composition layer).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class CompressedLeaf(NamedTuple):
+    q: jnp.ndarray        # int8 [n_blocks, BLOCK]
+    scale: jnp.ndarray    # f32  [n_blocks]
+    n: int                # original element count
+
+
+def quantize_leaf(x) -> CompressedLeaf:
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return CompressedLeaf(q=q, scale=scale, n=n)
+
+
+def dequantize_leaf(c: CompressedLeaf, shape, dtype):
+    blocks = c.q.astype(jnp.float32) * c.scale[:, None]
+    return blocks.reshape(-1)[: c.n].reshape(shape).astype(dtype)
+
+
+def compress_grads_with_feedback(grads, error_state):
+    """Returns (compressed_pytree, new_error_state). error_state has the
+    same structure as grads (zeros at step 0)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e.astype(jnp.float32)
+        c = quantize_leaf(g32)
+        deq = dequantize_leaf(c, g.shape, jnp.float32)
+        new_e = g32 - deq
+        return c, new_e
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(error_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    comp = jax.tree_util.tree_unflatten(treedef, [c for c, _ in out])
+    err = jax.tree_util.tree_unflatten(treedef, [e for _, e in out])
+    return comp, err
+
+
+def decompress_grads(comp, like):
+    flat_c = jax.tree_util.tree_leaves(
+        comp, is_leaf=lambda x: isinstance(x, CompressedLeaf))
+    flat_l, treedef = jax.tree_util.tree_flatten(like)
+    return jax.tree_util.tree_unflatten(
+        treedef, [dequantize_leaf(c, l.shape, l.dtype)
+                  for c, l in zip(flat_c, flat_l)])
+
+
+def init_error_state(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,68 @@
+"""GPipe-style pipeline parallelism (opt-in; the baseline cells use DP/TP —
+DESIGN.md section 6 records why). Provided as a composable building block so
+a "stage" mesh axis can be added for >512-chip deployments where layer-FSDP
+gathers would otherwise dominate.
+
+The schedule is the classic skewed scan: with S stages and M microbatches,
+time step t lets stage s work on microbatch (t - s). States live in a
+[S, mb, ...] buffer that shifts one stage down per step (jnp.roll — lowers
+to a collective-permute when the leading dim is sharded over "stage").
+
+Equivalence to the sequential layer scan is tested in
+tests/test_pipeline.py; bubble fraction is the usual (S-1)/(M+S-1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import constrain
+
+
+def stage_scan(stage_fn, stage_params, x, *, microbatches: int):
+    """Run ``x`` through S pipeline stages.
+
+    stage_fn(params_slice, h) -> h  applies ONE stage (a group of layers).
+    stage_params: pytree stacked on a leading S axis (logical "stage").
+    x: [B, ...] with B % microbatches == 0.
+
+    Returns the result of stage S-1 applied after ... after stage 0.
+    """
+    S = jax.tree_util.tree_leaves(stage_params)[0].shape[0]
+    B = x.shape[0]
+    assert B % microbatches == 0, (B, microbatches)
+    mb = B // microbatches
+    xs = x.reshape(microbatches, mb, *x.shape[1:])
+
+    # state buffer: what each stage is currently holding
+    buf = jnp.zeros((S, mb) + x.shape[1:], x.dtype)
+    buf = constrain(buf, ("stage",) + (None,) * (buf.ndim - 1))
+    outs = jnp.zeros_like(xs)
+
+    total = microbatches + S - 1
+
+    def step(carry, t):
+        buf, outs = carry
+        # inject the next microbatch into stage 0's slot
+        inject = jnp.where(t < microbatches, t, 0)
+        buf = buf.at[0].set(
+            jnp.where(t < microbatches, xs[inject], buf[0]))
+        # every stage processes its current microbatch (garbage lanes are
+        # masked out at collection time)
+        processed = jax.vmap(stage_fn)(stage_params, buf)
+        # stage S-1's output corresponds to microbatch t-(S-1)
+        out_idx = jnp.clip(t - (S - 1), 0, microbatches - 1)
+        valid = t >= (S - 1)
+        outs = outs.at[out_idx].set(
+            jnp.where(valid, processed[S - 1], outs[out_idx]))
+        # shift: stage s+1 receives stage s's output next step
+        buf = jnp.roll(processed, 1, axis=0)
+        return (buf, outs), None
+
+    (buf, outs), _ = jax.lax.scan(step, (buf, outs),
+                                  jnp.arange(total, dtype=jnp.int32))
+    return outs.reshape(B, *x.shape[1:])
+
+
+def bubble_fraction(n_stages: int, microbatches: int) -> float:
+    return (n_stages - 1) / (microbatches + n_stages - 1)

@@ -1,0 +1,141 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Models annotate params and activations with LOGICAL axis names; this module
+resolves them to PartitionSpecs against the current mesh. Resolution is
+defensive: a mesh axis is used at most once per spec, and a logical axis that
+does not divide its dimension falls through to the next candidate (ultimately
+replication). This is what makes every (arch x shape x mesh) cell lower
+cleanly — kv_heads=8 on a 16-way model axis simply replicates instead of
+failing, and a batch of 1 falls back to sequence sharding for long-context
+decode.
+
+Physical axes:
+  "pod"   — outermost, across pods (multi-pod mesh only)
+  "data"  — data parallel / FSDP
+  "model" — tensor / expert parallel
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Candidate physical axes per logical axis, in preference order. Each
+# candidate is a tuple of mesh axis names that will be combined on that dim.
+# () = replicate.
+DEFAULT_RULES: dict[str, list[tuple[str, ...]]] = {
+    # --- activations ---
+    "batch":     [("pod", "data"), ("data",), ()],
+    "batch_dp3": [("pod", "data", "model"), ("data", "model"),
+                  ("pod", "data"), ("data",), ()],
+    "seq":       [()],                       # sequence usually unsharded in train
+    "seq_mp":    [("model",), ()],           # decode KV sequence sharding (SP)
+    # long-context B=1 decode: spread cache over every axis we can
+    "cache_seq": [("pod", "data", "model"), ("data", "model"), ("model",), ()],
+    "act_embed": [()],
+    "act_heads": [("model",), ()],
+    "act_mlp":   [("model",), ()],
+    "act_vocab": [("model",), ()],
+    # --- params ---
+    "vocab":     [("model",), ()],
+    "embed":     [("pod", "data"), ("data",), ()],   # FSDP / ZeRO-3 shard dim
+    "heads":     [("model",), ()],
+    "kv_heads":  [("model",), ()],
+    "mlp":       [("model",), ()],
+    "expert":    [("model",), ()],
+    "dinner":    [("model",), ()],           # mamba inner dim
+    "layer":     [()],
+    "stage":     [()],                        # pipeline stages (opt-in)
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: dict[str, list[tuple[str, ...]]] = DEFAULT_RULES
+
+
+_CTX = _Ctx()
+
+
+def axis_rules_for_mesh(mesh: Mesh, overrides: Optional[dict] = None):
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Install mesh + rules for constrain()/param_sharding(). None = no-op mode."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    _CTX.rules = rules or (axis_rules_for_mesh(mesh) if mesh is not None else DEFAULT_RULES)
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _mesh_axis_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def physical_spec(
+    logical: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Optional[Mesh] = None,
+    rules: Optional[dict] = None,
+) -> P:
+    """Resolve logical axis names to a PartitionSpec with divisibility and
+    used-axis fallbacks."""
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    if mesh is None:
+        return P()
+    mesh_axes = set(mesh.shape.keys())
+    used: set[str] = set()
+    out = []
+    for name, dim in zip(logical, shape):
+        entry: object = None
+        if name is not None:
+            for cand in rules.get(name, [()]):
+                cand = tuple(a for a in cand if a in mesh_axes)
+                if not cand:
+                    continue
+                if any(a in used for a in cand):
+                    continue
+                if dim % _mesh_axis_size(mesh, cand) != 0:
+                    continue
+                entry = cand if len(cand) > 1 else cand[0]
+                used.update(cand)
+                break
+        out.append(entry)
+    # trailing Nones can be dropped but keeping them is harmless
+    return P(*out)
+
+
+def param_sharding(logical, shape, mesh: Optional[Mesh] = None) -> Optional[NamedSharding]:
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, physical_spec(logical, shape, mesh))
+
+
+def constrain(x, logical: Sequence[Optional[str]]):
+    """with_sharding_constraint under the installed mesh; identity otherwise."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = physical_spec(logical, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

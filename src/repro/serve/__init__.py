@@ -1,0 +1,1 @@
+from repro.serve.step import build_prefill_step, build_decode_step  # noqa: F401

@@ -1,0 +1,57 @@
+"""serve_step builders: prefill and single-token decode (jit-able, pure).
+
+``decode_step`` consumes and re-emits the KV/SSM caches; the dry-run lowers
+it with cache ShapeDtypeStructs to prove the serving path shards on the
+production mesh (SWA ring caches and SSM O(1) states are what make the
+long_500k cells feasible)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import build_model
+
+
+def build_prefill_step(cfg, max_len: int):
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len)
+
+    return prefill_step
+
+
+def build_decode_step(cfg):
+    model = build_model(cfg)
+
+    def decode_step(params, caches, tokens, pos):
+        logits, new_caches = model.decode(params, caches, tokens, pos)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, new_caches
+
+    return decode_step
+
+
+def greedy_generate(cfg, params, prompt_batch, steps: int, max_len: int):
+    """Tiny driver: prefill a prompt then greedy-decode `steps` tokens.
+    Used by examples and smoke tests (not the dry-run)."""
+    model = build_model(cfg)
+    prefill = jax.jit(build_prefill_step(cfg, max_len))
+    decode = jax.jit(build_decode_step(cfg))
+    caches, logits = prefill(params, prompt_batch)
+    if cfg.family == "audio":
+        start = prompt_batch["dec_tokens"].shape[1]
+        B = prompt_batch["dec_tokens"].shape[0]
+    elif cfg.family == "vlm":
+        start = prompt_batch["tokens"].shape[1] + cfg.frontend_tokens
+        B = prompt_batch["tokens"].shape[0]
+    else:
+        start = prompt_batch["tokens"].shape[1]
+        B = prompt_batch["tokens"].shape[0]
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    for i in range(steps - 1):
+        tok, _, caches = decode(params, caches, tok,
+                                jnp.asarray(start + i, jnp.int32))
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

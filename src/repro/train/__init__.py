@@ -1,0 +1,4 @@
+from repro.train.state import TrainState  # noqa: F401
+from repro.train.step import build_train_step, build_loss_fn  # noqa: F401
+from repro.train.optimizer import adamw  # noqa: F401
+from repro.train.schedule import warmup_cosine  # noqa: F401

@@ -1,0 +1,70 @@
+"""AdamW on pytrees, built from scratch (no optax in this environment).
+
+Moments are stored in ``moment_dtype`` (fp32 default; bf16 for the 671B
+config where fp32 moments would not fit HBM) but all arithmetic is fp32.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: object
+    nu: object
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def adamw(schedule: Callable, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          moment_dtype="float32"):
+    mdt = jnp.dtype(moment_dtype)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return AdamWState(mu=_tmap(zeros, params), nu=_tmap(zeros, params))
+
+    def update(grads, state: AdamWState, params, step):
+        """Returns (new_params, new_state). step is the 0-based int32 step."""
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        lr = schedule(step)
+        c1 = 1.0 - jnp.power(b1, t)
+        c2 = 1.0 - jnp.power(b2, t)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            mhat = m32 / c1
+            vhat = v32 / c2
+            step_ = mhat / (jnp.sqrt(vhat) + eps)
+            p32 = p.astype(jnp.float32)
+            if weight_decay and p.ndim >= 2:   # decay matrices only
+                step_ = step_ + weight_decay * p32
+            return ((p32 - lr * step_).astype(p.dtype),
+                    m32.astype(mdt), v32.astype(mdt))
+
+        out = _tmap(upd, grads, state.mu, state.nu, params)
+        new_params = _tmap(lambda _, o: o[0], grads, out)
+        new_mu = _tmap(lambda _, o: o[1], grads, out)
+        new_nu = _tmap(lambda _, o: o[2], grads, out)
+        return new_params, AdamWState(mu=new_mu, nu=new_nu)
+
+    return init, update
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return _tmap(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                 grads), gn

@@ -1,0 +1,27 @@
+"""TrainState: the *explicit changeset* of one training iteration.
+
+In JAX the side-effects of an epoch are exactly the outputs of the pure
+train_step — this pytree. Flor's functional-tier lean checkpointing
+checkpoints precisely this object (DESIGN.md section 2).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    params: Any
+    mu: Any
+    nu: Any
+    step: jnp.ndarray          # int32 scalar
+    rng: jnp.ndarray           # PRNG key (uint32[2] raw form)
+
+    @classmethod
+    def create(cls, params, opt_state, rng, step=0):
+        return cls(params=params, mu=opt_state.mu, nu=opt_state.nu,
+                   step=jnp.asarray(step, jnp.int32),
+                   rng=jax.random.key_data(rng) if hasattr(rng, "dtype") and
+                   jnp.issubdtype(rng.dtype, jax.dtypes.prng_key) else rng)

@@ -1,0 +1,15 @@
+"""Shared utilities: pytree helpers, timing, formatting."""
+from repro.utils.pytree import (tree_bytes, tree_leaves_with_paths, path_str,
+                                tree_allclose, tree_size)
+from repro.utils.timing import Stopwatch, EMA
+
+__all__ = ["tree_bytes", "tree_leaves_with_paths", "path_str", "tree_allclose",
+           "tree_size", "Stopwatch", "EMA", "fmt_bytes"]
+
+
+def fmt_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n:.2f}PiB"

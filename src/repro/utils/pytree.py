@@ -1,0 +1,68 @@
+"""Pytree helpers used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def path_str(path) -> str:
+    """Render a jax KeyPath as a stable, human-readable string."""
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def tree_leaves_with_paths(tree):
+    """[(path_str, leaf), ...] in deterministic order."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(path_str(p), v) for p, v in flat]
+
+
+def tree_bytes(tree) -> int:
+    """Total nbytes of all array leaves (works on ShapeDtypeStruct too)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "dtype") and hasattr(leaf, "shape"):
+            total += int(np.prod(leaf.shape, dtype=np.int64)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_size(tree) -> int:
+    """Total element count of all array leaves."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "shape"):
+            total += int(np.prod(leaf.shape, dtype=np.int64))
+    return total
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-6) -> bool:
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    if len(la) != len(lb):
+        return False
+    for x, y in zip(la, lb):
+        if np.asarray(x).shape != np.asarray(y).shape:
+            return False
+        if not np.allclose(np.asarray(x, dtype=np.float64),
+                           np.asarray(y, dtype=np.float64), rtol=rtol, atol=atol):
+            return False
+    return True
+
+
+def cast_floating(tree, dtype):
+    """Cast floating-point leaves to `dtype`, leave ints/bools alone."""
+    def _cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(_cast, tree)

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# tests must see exactly ONE device (the dry-run sets its own XLA_FLAGS in a
+# separate process); make sure nothing leaked into the environment
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.dirname(__file__))   # for `import proptest`

@@ -1,0 +1,111 @@
+"""Minimal hypothesis-compatible property-testing shim.
+
+The real `hypothesis` package is not installable in this offline container,
+so this module provides the same @given/strategies surface for the subset we
+use, driving each property with deterministic seeded random examples
+(shrinking omitted). Tests read exactly like hypothesis tests and would run
+unmodified under the real library.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+DEFAULT_EXAMPLES = 25
+
+
+class Strategy:
+    def __init__(self, fn):
+        self._fn = fn
+
+    def example(self, rng: random.Random):
+        return self._fn(rng)
+
+    def map(self, f):
+        return Strategy(lambda rng: f(self._fn(rng)))
+
+    def filter(self, pred, tries=100):
+        def gen(rng):
+            for _ in range(tries):
+                v = self._fn(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter exhausted")
+        return Strategy(gen)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 30):
+        return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0):
+        return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return Strategy(lambda rng: rng.choice(seq))
+
+    @staticmethod
+    def lists(elem: Strategy, min_size=0, max_size=10):
+        def gen(rng):
+            n = rng.randint(min_size, max_size)
+            return [elem.example(rng) for _ in range(n)]
+        return Strategy(gen)
+
+    @staticmethod
+    def tuples(*elems):
+        return Strategy(lambda rng: tuple(e.example(rng) for e in elems))
+
+    @staticmethod
+    def composite(fn):
+        @functools.wraps(fn)
+        def builder(*args, **kw):
+            def gen(rng):
+                draw = lambda s: s.example(rng)
+                return fn(draw, *args, **kw)
+            return Strategy(gen)
+        return builder
+
+
+st = strategies
+
+
+def given(*g_args, **g_kw):
+    def deco(test_fn):
+        sig = inspect.signature(test_fn)
+        names = list(sig.parameters)
+
+        @functools.wraps(test_fn)
+        def wrapper(*call_args, **call_kw):
+            rng = random.Random(0xF10B + hash(test_fn.__name__) % 10_000)
+            for ex in range(DEFAULT_EXAMPLES):
+                drawn_pos = [s.example(rng) for s in g_args]
+                drawn_kw = {k: s.example(rng) for k, s in g_kw.items()}
+                try:
+                    test_fn(*call_args, *drawn_pos, **call_kw, **drawn_kw)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property failed on example {ex}: pos={drawn_pos} "
+                        f"kw={drawn_kw}: {e}") from e
+
+        # hide drawn params from pytest's fixture resolution
+        drawn_names = set(g_kw) | set(names[: len(g_args)])
+        remaining = [p for n, p in sig.parameters.items()
+                     if n not in drawn_names]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        return wrapper
+    return deco
+
+
+def settings(**_kw):
+    def deco(fn):
+        return fn
+    return deco

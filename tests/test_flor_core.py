@@ -1,0 +1,251 @@
+"""Flor core: adaptive invariants (property), generator partitioning
+(property), Table-1 changeset rules, instrumenter, probes, deferred checks."""
+import ast
+import os
+import shutil
+import textwrap
+
+import numpy as np
+import pytest
+
+from proptest import given, st
+
+from repro.core.adaptive import AdaptiveController
+from repro.core.changeset import analyze_loop, outer_assignments
+from repro.core.generator import partition
+from repro.core.instrument import instrument_source
+from repro.core.probes import detect_probes
+
+
+# ------------------------------------------------------- adaptive (5.3) ----
+
+@given(epochs=st.integers(3, 60),
+       c_time=st.floats(0.01, 5.0),
+       m_time=st.floats(0.001, 5.0),
+       eps=st.sampled_from([1 / 15, 0.02, 0.2]))
+def test_record_overhead_invariant_holds(epochs, c_time, m_time, eps):
+    """Eq. 1: total materialization time never exceeds eps * total compute
+    (modulo the single bootstrap checkpoint, per the paper's k+1 test)."""
+    ctrl = AdaptiveController(epsilon=eps)
+    mat_total = 0.0
+    comp_total = 0.0
+    for _ in range(epochs):
+        ctrl.observe_execution("b", c_time)
+        comp_total += c_time
+        if ctrl.should_materialize("b", est_bytes=int(m_time * 1e9)):
+            ctrl.note_submitted("b")
+            ctrl.observe_materialization("b", m_time)
+            mat_total += m_time
+    # allow the bootstrap checkpoint (decision made before M was observed)
+    assert mat_total - m_time <= eps * comp_total + 1e-9
+
+
+@given(epochs=st.integers(5, 50), ratio=st.floats(0.0001, 0.01))
+def test_cheap_checkpoints_always_materialize(epochs, ratio):
+    """Model-training regime (paper: 'memoized every time'): M << eps*C."""
+    ctrl = AdaptiveController(epsilon=1 / 15)
+    k = 0
+    for _ in range(epochs):
+        ctrl.observe_execution("b", 1.0)
+        if ctrl.should_materialize("b", est_bytes=int(ratio * 1e9)):
+            ctrl.note_submitted("b")
+            ctrl.observe_materialization("b", ratio)
+            k += 1
+    assert k == epochs
+
+
+def test_expensive_checkpoints_go_sparse():
+    """Fine-tuning regime (paper: RTE/CoLA): M comparable to C -> periodic."""
+    ctrl = AdaptiveController(epsilon=1 / 15)
+    k = 0
+    for _ in range(100):
+        ctrl.observe_execution("b", 1.0)
+        if ctrl.should_materialize("b", est_bytes=int(0.5 * 1e9)):
+            ctrl.note_submitted("b")
+            ctrl.observe_materialization("b", 0.5)
+            k += 1
+    assert 1 <= k <= 100 * (1 / 15) / 0.5 + 2   # bounded by the invariant
+    assert ctrl.record_overhead_bound_ok("b")
+
+
+def test_replay_latency_invariant_threshold():
+    """Eq. 3/4: with c refined online the threshold uses min(1/(1+c), eps)."""
+    ctrl = AdaptiveController(epsilon=0.9)   # eps large: Eq. 3 binds
+    ctrl.observe_execution("b", 1.0)
+    ctrl.note_submitted("b")
+    ctrl.observe_materialization("b", 0.4)
+    # c = 1.0 -> threshold n/(k+1) * 1/2 = 1/2 * ... with n=1,k=1: 0.25
+    assert not ctrl.should_materialize("b")   # 0.4/1.0 > 0.25
+    for _ in range(3):
+        ctrl.observe_execution("b", 1.0)
+    assert ctrl.should_materialize("b")       # n=4,k=1: thr = 1.0
+
+
+def test_online_c_refinement():
+    ctrl = AdaptiveController(epsilon=1 / 15)
+    ctrl.observe_execution("b", 1.0)
+    ctrl.note_submitted("b")
+    ctrl.observe_materialization("b", 0.1)
+    ctrl.observe_restore("b", 0.25)
+    assert ctrl.c.value > 1.0                 # moved toward 2.5
+
+
+# ------------------------------------------------------ generator (5.4) ----
+
+@given(n=st.integers(0, 200), g=st.integers(1, 17))
+def test_partition_disjoint_cover_balanced(n, g):
+    items = list(range(n))
+    segs = [partition(items, g, pid)[1] for pid in range(g)]
+    flat = [x for s in segs for x in s]
+    assert flat == items                       # disjoint, ordered, complete
+    sizes = [len(s) for s in segs]
+    assert max(sizes) - min(sizes) <= 1        # balanced to within one epoch
+    for pid in range(g):
+        before, mine = partition(items, g, pid)
+        assert before == items[: len(before)]
+        assert before + mine == items[: len(before) + len(mine)]
+
+
+# ------------------------------------------------------ changeset (5.2) ----
+
+def _loop(src):
+    tree = ast.parse(textwrap.dedent(src))
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.For, ast.While)):
+            return node, tree
+    raise AssertionError("no loop")
+
+
+def test_rule1_method_call_assignment():
+    loop, _ = _loop("""
+    for batch in data:
+        preds = net.forward(batch)
+    """)
+    res = analyze_loop(loop, outer_assigned={"net", "data"})
+    assert res.ok
+    assert res.changeset == ["net"]            # preds/batch loop-scoped
+
+
+def test_rule2_function_call_assignment():
+    loop, _ = _loop("""
+    for batch in data:
+        state = step(state, batch)
+    """)
+    res = analyze_loop(loop, outer_assigned={"state", "step", "data"})
+    assert res.ok and res.changeset == ["state"]
+
+
+def test_rule4_method_call_statement():
+    loop, _ = _loop("""
+    for batch in data:
+        optimizer.step()
+    """)
+    res = analyze_loop(loop, outer_assigned={"optimizer", "data"})
+    assert res.ok and res.changeset == ["optimizer"]
+
+
+def test_rule5_refuses_bare_call():
+    loop, _ = _loop("""
+    for epoch in range(10):
+        train()
+        evaluate(net)
+    """)
+    res = analyze_loop(loop, outer_assigned={"net"})
+    assert not res.ok and "rule 5" in res.refused_reason
+
+
+def test_rule0_refuses_reassignment_of_changed_var():
+    loop, _ = _loop("""
+    for i in data:
+        x = f(i)
+        x = y
+    """)
+    res = analyze_loop(loop, outer_assigned={"x", "y", "data"})
+    assert not res.ok and "rule 0" in res.refused_reason
+
+
+def test_figure6_example():
+    """The paper's Fig. 6 inner loop: changeset {optimizer} after filtering
+    (net added later by runtime augmentation)."""
+    loop, _ = _loop("""
+    for batch in training_data_loader:
+        preds = net(batch.X)
+        avg_loss = loss(preds, batch.Y)
+        avg_loss.backward()
+        optimizer.step()
+    """)
+    res = analyze_loop(loop, outer_assigned={"net", "loss", "optimizer",
+                                             "training_data_loader"})
+    assert res.ok
+    assert res.changeset == ["avg_loss", "optimizer"] or \
+        res.changeset == ["optimizer", "avg_loss"] or \
+        res.changeset == ["optimizer"], res.changeset
+    assert "batch" in res.loop_scoped and "preds" in res.loop_scoped
+
+
+def test_runtime_augmentation_optimizer_implies_model():
+    from repro.core.changeset import augment_changeset
+
+    class Opt:
+        def flor_tracks(self):
+            return ["net"]
+
+    ns = {"optimizer": Opt(), "net": object()}
+    out = augment_changeset(["optimizer"], ns)
+    assert out == ["optimizer", "net"]
+
+
+# ---------------------------------------------------- instrumenter (4.2) ----
+
+def test_instrument_wraps_inner_loop_and_main_generator():
+    src = textwrap.dedent("""
+    state = init()
+    metrics = {}
+    for epoch in range(4):
+        for s in range(3):
+            state, metrics = step(state, s)
+        report(metrics)
+    """)
+    out, rep = instrument_source(src)
+    assert "flor.generator(range(4))" in out
+    assert "flor.skipblock.step_into" in out
+    assert list(rep.instrumented.values()) == [["state", "metrics"]]
+    # main loop itself is not skippable (report() is rule 5 anyway)
+    assert len(rep.main_loops) == 1
+
+
+def test_instrument_refuses_rule5_inner_loop():
+    src = textwrap.dedent("""
+    for epoch in range(4):
+        for s in range(3):
+            do_stuff(s)
+    """)
+    out, rep = instrument_source(src)
+    assert rep.instrumented == {}
+    assert len(rep.refused) == 1
+
+
+# --------------------------------------------------------- probes (3.2) ----
+
+def test_probe_detection_maps_added_line_to_loop():
+    old = textwrap.dedent("""
+    for epoch in range(4):
+        for s in range(3):
+            state = step(state, s)
+    """)
+    new = textwrap.dedent("""
+    for epoch in range(4):
+        for s in range(3):
+            state = step(state, s)
+            flor.log('g', state.g)
+    """)
+    rep = detect_probes(old, new)
+    assert rep.probed_blocks == {"L3"}         # inner loop line in OLD source
+    assert not rep.suspicious
+
+
+def test_probe_detection_flags_non_additive_edit():
+    old = "for i in range(3):\n    x = f(i)\n"
+    new = "for i in range(3):\n    x = g(i)\n"
+    rep = detect_probes(old, new)
+    assert rep.suspicious

@@ -1,0 +1,38 @@
+"""Pipeline stage-scan: equivalence with sequential execution."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.parallel.pipeline import bubble_fraction, stage_scan
+
+
+def _mk(S, d, key):
+    return {"w": jax.random.normal(key, (S, d, d)) * 0.1,
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (S, d)) * 0.1}
+
+
+def _stage(p, h):
+    return jnp.tanh(h @ p["w"] + p["b"])
+
+
+@pytest.mark.parametrize("S,M", [(2, 2), (4, 4), (4, 8), (3, 6)])
+def test_stage_scan_matches_sequential(S, M):
+    d, B = 16, 8 * M // np.gcd(8, M)
+    B = M * 2
+    params = _mk(S, d, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, d))
+
+    seq = x
+    for s in range(S):
+        seq = _stage(jax.tree_util.tree_map(lambda a: a[s], params), seq)
+
+    pipe = jax.jit(lambda p, x: stage_scan(_stage, p, x, microbatches=M))(
+        params, x)
+    np.testing.assert_allclose(np.asarray(pipe), np.asarray(seq), atol=1e-5)
+
+
+def test_bubble_fraction():
+    assert bubble_fraction(4, 4) == 3 / 7
+    assert bubble_fraction(1, 8) == 0.0
+    assert bubble_fraction(4, 60) < 0.05

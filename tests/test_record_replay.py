@@ -1,0 +1,219 @@
+"""End-to-end Flor behaviour: record -> probe -> replay, exactness, weak vs
+strong init, deferred checks catching injected corruption, script tier."""
+import os
+import shutil
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+import repro.flor as flor
+from repro.data import synthetic_batch
+from repro.train.step import build_train_step
+
+EPOCHS, STEPS = 5, 2
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = C.get_smoke("florbench-100m").replace(
+        num_layers=2, d_model=64, num_heads=2, num_kv_heads=2, d_ff=128,
+        vocab_size=512, head_dim=32)
+    init_state, train_step = build_train_step(cfg)
+    return cfg, jax.jit(init_state), jax.jit(train_step)
+
+
+def _loop(cfg, init_state, ts, probe=False):
+    state = init_state(jax.random.PRNGKey(0))
+    for epoch in flor.generator(range(EPOCHS)):
+        if flor.skipblock.step_into("train"):
+            for s in range(STEPS):
+                state, m = ts(state, synthetic_batch(cfg, 2, 32,
+                                                     epoch * STEPS + s))
+                if probe:
+                    flor.log("probe_gnorm", m["grad_norm"])
+            flor.log("loss", m["loss"])
+        state = flor.skipblock.end("train", state)
+    return state
+
+
+def _leaves_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        if not np.array_equal(np.asarray(x), np.asarray(y)):
+            return False
+    return True
+
+
+def _record(run_dir, tiny, adaptive=False):
+    cfg, init_state, ts = tiny
+    flor.init(run_dir, mode="record", adaptive=adaptive)
+    final = _loop(cfg, init_state, ts)
+    flor.finish()
+    return final
+
+
+def test_record_then_skip_replay_exact(tmp_path, tiny):
+    run = str(tmp_path / "run")
+    final = _record(run, tiny)
+    cfg, init_state, ts = tiny
+    flor.init(run, mode="replay", probed=set())
+    out = _loop(cfg, init_state, ts)
+    flor.finish()
+    assert _leaves_equal(final, out)
+
+
+def test_probed_replay_reexecutes_and_matches(tmp_path, tiny):
+    run = str(tmp_path / "run")
+    final = _record(run, tiny)
+    cfg, init_state, ts = tiny
+    flor.init(run, mode="replay", probed={"train"})
+    out = _loop(cfg, init_state, ts, probe=True)
+    flor.finish()
+    assert _leaves_equal(final, out)
+    rec, reps = flor.run_logs(run)
+    res = flor.deferred_check(rec, reps)
+    assert res.ok and res.hindsight_only == EPOCHS * STEPS
+
+
+@pytest.mark.parametrize("init_mode", ["strong", "weak"])
+@pytest.mark.parametrize("nworkers", [2, 3])
+def test_parallel_replay_partitions_match(tmp_path, tiny, init_mode, nworkers):
+    run = str(tmp_path / f"run_{init_mode}_{nworkers}")
+    final = _record(run, tiny)
+    cfg, init_state, ts = tiny
+    last = None
+    for pid in range(nworkers):
+        flor.init(run, mode="replay", pid=pid, nworkers=nworkers,
+                  init_mode=init_mode, probed={"train"})
+        last = _loop(cfg, init_state, ts)
+        flor.finish()
+    assert _leaves_equal(final, last)          # final partition ends at truth
+    rec, reps = flor.run_logs(run)
+    res = flor.deferred_check(rec, reps)
+    assert res.ok, res.anomalies
+
+
+def test_weak_init_uses_nearest_checkpoint_under_sparsity(tmp_path, tiny):
+    """Adaptive record may skip checkpoints; weak init must re-execute the
+    gap from the nearest one instead of silently starting from garbage."""
+    run = str(tmp_path / "run")
+    cfg, init_state, ts = tiny
+    # force sparse: adaptive on, huge fake materialization cost
+    flor.init(run, mode="record", adaptive=True)
+    ctx = flor.get_context()
+    ctx.controller.epsilon = 1e-6              # nothing passes after epoch 0
+    final = _loop(cfg, init_state, ts)
+    flor.finish()
+    keys = [k for k in ctx.store.list_keys()]
+    assert len(keys) < EPOCHS                  # sparse indeed
+
+    flor.init(run, mode="replay", pid=1, nworkers=2, init_mode="weak",
+              probed={"train"})
+    out = _loop(cfg, init_state, ts)
+    flor.finish()
+    assert _leaves_equal(final, out)
+
+
+def test_deferred_check_catches_corruption(tmp_path, tiny):
+    """Tamper with a stored checkpoint chunk; replay from it must produce a
+    fingerprint anomaly (paper section 5.2.2)."""
+    run = str(tmp_path / "run")
+    _record(run, tiny)
+    cfg, init_state, ts = tiny
+    # corrupt epoch-2 checkpoint: rewrite manifest to point at a chunk of
+    # zeros (simulates a missed side-effect / bad dedup)
+    from repro.checkpoint import CheckpointStore
+    store = CheckpointStore(os.path.join(run, "store"))
+    man = store.get_manifest("train@2.0")
+    victim = man["leaves"][2]
+    z = np.zeros(int(np.prod(victim["shape"]) or 1),
+                 np.dtype(victim["dtype"]))
+    h, _, _ = store._put_chunk(z.tobytes())
+    victim["chunks"] = [h] * len(victim["chunks"])
+    import msgpack
+    with open(os.path.join(store.root, "manifests",
+                           "train_at_2.0.msgpack"), "wb") as f:
+        f.write(msgpack.packb(man))
+
+    # worker 1 weak-inits from the corrupted epoch-2 checkpoint
+    flor.init(run, mode="replay", pid=1, nworkers=2, init_mode="weak",
+              probed={"train"})
+    _loop(cfg, init_state, ts)
+    flor.finish()
+    rec, reps = flor.run_logs(run)
+    res = flor.deferred_check(rec, reps)
+    assert not res.ok and len(res.anomalies) >= 1
+
+
+def test_script_tier_end_to_end(tmp_path):
+    """`import flor` is the only user-visible change (paper section 3)."""
+    script = tmp_path / "train_script.py"
+    script.write_text(textwrap.dedent("""
+        import jax
+        import repro.configs as C
+        from repro.data import synthetic_batch
+        from repro.train.step import build_train_step
+        cfg = C.get_smoke('florbench-100m').replace(
+            num_layers=2, d_model=64, num_heads=2, num_kv_heads=2, d_ff=128,
+            vocab_size=512, head_dim=32)
+        init_state, train_step = build_train_step(cfg)
+        ts = jax.jit(train_step)
+        state = jax.jit(init_state)(jax.random.PRNGKey(0))
+        metrics = {}
+        for epoch in range(3):
+            for s in range(2):
+                batch = synthetic_batch(cfg, 2, 32, epoch * 2 + s)
+                state, metrics = ts(state, batch)
+            flor.log('loss', metrics['loss'])
+    """))
+    from repro.core.instrument import exec_instrumented
+    from repro.core.probes import detect_probes
+    run = str(tmp_path / "run")
+    ns, report = exec_instrumented(str(script), run_dir=run, mode="record")
+    assert report.instrumented           # the inner loop got a SkipBlock
+
+    probed_src = script.read_text().replace(
+        "state, metrics = ts(state, batch)",
+        "state, metrics = ts(state, batch)\n        "
+        "flor.log('probe', metrics['grad_norm'])")
+    probed_path = tmp_path / "probed.py"
+    probed_path.write_text(probed_src)
+
+    from repro.checkpoint import CheckpointStore
+    store = CheckpointStore(os.path.join(run, "store"))
+    rep = detect_probes(store.get_meta("source")["src"], probed_src)
+    assert rep.probed_blocks
+    exec_instrumented(str(probed_path), run_dir=run, mode="replay",
+                      probed=rep.probed_blocks)
+    rec, reps = flor.run_logs(run)
+    res = flor.deferred_check(rec, reps)
+    assert res.ok and res.hindsight_only == 6
+
+
+def test_sampling_replay_random_access(tmp_path, tiny):
+    """Paper section 8 POC: probe a random SUBSET of epochs; each sampled
+    epoch re-executes from the nearest checkpoint and its probe values match
+    a full sequential replay."""
+    run = str(tmp_path / "run")
+    _record(run, tiny)
+    cfg, init_state, ts = tiny
+    flor.init(run, mode="replay", probed={"train"})
+    state = init_state(jax.random.PRNGKey(0))
+    sampled_losses = {}
+    for epoch in flor.sampling_generator(range(EPOCHS), sample=[1, 3]):
+        if flor.skipblock.step_into("train"):
+            for s in range(STEPS):
+                state, m = ts(state, synthetic_batch(cfg, 2, 32,
+                                                     epoch * STEPS + s))
+            if flor.get_context().replay_phase == "exec":
+                sampled_losses[epoch] = float(m["loss"])
+                flor.log("loss", m["loss"])
+        state = flor.skipblock.end("train", state)
+    flor.finish()
+    assert set(sampled_losses) == {1, 3}
+    rec, reps = flor.run_logs(run)
+    res = flor.deferred_check(rec, reps)
+    assert res.ok, res.anomalies
