@@ -1,2 +1,3 @@
 from repro.checkpoint.store import CheckpointStore  # noqa: F401
 from repro.checkpoint.async_writer import AsyncWriter  # noqa: F401
+from repro.checkpoint.pipeline import CheckpointPipeline  # noqa: F401

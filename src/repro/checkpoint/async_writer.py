@@ -3,12 +3,21 @@
 The paper forks a child process to snapshot mutable PyTorch tensors with
 copy-on-write. JAX arrays are immutable, so a "snapshot" is a reference —
 submit() returns after capturing references; a writer thread then performs
-device->host transfer (jax.device_get releases the GIL during the DMA),
-chunking, hashing, compression and I/O. A bounded queue applies backpressure
-so record can never run unboundedly ahead of the disk.
+the heavy half of materialization. A bounded queue applies backpressure so
+record can never run unboundedly ahead of the disk.
 
-Materialization wall time per checkpoint is reported to a callback — that is
-the M_i the adaptive controller (core/adaptive.py) consumes.
+AsyncWriter is a generic STAGE: the unit of work is a job callable
+``fn(store) -> stat dict`` executed in FIFO order on the writer thread.
+
+* ``submit(key, tree, meta)`` — the classic whole-tree path: the job does
+  device->host transfer of every leaf (jax.device_get releases the GIL
+  during the DMA), chunking, hashing, compression and I/O.
+* ``submit_job(key, fn)`` — the delta pipeline's path: the pipeline has
+  already gathered only the CHANGED blocks to host; the job just hashes,
+  compresses, writes, and emits the manifest.
+
+Materialization wall time per job is reported to a callback — that is the
+M_i the adaptive controller (core/adaptive.py) consumes.
 """
 from __future__ import annotations
 
@@ -16,9 +25,6 @@ import queue
 import threading
 import time
 from typing import Callable, Optional
-
-import jax
-import numpy as np
 
 
 class AsyncWriter:
@@ -37,12 +43,11 @@ class AsyncWriter:
             item = self._q.get()
             if item is None:
                 return
-            key, tree, meta = item
+            key, fn = item
             try:
                 t0 = time.perf_counter()
-                host_tree = jax.tree_util.tree_map(
-                    lambda x: np.asarray(jax.device_get(x)), tree)
-                stat = self.store.put_tree(key, host_tree, meta)
+                stat = fn(self.store) or {}
+                stat.setdefault("key", key)
                 stat["materialize_s"] = time.perf_counter() - t0
                 self._stats.append(stat)
                 if self._on_mat:
@@ -52,17 +57,23 @@ class AsyncWriter:
             finally:
                 self._q.task_done()
 
-    def submit(self, key: str, tree, meta: Optional[dict] = None,
-               block: bool = True) -> bool:
-        """Enqueue a checkpoint. Returns False if the queue is full and
-        block=False (caller may skip this checkpoint — bounded overhead)."""
+    def submit_job(self, key: str, fn: Callable, block: bool = True) -> bool:
+        """Enqueue a materialization job. Returns False if the queue is full
+        and block=False (caller may skip this checkpoint — bounded
+        overhead)."""
         if self._err:
             raise self._err
         try:
-            self._q.put((key, tree, meta), block=block)
+            self._q.put((key, fn), block=block)
             return True
         except queue.Full:
             return False
+
+    def submit(self, key: str, tree, meta: Optional[dict] = None,
+               block: bool = True) -> bool:
+        """Whole-tree checkpoint (v1 manifest): transfer + store in the
+        background."""
+        return self.submit_job(key, _full_tree_job(key, tree, meta), block)
 
     def drain(self):
         self._q.join()
@@ -77,3 +88,13 @@ class AsyncWriter:
     @property
     def stats(self):
         return list(self._stats)
+
+
+def _full_tree_job(key: str, tree, meta: Optional[dict]) -> Callable:
+    def job(store):
+        import jax
+        import numpy as np
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+        return store.put_tree(key, host_tree, meta)
+    return job

@@ -8,17 +8,37 @@ of the leaf, and only rows with changed digests are gathered and copied to
 host. On fine-tuning-shaped workloads (frozen experts/embeddings) this cuts
 device->host traffic by the frozen fraction — the same economics as the
 paper's lean checkpointing, one level lower.
+
+`CheckpointPipeline` (checkpoint/pipeline.py) is the consumer: it turns the
+gathered u32 blocks back into native leaf bytes (`blocks_to_native_bytes`)
+and hands them to the writer stage.
 """
 from __future__ import annotations
-
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.ops import CHUNK_WORDS, _as_u32_blocks, changed_chunks, \
-    fingerprint_leaf
+from repro.kernels.ops import (CHUNK_WORDS, changed_chunks,
+                               fingerprint_leaf, gather_changed_blocks,
+                               native_bytes_per_word)
+
+
+def blocks_to_native_bytes(blocks: np.ndarray, dtype) -> list[bytes]:
+    """Convert gathered [C, W] uint32 blocks back to the original array's
+    byte representation, one bytes object per chunk. Inverts the dtype
+    widening of kernels.ops._as_u32_blocks (each word carries
+    `native_bytes_per_word(dtype)` original bytes; padding words at the tail
+    of the last chunk are zeros and are truncated by the caller)."""
+    bpw = native_bytes_per_word(dtype)
+    blocks = np.ascontiguousarray(blocks, dtype=np.uint32)
+    if bpw == 4:
+        rows = blocks
+    elif bpw == 2:
+        rows = blocks.astype(np.uint16)
+    else:
+        rows = blocks.astype(np.uint8)
+    return [rows[i].tobytes() for i in range(rows.shape[0])]
 
 
 class DeltaTracker:
@@ -28,26 +48,58 @@ class DeltaTracker:
 
     def delta(self, path: str, leaf) -> dict:
         """Returns {digest, mask (np bool [G]), changed_blocks (np [C, W]),
-        transferred_bytes, total_bytes}. Updates the stored digest."""
+        changed_idx, transferred_bytes, total_bytes}. Updates the stored
+        digest — call exactly once per MATERIALIZED checkpoint so the mask
+        always means "changed since the last stored checkpoint".
+
+        Host traffic per call: the [G] change mask (one small device_get —
+        jnp.nonzero's implicit size sync cost more than the mask itself),
+        the [G,2] digest, and the changed rows. Rows past the leaf's real
+        byte length (block-padding to the kernel tile) are never gathered,
+        and a fully-unchanged leaf costs ONLY the fingerprint read — the
+        u32 block view is never materialized for it.
+        """
         digest = fingerprint_leaf(leaf, self.chunk_words)
         prev = self._digests.get(path)
-        blocks = _as_u32_blocks(leaf, self.chunk_words)
-        if prev is None or prev.shape != digest.shape:
-            mask = jnp.ones((digest.shape[0],), jnp.int32)
-        else:
-            mask = changed_chunks(digest, prev)
-        self._digests[path] = digest
-        idx = jnp.nonzero(mask)[0]                    # host sync (counts only)
-        changed = np.asarray(jax.device_get(jnp.take(blocks, idx, axis=0)))
         g = int(digest.shape[0])
+        if prev is None or prev.shape != digest.shape:
+            mask = np.ones((g,), bool)                # first sight: all new
+        else:
+            mask = np.asarray(jax.device_get(
+                changed_chunks(digest, prev))).astype(bool)
+        self._digests[path] = digest
+        nbytes = int(leaf.nbytes) if hasattr(leaf, "nbytes") \
+            else int(np.asarray(leaf).nbytes)
+        bpw = native_bytes_per_word(leaf.dtype)
+        n_real = max(1, -(-nbytes // (self.chunk_words * bpw)))
+        idx = np.flatnonzero(mask[:n_real])
+        if idx.size:
+            # pad the gather width to the next power of two (capped at the
+            # chunk count) so fluctuating change counts compile O(log G)
+            # gather variants per leaf instead of one per novel count
+            c = int(idx.size)
+            cap = min(1 << (c - 1).bit_length(), n_real)
+            idx_pad = np.concatenate(
+                [idx, np.full(cap - c, idx[0], idx.dtype)])
+            rows = np.asarray(jax.device_get(gather_changed_blocks(
+                leaf, jnp.asarray(idx_pad, jnp.int32), self.chunk_words)))
+            changed = np.ascontiguousarray(rows[:c])
+        else:
+            changed = np.zeros((0, self.chunk_words), np.uint32)
         return {
             "digest": np.asarray(jax.device_get(digest)),
-            "mask": np.asarray(jax.device_get(mask)).astype(bool),
+            "mask": mask,
             "changed_blocks": changed,
-            "changed_idx": np.asarray(jax.device_get(idx)),
+            "changed_idx": idx,
             "transferred_bytes": int(changed.nbytes),
             "total_bytes": int(g * self.chunk_words * 4),
         }
+
+    def forget(self, path: str):
+        """Drop one leaf's digests — the next delta() transfers everything
+        (used when a leaf's dtype changes without changing its block count,
+        which the digest comparison alone cannot flag as a full rewrite)."""
+        self._digests.pop(path, None)
 
     def reset(self):
         self._digests.clear()

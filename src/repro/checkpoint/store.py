@@ -1,14 +1,28 @@
 """Content-addressed, chunked checkpoint store (lean checkpointing substrate).
 
-Every pytree leaf is serialized to raw bytes, split into fixed-size chunks,
-and stored under its blake2b hash (zstd-compressed). A checkpoint is a small
-msgpack manifest mapping leaf paths to chunk-hash lists.
+Every pytree leaf is serialized to raw bytes, split into chunks, and stored
+under its blake2b hash (compressed). A checkpoint is a small manifest mapping
+leaf paths to chunk-hash lists.
 
 Dedup IS the paper's "lean checkpointing" at chunk granularity: unchanged
 leaves (frozen weights in fine-tuning, optimizer slots of frozen params,
 repeated epochs after convergence) share chunks with earlier checkpoints, so
 the marginal bytes of a checkpoint track what actually CHANGED — without any
 static analysis, because JAX state is explicit (DESIGN.md section 2).
+
+Two manifest generations coexist:
+
+* v1 (``put_tree``) — full manifests; every leaf lists every chunk hash.
+* v2 (written by ``checkpoint/pipeline.py``) — ``kind`` is ``"full"`` or
+  ``"delta"``. A delta manifest names a ``parent`` key and stores only the
+  chunk hashes that changed since the parent; unchanged hashes are inherited
+  by walking the parent chain at read time (``resolve_manifest``). The
+  pipeline bounds chain length by writing a full manifest every K
+  checkpoints, so resolution never chases unbounded history.
+
+``gc(live_keys)`` removes manifests outside the parent-closure of the live
+set and any chunk no surviving manifest references — long record runs with
+rolling retention stay bounded on disk.
 """
 from __future__ import annotations
 
@@ -16,13 +30,15 @@ import hashlib
 import json
 import os
 import threading
-from typing import Any, Optional
+from typing import Any, Iterable, Optional
 
-import msgpack
 import numpy as np
-import zstandard as zstd
+
+from repro.utils.codec import Compressor, pack_obj, unpack_obj
 
 CHUNK = 4 * 1024 * 1024
+
+MANIFEST_VERSION = 2
 
 
 def _leaf_to_np(x) -> np.ndarray:
@@ -34,11 +50,23 @@ def _hash(b: bytes) -> str:
     return hashlib.blake2b(b, digest_size=16).hexdigest()
 
 
+def np_dtype(name: str) -> np.dtype:
+    """np.dtype from a manifest dtype string, including ml_dtypes names
+    (``bfloat16`` etc.) that plain numpy does not understand."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
 class CheckpointStore:
     """Thread-safe on-disk store. Layout:
        <root>/objects/<h[:2]>/<h>.zst      — chunk payloads
        <root>/manifests/<key>.msgpack      — checkpoint manifests
        <root>/meta/<name>.json             — run-level metadata
+    (File extensions are historical; the actual codec is sniffed from
+    content, see utils/codec.py.)
     """
 
     def __init__(self, root: str, compress_level: int = 3):
@@ -46,51 +74,152 @@ class CheckpointStore:
         os.makedirs(os.path.join(root, "objects"), exist_ok=True)
         os.makedirs(os.path.join(root, "manifests"), exist_ok=True)
         os.makedirs(os.path.join(root, "meta"), exist_ok=True)
-        self._level = compress_level
-        # zstd (de)compressor objects are NOT thread-safe for concurrent
-        # calls; keep per-thread instances (concurrent writers segfaulted)
-        self._tl = threading.local()
+        self._codec = Compressor(level=compress_level)
         self._lock = threading.Lock()
-
-    @property
-    def _cctx(self):
-        c = getattr(self._tl, "cctx", None)
-        if c is None:
-            c = self._tl.cctx = zstd.ZstdCompressor(level=self._level)
-        return c
-
-    @property
-    def _dctx(self):
-        d = getattr(self._tl, "dctx", None)
-        if d is None:
-            d = self._tl.dctx = zstd.ZstdDecompressor()
-        return d
+        # objects/<h[:2]>/ fan-out dirs, cached to avoid a mkdir syscall on
+        # every chunk (the delta pipeline writes many small chunks)
+        self._dirs: set[str] = set()
 
     # ------------------------------------------------------------ chunks --
     def _chunk_path(self, h: str) -> str:
         return os.path.join(self.root, "objects", h[:2], h + ".zst")
 
-    def _put_chunk(self, data: bytes) -> tuple[str, int, bool]:
-        """Returns (hash, bytes_written, was_new)."""
+    def put_chunk(self, data: bytes) -> tuple[str, int, bool]:
+        """Store one content-addressed chunk.
+        Returns (hash, compressed_bytes_written, was_new)."""
         h = _hash(data)
         path = self._chunk_path(h)
         if os.path.exists(path):
             return h, 0, False
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        payload = self._cctx.compress(data)
+        d = os.path.dirname(path)
+        if d not in self._dirs:
+            os.makedirs(d, exist_ok=True)
+            self._dirs.add(d)
+        payload = self._codec.compress(data)
         tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
         with open(tmp, "wb") as f:
             f.write(payload)
         os.replace(tmp, path)          # atomic: crash-safe
         return h, len(payload), True
 
-    def _get_chunk(self, h: str) -> bytes:
+    # kept under the old private name too — tests and older callers use it
+    _put_chunk = put_chunk
+
+    def get_chunk(self, h: str) -> bytes:
         with open(self._chunk_path(h), "rb") as f:
-            return self._dctx.decompress(f.read())
+            return self._codec.decompress(f.read())
+
+    _get_chunk = get_chunk
+
+    # --------------------------------------------------------- manifests --
+    def _manifest_path(self, key: str) -> str:
+        return os.path.join(self.root, "manifests", _safe(key) + ".msgpack")
+
+    def put_manifest(self, manifest: dict):
+        """Atomically persist a manifest (crash-safe tmp+rename)."""
+        mpath = self._manifest_path(manifest["key"])
+        tmp = mpath + f".tmp.{os.getpid()}.{threading.get_ident()}"
+        with open(tmp, "wb") as f:
+            f.write(pack_obj(manifest))
+        os.replace(tmp, mpath)
+
+    def get_manifest(self, key: str) -> dict:
+        with open(self._manifest_path(key), "rb") as f:
+            return unpack_obj(f.read())
+
+    def delete_manifest(self, key: str, delete_chunks: bool = False):
+        """Remove one manifest; optionally its directly-listed chunks.
+        ``delete_chunks`` is only safe when the caller knows the chunks are
+        not shared (e.g. the unique random calibration probe)."""
+        if delete_chunks:
+            try:
+                m = self.get_manifest(key)
+            except FileNotFoundError:
+                m = None
+            if m is not None:
+                for h in _manifest_chunk_hashes(m):
+                    try:
+                        os.remove(self._chunk_path(h))
+                    except FileNotFoundError:
+                        pass
+        try:
+            os.remove(self._manifest_path(key))
+        except FileNotFoundError:
+            pass
+
+    def resolve_manifest(self, key: str, _max_depth: int = 10_000) -> dict:
+        """Return a manifest with every leaf's full chunk-hash list, walking
+        the delta parent chain as needed. v1 and full v2 manifests return
+        (normalized) as-is."""
+        manifest = self.get_manifest(key)
+        if manifest.get("version", 1) < 2 or manifest.get("kind", "full") == "full":
+            return manifest
+        # delta: seed hole-filled lists from this manifest, then walk parents
+        leaves = []
+        unresolved: dict[str, dict] = {}
+        for leaf in manifest["leaves"]:
+            n = int(leaf["n_chunks"])
+            if leaf.get("chunks"):
+                # already-complete list (e.g. a re-saved resolved manifest)
+                chunks = list(leaf["chunks"])
+            else:
+                chunks = [None] * n
+                for i, h in (leaf.get("delta") or {}).items():
+                    chunks[int(i)] = h
+            out = dict(leaf)
+            out.pop("delta", None)
+            out["chunks"] = chunks
+            leaves.append(out)
+            if any(c is None for c in chunks):
+                unresolved[leaf["path"]] = out
+        parent = manifest.get("parent")
+        depth = 0
+        while unresolved and parent is not None:
+            depth += 1
+            if depth > _max_depth:
+                raise RuntimeError(f"delta chain too deep resolving {key!r}")
+            try:
+                pm = self.get_manifest(parent)
+            except FileNotFoundError as e:
+                raise RuntimeError(
+                    f"delta manifest {key!r} references missing parent "
+                    f"{parent!r} — deleted outside store.gc (which retains "
+                    f"the parent closure)?") from e
+            by_path = {lf["path"]: lf for lf in pm["leaves"]}
+            for path, out in list(unresolved.items()):
+                src = by_path.get(path)
+                if src is None:
+                    continue
+                if "chunks" in src and src["chunks"] is not None:
+                    for i, c in enumerate(out["chunks"]):
+                        if c is None:
+                            out["chunks"][i] = src["chunks"][i]
+                else:
+                    for i, h in (src.get("delta") or {}).items():
+                        i = int(i)
+                        if out["chunks"][i] is None:
+                            out["chunks"][i] = h
+                if all(c is not None for c in out["chunks"]):
+                    del unresolved[path]
+            parent = pm.get("parent") \
+                if pm.get("version", 1) >= 2 and pm.get("kind") == "delta" \
+                else None
+        if unresolved:
+            missing = {p: [i for i, c in enumerate(o["chunks"]) if c is None]
+                       for p, o in unresolved.items()}
+            raise RuntimeError(
+                f"unresolvable delta manifest {key!r}: missing chunks "
+                f"{missing} (parent chain broken — was the store gc'd with "
+                f"an incomplete live set?)")
+        resolved = dict(manifest)
+        resolved["leaves"] = leaves
+        return resolved
 
     # ------------------------------------------------------------- trees --
     def put_tree(self, key: str, tree: Any, meta: Optional[dict] = None) -> dict:
-        """Serialize a pytree of arrays. Returns stats incl. dedup savings."""
+        """Serialize a pytree of arrays as a v1 full manifest.
+        Returns stats incl. dedup savings. (The delta-aware record path lives
+        in checkpoint/pipeline.py; this remains the simple whole-tree API.)"""
         import jax
         flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
         leaves = []
@@ -104,7 +233,7 @@ class CheckpointStore:
             chunks = []
             for off in range(0, max(len(raw), 1), CHUNK):
                 piece = raw[off:off + CHUNK]
-                h, nb, new = self._put_chunk(piece)
+                h, nb, new = self.put_chunk(piece)
                 chunks.append(h)
                 new_bytes += nb
                 total_bytes += len(piece)
@@ -122,29 +251,26 @@ class CheckpointStore:
             "leaves": leaves,
             "meta": meta or {},
         }
-        mpath = os.path.join(self.root, "manifests", _safe(key) + ".msgpack")
-        tmp = mpath + f".tmp.{os.getpid()}"
-        with open(tmp, "wb") as f:
-            f.write(msgpack.packb(manifest))
-        os.replace(tmp, mpath)
+        self.put_manifest(manifest)
         return {"key": key, "total_bytes": total_bytes, "new_bytes": new_bytes,
                 "total_chunks": total_chunks, "new_chunks": new_chunks}
 
-    def get_manifest(self, key: str) -> dict:
-        mpath = os.path.join(self.root, "manifests", _safe(key) + ".msgpack")
-        with open(mpath, "rb") as f:
-            return msgpack.unpackb(f.read())
-
     def get_tree(self, key: str, like: Any = None):
-        """Load a checkpoint. If `like` (a pytree with the same structure) is
-        given, arrays are unflattened into that structure; otherwise a flat
-        {path: array} dict is returned."""
+        """Load a checkpoint (delta manifests resolve transparently). If
+        `like` (a pytree with the same structure) is given, arrays are
+        unflattened into that structure; otherwise a flat {path: array} dict
+        is returned. Returned arrays are WRITABLE copies — np.frombuffer
+        views are read-only and silently break in-place consumers."""
         import jax
-        manifest = self.get_manifest(key)
+        manifest = self.resolve_manifest(key)
         arrays = []
         for leaf in manifest["leaves"]:
-            raw = b"".join(self._get_chunk(h) for h in leaf["chunks"])
-            arr = np.frombuffer(raw, dtype=np.dtype(leaf["dtype"]))
+            raw = b"".join(self.get_chunk(h) for h in leaf["chunks"])
+            dt = np_dtype(leaf["dtype"])
+            nbytes = int(leaf.get("nbytes",
+                                  int(np.prod(leaf["shape"], dtype=np.int64))
+                                  * dt.itemsize))
+            arr = np.frombuffer(raw[:nbytes], dtype=dt).copy()
             arrays.append(arr.reshape(leaf["shape"]))
         if like is not None:
             flat, treedef = jax.tree_util.tree_flatten(like)
@@ -154,13 +280,62 @@ class CheckpointStore:
         return {leaf["path"]: a for leaf, a in zip(manifest["leaves"], arrays)}
 
     def has(self, key: str) -> bool:
-        return os.path.exists(os.path.join(self.root, "manifests",
-                                           _safe(key) + ".msgpack"))
+        return os.path.exists(self._manifest_path(key))
 
     def list_keys(self) -> list[str]:
         d = os.path.join(self.root, "manifests")
         return sorted(f[: -len(".msgpack")] for f in os.listdir(d)
                       if f.endswith(".msgpack"))
+
+    # ---------------------------------------------------------------- gc --
+    def gc(self, live_keys: Iterable[str]) -> dict:
+        """Delete manifests outside the parent-closure of ``live_keys`` and
+        every chunk no surviving manifest references. Delta parents of live
+        manifests are always retained (deleting them would break resolve).
+        Returns {kept_manifests, deleted_manifests, kept_chunks,
+        deleted_chunks, deleted_bytes}."""
+        with self._lock:
+            # work in sanitized-name space throughout: callers pass raw keys
+            # ('train@2.0') but list_keys() yields file names ('train_at_2.0')
+            live = {_safe(k) for k in live_keys}
+            # parent closure: a live delta manifest pins its ancestry
+            frontier = list(live)
+            while frontier:
+                k = frontier.pop()
+                try:
+                    m = self.get_manifest(k)
+                except FileNotFoundError:
+                    live.discard(k)
+                    continue
+                parent = _safe(m["parent"]) if m.get("parent") else None
+                if parent and parent not in live:
+                    live.add(parent)
+                    frontier.append(parent)
+            referenced: set[str] = set()
+            deleted_manifests = 0
+            for key in self.list_keys():
+                if key not in live:
+                    self.delete_manifest(key)
+                    deleted_manifests += 1
+                    continue
+                referenced.update(_manifest_chunk_hashes(self.get_manifest(key)))
+            kept = deleted = deleted_bytes = 0
+            obj_root = os.path.join(self.root, "objects")
+            for dirpath, _, files in os.walk(obj_root):
+                for fn in files:
+                    if not fn.endswith(".zst"):
+                        continue          # stray .tmp from a crashed writer
+                    h = fn[: -len(".zst")]
+                    p = os.path.join(dirpath, fn)
+                    if h in referenced:
+                        kept += 1
+                    else:
+                        deleted_bytes += os.path.getsize(p)
+                        os.remove(p)
+                        deleted += 1
+            return {"kept_manifests": len(live), "deleted_manifests": deleted_manifests,
+                    "kept_chunks": kept, "deleted_chunks": deleted,
+                    "deleted_bytes": deleted_bytes}
 
     # -------------------------------------------------------------- meta --
     def put_meta(self, name: str, obj: dict):
@@ -183,6 +358,17 @@ class CheckpointStore:
             for fn in files:
                 total += os.path.getsize(os.path.join(dirpath, fn))
         return total
+
+
+def _manifest_chunk_hashes(manifest: dict):
+    """Every chunk hash DIRECTLY listed by a manifest (no chain resolution —
+    ancestors list their own)."""
+    for leaf in manifest["leaves"]:
+        for h in leaf.get("chunks") or []:
+            if h is not None:
+                yield h
+        for h in (leaf.get("delta") or {}).values():
+            yield h
 
 
 def _safe(key: str) -> str:

@@ -27,6 +27,10 @@ class BlockStats:
     k: int = 0                  # checkpoints materialized so far
     C: EMA = field(default_factory=lambda: EMA(0.7))   # compute time
     M: EMA = field(default_factory=lambda: EMA(0.7))   # materialization time
+    # transferred/logical bytes per checkpoint: with the delta pipeline a
+    # mostly-frozen state transfers a small fraction of its nbytes, and the
+    # pre-measurement M estimate must reflect that (honest M_i)
+    tfrac: EMA = field(default_factory=lambda: EMA(0.7))
     pending: int = 0            # submitted but not yet measured
 
 
@@ -65,7 +69,13 @@ class AdaptiveController:
         C = b.C.value
         if C <= 0:
             return True
-        M = b.M.value if b.M.count else est_bytes / self.write_bps
+        if b.M.count:
+            M = b.M.value
+        else:
+            # scale the logical size by the observed delta-transfer fraction
+            # (1.0 until the pipeline has reported one)
+            frac = b.tfrac.value if b.tfrac.count else 1.0
+            M = est_bytes * frac / self.write_bps
         k_eff = b.k + b.pending
         thr = (b.n / (k_eff + 1)) * min(1.0 / (1.0 + self.c.value),
                                         self.epsilon)
@@ -76,6 +86,15 @@ class AdaptiveController:
         b.k += 1
         b.pending = max(0, b.pending - 1)
         b.M.update(materialize_s)
+
+    def note_transfer(self, block_id: str, transferred_bytes: int,
+                      logical_bytes: int):
+        """Called at SUBMIT time (the fraction is known before the write
+        stage finishes), so the pre-measurement M estimate of a block whose
+        first materialization is still pending already reflects delta
+        savings."""
+        if logical_bytes:
+            self._b(block_id).tfrac.update(transferred_bytes / logical_bytes)
 
     def note_submitted(self, block_id: str):
         self._b(block_id).pending += 1
@@ -99,7 +118,8 @@ class AdaptiveController:
             "epsilon": self.epsilon,
             "c": self.c.value,
             "blocks": {
-                bid: {"n": b.n, "k": b.k, "C": b.C.value, "M": b.M.value}
+                bid: {"n": b.n, "k": b.k, "C": b.C.value, "M": b.M.value,
+                      "transfer_frac": b.tfrac.value if b.tfrac.count else None}
                 for bid, b in self.blocks.items()
             },
         }

@@ -12,7 +12,7 @@ import os
 import time
 from typing import Optional
 
-from repro.checkpoint import AsyncWriter, CheckpointStore
+from repro.checkpoint import CheckpointPipeline, CheckpointStore
 from repro.core.adaptive import AdaptiveController
 
 _CTX: Optional["FlorContext"] = None
@@ -68,7 +68,8 @@ class FlorContext:
     def __init__(self, run_dir: str, mode: str = "record", *,
                  epsilon: float = 1.0 / 15, adaptive: bool = True,
                  pid: int = 0, nworkers: int = 1, init_mode: str = "strong",
-                 probed: Optional[set] = None, async_materialize: bool = True):
+                 probed: Optional[set] = None, async_materialize: bool = True,
+                 full_manifest_every: int = 8):
         assert mode in ("record", "replay")
         self.run_dir = run_dir
         self.mode = mode
@@ -84,9 +85,15 @@ class FlorContext:
         if adaptive and mode == "record":
             self.controller.write_bps = self._calibrate_store()
         self.async_materialize = async_materialize
-        self.writer = AsyncWriter(
-            self.store, on_materialized=self._on_materialized) \
-            if async_materialize else None
+        # the delta-aware record flow; replay never submits checkpoints, so
+        # it gets no pipeline (and no idle writer thread)
+        self.pipeline = CheckpointPipeline(
+            self.store, async_stage=async_materialize,
+            full_every=full_manifest_every,
+            on_materialized=self._on_materialized) \
+            if mode == "record" else None
+        # backward-compat handle (benchmarks call ctx.writer.drain())
+        self.writer = self.pipeline.writer if self.pipeline else None
         suffix = "record" if mode == "record" else f"replay_p{pid}"
         self.log = FingerprintLog(os.path.join(run_dir, "logs",
                                                f"{suffix}.jsonl"))
@@ -95,16 +102,21 @@ class FlorContext:
         # background-materialization callback bookkeeping: map store key ->
         # block id so M_i lands on the right block
         self._key_to_block: dict[str, str] = {}
+        self.restore_stats: list[dict] = []
 
     def _calibrate_store(self) -> float:
         """One ~8MB probe write measures real serialize+compress+write
-        throughput, so the pre-measurement M estimate is honest."""
+        throughput, so the pre-measurement M estimate is honest. The probe is
+        UNIQUE random data (so its chunks cannot be shared with any real
+        checkpoint) and is deleted afterwards — calibration must not pollute
+        list_keys() or stored_bytes() accounting."""
         import numpy as np
-        rng = np.random.default_rng(0)
+        rng = np.random.default_rng()        # unseeded => unshared chunks
         probe = rng.standard_normal(1 << 21).astype(np.float32)   # 8 MB
         t0 = time.perf_counter()
         self.store.put_tree("__calib__", {"x": probe})
         dt = max(time.perf_counter() - t0, 1e-4)
+        self.store.delete_manifest("__calib__", delete_chunks=True)
         return max(probe.nbytes / dt, 1e7)
 
     # ------------------------------------------------------------ keys ----
@@ -125,35 +137,62 @@ class FlorContext:
     def _on_materialized(self, stat: dict):
         block = self._key_to_block.pop(stat["key"], None)
         if block is not None:
-            self.controller.observe_materialization(block,
-                                                    stat["materialize_s"])
+            # M_i = foreground stall on the training thread (fingerprint +
+            # changed-chunk DMA) + background write stage; counting only the
+            # latter would let the eps-overhead invariant undercount record
+            # cost
+            self.controller.observe_materialization(
+                block,
+                stat["materialize_s"] + stat.get("submit_stall_s", 0.0))
 
     def submit_checkpoint(self, block_id: str, key: str, tree, meta):
+        assert self.pipeline is not None, \
+            "submit_checkpoint is a record-mode operation"
         self._key_to_block[key] = block_id
         self.controller.note_submitted(block_id)
-        if self.writer is not None:
-            self.writer.submit(key, tree, meta)
+        stat = self.pipeline.submit(key, tree, meta, scope=block_id)
+        if stat is not None:
+            self.controller.note_transfer(block_id,
+                                          stat["transferred_bytes"],
+                                          stat["logical_bytes"])
+
+    def restore_checkpoint(self, key: str, like=None):
+        """Load a checkpoint (delta manifests resolve transparently) and
+        account the restore for the controller's restore/materialize ratio
+        and replay diagnostics."""
+        t0 = time.perf_counter()
+        tree = self.store.get_tree(key, like=like)
+        dt = time.perf_counter() - t0
+        self.restore_stats.append({"key": key, "restore_s": dt})
+        return tree, dt
+
+    # ---------------------------------------------------------------- gc --
+    def gc(self, keep_keys: Optional[list] = None) -> dict:
+        """Collect unreferenced chunks. Default live set = every manifest
+        key (removes only orphans from crashed/partial runs); pass
+        `keep_keys` for rolling retention on long record runs. The active
+        delta-chain tips are always kept live — collecting them would leave
+        the pipeline inheriting chunk hashes from deleted manifests, making
+        every subsequent checkpoint unrestorable."""
+        if self.pipeline is not None:
+            self.pipeline.drain()      # don't race in-flight manifests
+        if keep_keys is None:
+            live = self.store.list_keys()
         else:
-            import time as _t
-            t0 = _t.perf_counter()
-            stat = self.store.put_tree(key, _to_host(tree), meta)
-            stat["materialize_s"] = _t.perf_counter() - t0
-            self._on_materialized(stat)
+            live = list(keep_keys)
+            if self.pipeline is not None:
+                live += self.pipeline.chain_keys()
+        return self.store.gc(live)
 
     # ------------------------------------------------------------ finish --
     def finish(self):
-        if self.writer is not None:
-            self.writer.close()
+        if self.pipeline is not None:
+            self.pipeline.close()
+            self.pipeline = None
             self.writer = None
         self.store.put_meta(f"controller_{self.mode}_p{self.pid}",
                             self.controller.snapshot())
         self.log.close()
-
-
-def _to_host(tree):
-    import jax
-    import numpy as np
-    return jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
 
 
 def init(run_dir: str, mode: str = "record", **kw) -> FlorContext:

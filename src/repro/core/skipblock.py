@@ -68,10 +68,9 @@ class _SkipBlockAPI:
             ctx.advance_block(block_id)
             return state
 
-        # skipped: physical restoration from the Loop End Checkpoint
-        t0 = time.perf_counter()
-        restored = ctx.store.get_tree(key, like=state)
-        restore_s = time.perf_counter() - t0
+        # skipped: physical restoration from the Loop End Checkpoint (delta
+        # manifests resolve transparently through the store)
+        restored, restore_s = ctx.restore_checkpoint(key, like=state)
         ctx.controller.observe_restore(block_id, restore_s)
         ctx.advance_block(block_id)
         return restored

@@ -15,6 +15,7 @@ import numpy as np
 from repro.kernels.chunk_delta import changed_mask_pallas, fingerprint_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.quantize import dequantize_pallas, quantize_pallas
+from repro.kernels.ref import changed_mask_ref, fingerprint_ref
 
 CHUNK_WORDS = 1024        # 4 KiB chunks (uint32 words)
 
@@ -42,17 +43,49 @@ def _as_u32_blocks(x: jnp.ndarray, chunk_words: int):
     return raw.reshape(g, chunk_words)
 
 
+def native_bytes_per_word(dtype) -> int:
+    """How many ORIGINAL-array bytes one uint32 word of `_as_u32_blocks`
+    output carries. Must mirror the dtype dispatch above: bf16/f16 widen one
+    2-byte element per word; 4- and 8-byte dtypes are raw views (4 bytes per
+    word); everything else widens one byte per word."""
+    name = dtype if isinstance(dtype, str) else str(np.dtype(dtype))
+    if name in ("bfloat16", "float16"):
+        return 2
+    return 4 if np.dtype(name).itemsize in (4, 8) else 1
+
+
+def _fingerprint(blocks):
+    """Backend dispatch: real Mosaic lowering on TPU; on CPU the vectorized
+    jnp oracle (bit-identical math, see test_kernels) — per-tile interpret
+    mode is orders of magnitude slower and digests never cross processes."""
+    if _interpret():
+        return fingerprint_ref(blocks)
+    return fingerprint_pallas(blocks, interpret=False)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk_words",))
 def fingerprint_leaf(x, chunk_words: int = CHUNK_WORDS):
     """Per-chunk [G,2] uint32 digest of one array (device-side, one pass)."""
-    blocks = _as_u32_blocks(x, chunk_words)
-    return fingerprint_pallas(blocks, interpret=_interpret())
+    return _fingerprint(_as_u32_blocks(x, chunk_words))
 
 
 @jax.jit
 def changed_chunks(digest, prev_digest):
     """bool-ish int32 [G] mask of chunks whose digest changed."""
-    return changed_mask_pallas(digest, prev_digest, interpret=_interpret())
+    if _interpret():
+        return changed_mask_ref(digest, prev_digest).astype(jnp.int32)
+    return changed_mask_pallas(digest, prev_digest, interpret=False)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_words",))
+def gather_changed_blocks(x, idx, chunk_words: int = CHUNK_WORDS):
+    """[C, W] u32 rows of the block view of `x` selected by `idx` — the only
+    device->host payload the delta pipeline transfers per leaf. Deliberately
+    a SEPARATE traced computation from the fingerprint: a fused
+    digest+blocks pass would write a full padded u32 copy of every leaf per
+    checkpoint, even when zero chunks changed; callers skip this entirely
+    for frozen leaves (empty idx)."""
+    return jnp.take(_as_u32_blocks(x, chunk_words), idx, axis=0)
 
 
 @functools.partial(jax.jit, static_argnames=("block",))

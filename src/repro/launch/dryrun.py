@@ -112,13 +112,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     # always archive the optimized HLO (zstd) so the roofline analysis can be
     # re-derived offline without recompiling
     try:
-        import zstandard as zstd
+        from repro.utils.codec import Compressor
         os.makedirs("results/hlo", exist_ok=True)
         tag = f"{arch}_{shape_name}_{'multi' if multi_pod else 'single'}"
         if overrides:
             tag += "__" + "_".join(f"{k}-{v}" for k, v in sorted(overrides.items()))
         with open(f"results/hlo/{tag}.hlo.zst", "wb") as f:
-            f.write(zstd.ZstdCompressor(level=9).compress(hlo.encode()))
+            f.write(Compressor(level=9).compress(hlo.encode()))
     except Exception:
         pass
     from repro.launch.hlo_analysis import analyze

@@ -10,16 +10,15 @@ import argparse
 import json
 import os
 
-import zstandard as zstd
-
 from repro.launch.hlo_analysis import analyze
+from repro.utils.codec import Compressor
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
 
 def reanalyze_json(path: str, hlo_dir: str = "results/hlo"):
     with open(path) as f:
         results = json.load(f)
-    dctx = zstd.ZstdDecompressor()
+    dctx = Compressor()
     for r in results:
         if r.get("status") != "ok":
             continue

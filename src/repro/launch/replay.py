@@ -48,6 +48,31 @@ def worker_main(args):
     flor.finish()
 
 
+def _print_store_summary(run_dir: str):
+    """How the record run's checkpoints are laid out: full vs delta
+    manifests and the longest parent chain a restore has to resolve."""
+    from repro.checkpoint import CheckpointStore
+    store = CheckpointStore(os.path.join(run_dir, "store"))
+    kinds = {"full": 0, "delta": 0}
+    parents = {}
+    for key in store.list_keys():
+        m = store.get_manifest(key)
+        kind = m.get("kind", "full") if m.get("version", 1) >= 2 else "full"
+        kinds[kind] = kinds.get(kind, 0) + 1
+        # index by the manifest's own key: list_keys() returns sanitized
+        # file names, while `parent` refers to raw keys
+        parents[m.get("key", key)] = m.get("parent")
+    longest = 0
+    for key in parents:
+        depth, cur = 0, parents.get(key)
+        while cur is not None and depth <= len(parents):
+            depth, cur = depth + 1, parents.get(cur)
+        longest = max(longest, depth)
+    print(f"store: {kinds.get('full', 0)} full + {kinds.get('delta', 0)} "
+          f"delta manifests, max resolve chain {longest}, "
+          f"{store.stored_bytes() / 2**20:.1f} MiB chunks")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--run-dir", required=True)
@@ -90,6 +115,7 @@ def main():
     wall = time.time() - t0
     print(f"parallel replay: {args.nworkers} workers, wall {wall:.2f}s, "
           f"rc={rcodes}")
+    _print_store_summary(args.run_dir)
     if any(rcodes):
         sys.exit(1)
 

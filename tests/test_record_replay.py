@@ -127,16 +127,15 @@ def test_deferred_check_catches_corruption(tmp_path, tiny):
     # zeros (simulates a missed side-effect / bad dedup)
     from repro.checkpoint import CheckpointStore
     store = CheckpointStore(os.path.join(run, "store"))
-    man = store.get_manifest("train@2.0")
+    # resolve first: the record pipeline may have written a sparse delta
+    # manifest, and the tamper needs a concrete chunk list to rewrite
+    man = store.resolve_manifest("train@2.0")
     victim = man["leaves"][2]
     z = np.zeros(int(np.prod(victim["shape"]) or 1),
                  np.dtype(victim["dtype"]))
     h, _, _ = store._put_chunk(z.tobytes())
     victim["chunks"] = [h] * len(victim["chunks"])
-    import msgpack
-    with open(os.path.join(store.root, "manifests",
-                           "train_at_2.0.msgpack"), "wb") as f:
-        f.write(msgpack.packb(man))
+    store.put_manifest(man)        # codec-agnostic (msgpack or json)
 
     # worker 1 weak-inits from the corrupted epoch-2 checkpoint
     flor.init(run, mode="replay", pid=1, nworkers=2, init_mode="weak",

@@ -13,8 +13,12 @@ from jax.sharding import PartitionSpec as P
 
 
 def _mesh(shape=(2, 2), axes=("data", "model")):
-    # build an ABSTRACT mesh: resolver only needs axis names/sizes
-    return jax.sharding.AbstractMesh(shape, axes)
+    # build an ABSTRACT mesh: resolver only needs axis names/sizes.
+    # jax >= 0.4.36 takes ((name, size), ...) pairs; older took (shape, names)
+    try:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
+    except TypeError:
+        return jax.sharding.AbstractMesh(shape, axes)
 
 
 from repro.parallel.sharding import physical_spec  # noqa: E402
