@@ -7,6 +7,7 @@ a delta-restored tree must be bit-identical to a full-manifest restore.
 """
 from __future__ import annotations
 
+import os
 import shutil
 
 import jax
@@ -16,8 +17,10 @@ import numpy as np
 from benchmarks.common import Rows, timed
 from repro.checkpoint import CheckpointPipeline, CheckpointStore
 
-CKPTS = 20
-FULL_EVERY = 8
+# SMOKE=1: CI-sized run — same assertions (bit-identical delta restores),
+# fewer checkpoints
+CKPTS = 6 if os.environ.get("SMOKE") else 20
+FULL_EVERY = 4 if os.environ.get("SMOKE") else 8
 
 
 def _finetune_state(hot_fraction: float = 0.04):

@@ -1,0 +1,172 @@
+"""Cross-run warm-start on a frozen-majority lineage (run B fine-tunes run
+A's final checkpoint in a SHARED store).
+
+The multiversion lean-checkpointing claim, measured: a derived run's FIRST
+checkpoint must cost what changed since its ancestor, not model size —
+transfer fraction ~= hot fraction versus 1.0 for a cold store. Replay of
+run B restores bit-identically THROUGH run A's chunks, and registry gc
+after dropping run A reclaims only chunks unreachable from run B.
+
+Set SMOKE=1 for the CI-sized variant (same assertions, smaller state).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+
+import jax
+import numpy as np
+
+from benchmarks.common import Rows, timed
+
+SMOKE = bool(os.environ.get("SMOKE"))
+SCALE = 1 if SMOKE else 8          # backbone size multiplier
+A_CKPTS = 4 if SMOKE else 10
+B_CKPTS = 3 if SMOKE else 10
+FULL_EVERY = 2 if SMOKE else 4
+HOT_FRACTION = 0.04
+
+
+def _finetune_state(hot_fraction: float = HOT_FRACTION):
+    """Frozen backbone + hot head sized so head bytes ~= hot_fraction."""
+    k = jax.random.PRNGKey(0)
+    backbone = {
+        "embed": jax.random.normal(k, (SCALE << 17,)),     # 4 MB at SCALE=8
+        "layers": jax.random.normal(k, (SCALE << 18,)),    # 8 MB at SCALE=8
+    }
+    total = sum(int(x.nbytes) for x in backbone.values())
+    hot_n = max(1024, int(total * hot_fraction / (1 - hot_fraction)) // 8)
+    head = jax.random.normal(k, (hot_n,))
+    return {"backbone": backbone, "head": head,
+            "opt": {"head_mu": np.zeros((hot_n,), np.float32)}}
+
+
+def _step(state, i: float):
+    """Fine-tune-shaped update: backbone untouched, head + slot move."""
+    return {"backbone": state["backbone"],
+            "head": np.asarray(state["head"]) + 0.1 * i,
+            "opt": {"head_mu": np.asarray(state["opt"]["head_mu"]) + 0.01 * i}}
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        and str(np.asarray(x).dtype) == str(np.asarray(y).dtype)
+        for x, y in zip(la, lb))
+
+
+def run(rows: Rows, tmp="/tmp/bench_lineage_warmstart"):
+    import repro.flor as flor
+    from repro.checkpoint import CheckpointStore, RunRegistry
+    from repro.utils.pytree import tree_bytes
+
+    shutil.rmtree(tmp, ignore_errors=True)
+    store_root = os.path.join(tmp, "store")
+    state = _finetune_state()
+    logical = tree_bytes(state)
+    hot = int(np.asarray(state["head"]).nbytes
+              + np.asarray(state["opt"]["head_mu"]).nbytes)
+    hot_frac = hot / logical
+
+    # --- run A: the base recording ----------------------------------------
+    flor.init(os.path.join(tmp, "runA"), mode="record", adaptive=False,
+              store_root=store_root, run_id="A",
+              full_manifest_every=FULL_EVERY)
+    ctx = flor.get_context()
+    st = state
+    for i in range(A_CKPTS):
+        st = _step(st, float(i))
+        ctx.submit_checkpoint("train", f"train@{i}.0", st, meta={})
+    flor.finish()
+    final_a = st
+
+    # --- run B: warm-started derived run ----------------------------------
+    flor.init(os.path.join(tmp, "runB"), mode="record", adaptive=False,
+              store_root=store_root, run_id="B", parent_run="A",
+              full_manifest_every=max(FULL_EVERY, B_CKPTS + 1))
+    ctx = flor.get_context()
+    (warm, warm_s) = timed(flor.warm_start, "train", like=state)
+    assert _leaves_equal(warm, final_a), "warm start != parent final state"
+    st = warm
+    first_stat = None
+    for i in range(B_CKPTS):
+        st = _step(st, float(A_CKPTS + i))
+        ctx.submit_checkpoint("train", f"train@{i}.0", st, meta={})
+        if first_stat is None:
+            ctx.pipeline.drain()
+            first_stat = ctx.pipeline.stats[0]
+    flor.finish()
+    final_b = st
+    warm_frac = first_stat["transferred_bytes"] / logical
+
+    # --- cold baseline: same derived run, fresh private store -------------
+    flor.init(os.path.join(tmp, "runCold"), mode="record", adaptive=False,
+              full_manifest_every=max(FULL_EVERY, B_CKPTS + 1))
+    ctx = flor.get_context()
+    st = {k: v for k, v in final_a.items()}
+    st = _step(st, float(A_CKPTS))
+    ctx.submit_checkpoint("train", "train@0.0", st, meta={})
+    ctx.pipeline.drain()
+    cold_frac = ctx.pipeline.stats[0]["transferred_bytes"] / logical
+    flor.finish()
+
+    # --- replay of run B restores through run A's chunks -------------------
+    flor.init(os.path.join(tmp, "runB"), mode="replay")
+    ctx = flor.get_context()
+    back, restore_s = ctx.restore_checkpoint(f"train@{B_CKPTS - 1}.0",
+                                             like=state)
+    identical = _leaves_equal(back, final_b)
+    flor.finish()
+
+    # --- registry gc: drop run A, keep exactly run B's closure -------------
+    store = CheckpointStore(store_root)
+    reg = RunRegistry(store_root)
+    noop = reg.gc(store)
+    assert noop["deleted_manifests"] == 0, "gc with all runs live must no-op"
+    bytes_before = store.stored_bytes()
+    reg.unregister("A")
+    gc_stats = reg.gc(store)
+    sb = CheckpointStore(store_root, run_id="B")
+    post_gc_identical = _leaves_equal(
+        final_b, sb.get_tree(f"train@{B_CKPTS - 1}.0", like=state))
+
+    rows.add("lineage_warmstart", "logical_mb", round(logical / 2**20, 2),
+             "per-checkpoint state size")
+    rows.add("lineage_warmstart", "hot_fraction", round(hot_frac, 4))
+    rows.add("lineage_warmstart", "first_ckpt_kind", first_stat["kind"],
+             f"parent {first_stat['parent']}")
+    rows.add("lineage_warmstart", "first_ckpt_transfer_fraction_warm",
+             round(warm_frac, 4), f"expected ~{hot_frac:.4f} (hot fraction)")
+    rows.add("lineage_warmstart", "first_ckpt_transfer_fraction_cold",
+             round(cold_frac, 4), "fresh store: full recording")
+    rows.add("lineage_warmstart", "warmstart_savings_x",
+             round(cold_frac / max(warm_frac, 1e-9), 1),
+             "first-checkpoint DMA, cold vs warm")
+    rows.add("lineage_warmstart", "warm_start_s", round(warm_s, 3),
+             "restore parent final + digest rehydration")
+    rows.add("lineage_warmstart", "replay_restore_s", round(restore_s, 3),
+             "derived-run restore through ancestor chunks")
+    rows.add("lineage_warmstart", "replay_bit_identical", identical)
+    rows.add("lineage_warmstart", "gc_deleted_manifests",
+             gc_stats["deleted_manifests"], "run A dropped from registry")
+    rows.add("lineage_warmstart", "gc_reclaimed_mb",
+             round(gc_stats["deleted_bytes"] / 2**20, 2),
+             f"of {bytes_before / 2**20:.2f} MiB")
+    rows.add("lineage_warmstart", "post_gc_bit_identical", post_gc_identical,
+             "run B restores through surviving ancestor chunks")
+
+    assert first_stat["kind"] == "delta", \
+        "warm-started first checkpoint must be a cross-run delta"
+    assert warm_frac < 2.5 * hot_frac, \
+        f"warm first-checkpoint transfer {warm_frac:.4f} should track hot " \
+        f"fraction {hot_frac:.4f}"
+    assert cold_frac > 0.99, "cold store must transfer everything"
+    assert identical, "derived-run replay diverged"
+    assert gc_stats["deleted_manifests"] > 0, \
+        "dropping run A must reclaim its off-chain manifests"
+    assert post_gc_identical, "gc broke run B's ancestor closure"
+
+
+if __name__ == "__main__":
+    run(Rows())

@@ -16,10 +16,11 @@ def main() -> None:
     import benchmarks.parallel_scaling as b_ps
     import benchmarks.roofline_summary as b_roof
     import benchmarks.delta_pipeline as b_dp
+    import benchmarks.lineage_warmstart as b_lw
 
     rows = Rows()
     print("bench,metric,value,note")
-    for mod in (b_bg, b_st, b_dp, b_rl, b_ps, b_rec, b_ada, b_roof):
+    for mod in (b_bg, b_st, b_dp, b_lw, b_rl, b_ps, b_rec, b_ada, b_roof):
         t0 = time.time()
         try:
             mod.run(rows)

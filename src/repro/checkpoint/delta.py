@@ -95,6 +95,14 @@ class DeltaTracker:
             "total_bytes": int(g * self.chunk_words * 4),
         }
 
+    def seed(self, path: str, leaf):
+        """Rehydrate one leaf's device-side digests from restored bytes
+        (cross-run warm start): computes exactly the fingerprint submit()
+        would via the same Pallas path, so the FIRST delta() of a derived
+        run masks only chunks that truly changed since the ancestor run's
+        final checkpoint. No mask, no gather — one fingerprint read."""
+        self._digests[path] = fingerprint_leaf(leaf, self.chunk_words)
+
     def forget(self, path: str):
         """Drop one leaf's digests — the next delta() transfers everything
         (used when a leaf's dtype changes without changing its block count,

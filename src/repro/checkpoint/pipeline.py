@@ -48,6 +48,19 @@ concatenate exactly.
 Scopes: checkpoints of different SkipBlocks pass distinct `scope` ids, so
 each block keeps its own digest state, parent chain and full-manifest
 cadence — interleaved blocks never diff against each other's trees.
+
+Cross-run warm start (run lineage): ``warm_start(scope, parent_key,
+manifest, tree)`` seeds a scope's state from an ANCESTOR RUN's final
+resolved manifest in a shared store — per-leaf structure signatures, the
+writer-side full chunk-hash lists, and the device-side digests (rehydrated
+by running the Pallas fingerprint path over the restored tree, the same one
+read submit() would pay). The scope's parent key is set to the ancestor's
+QUALIFIED key (``"<run_id>::<key>"``), so the FIRST checkpoint of a derived
+run is already a delta manifest chained across the run boundary: a
+fine-tune of a 96%-frozen model transfers and stores ~4% on its very first
+checkpoint instead of re-recording the model. `CheckpointStore` resolves
+the qualified parent chain transparently; `store.gc` retains it (see
+checkpoint/lineage.py for the registry that decides which runs are live).
 """
 from __future__ import annotations
 
@@ -133,13 +146,7 @@ class CheckpointPipeline:
                 # slip through the digest comparison
                 self.tracker.forget(tpath)
             rollback.append((tpath, self.tracker._digests.get(tpath)))
-            fp_leaf = leaf
-            if isinstance(leaf, np.ndarray) and leaf.dtype.itemsize == 8:
-                # bit-preserving u32 view: jit would silently downcast
-                # 64-bit host leaves when jax x64 is disabled, corrupting
-                # the stored bytes (native_bytes_per_word is 4 either way)
-                fp_leaf = np.ascontiguousarray(leaf).reshape(-1).view(np.uint32)
-            d = self.tracker.delta(tpath, fp_leaf)
+            d = self.tracker.delta(tpath, _fp_view(leaf))
             bpw = native_bytes_per_word(dtype)
             chunk_native = self.chunk_words * bpw
             n_chunks = -(-nbytes // chunk_native)
@@ -273,6 +280,62 @@ class CheckpointPipeline:
         if self._on_mat:
             self._on_mat(stat)
 
+    # ---------------------------------------------------------- warm start --
+    def warm_start(self, scope: str, parent_key: str, manifest: dict,
+                   arrays_by_path: dict) -> dict:
+        """Seed one scope's record state from an ancestor run's final
+        RESOLVED manifest, so the next submit() is a delta against it.
+
+        `parent_key` must be the key the shared store resolves the manifest
+        under — QUALIFIED (``"run::key"``) when it lives in another run's
+        namespace. `manifest` is the ``resolve_manifest`` output (complete
+        chunk lists per leaf); `arrays_by_path` the restored host arrays
+        keyed by leaf path (``get_tree`` with no `like`). Seeds:
+
+        * structure signatures — so the first submit is not forced full;
+        * writer-side chunk-hash lists — so unchanged chunks inherit the
+          ancestor's hashes instead of tripping the consistency check;
+        * device digests — rehydrated with the Pallas fingerprint over the
+          restored bytes, so only truly-changed chunks transfer.
+
+        Call before the scope's first submit (its writer-side state is not
+        yet shared with the writer thread). Raises ValueError when the
+        manifest cannot seed this pipeline (v1, unresolved holes, different
+        `chunk_words`) — the caller falls back to a cold start."""
+        if manifest.get("version", 1) < 2:
+            raise ValueError(
+                f"warm start needs a v2 pipeline manifest; {manifest['key']!r}"
+                " is v1 (put_tree) and uses incompatible chunking")
+        if int(manifest.get("chunk_words") or 0) != self.chunk_words:
+            raise ValueError(
+                f"chunk_words mismatch: manifest {manifest.get('chunk_words')}"
+                f" vs pipeline {self.chunk_words} — digests would never match")
+        sig: dict[str, tuple] = {}
+        hashes: dict[str, list] = {}
+        seeded_bytes = 0
+        for leaf in manifest["leaves"]:
+            path = leaf["path"]
+            chunks = leaf.get("chunks")
+            if chunks is None or any(h is None for h in chunks):
+                raise ValueError(
+                    f"manifest {manifest['key']!r} is not resolved at leaf "
+                    f"{path!r} — pass resolve_manifest() output")
+            if path not in arrays_by_path:
+                raise ValueError(f"restored tree is missing leaf {path!r}")
+            sig[path] = (leaf["dtype"], tuple(leaf["shape"]))
+            hashes[path] = list(chunks)
+            nbytes = int(leaf.get("nbytes", 0))
+            seeded_bytes += nbytes
+            if nbytes > 0:
+                self.tracker.seed(f"{scope}::{path}",
+                                  _fp_view(arrays_by_path[path]))
+        self._sig[scope] = sig
+        self._hashes[scope] = hashes
+        self._last_key[scope] = parent_key
+        self._since_full[scope] = 0
+        return {"scope": scope, "parent": parent_key,
+                "leaves": len(sig), "seeded_bytes": seeded_bytes}
+
     # ----------------------------------------------------------- lifecycle --
     def drain(self):
         if self.writer is not None:
@@ -300,6 +363,17 @@ class CheckpointPipeline:
     @property
     def stats(self) -> list[dict]:
         return list(self._stats)
+
+
+def _fp_view(leaf):
+    """The array the fingerprint actually runs over. 64-bit HOST leaves get
+    a bit-preserving u32 view: jit would silently downcast them when jax x64
+    is disabled, corrupting the stored bytes (native_bytes_per_word is 4
+    either way). Shared by submit() and warm_start() so rehydrated digests
+    are byte-for-byte comparable with recorded ones."""
+    if isinstance(leaf, np.ndarray) and leaf.dtype.itemsize == 8:
+        return np.ascontiguousarray(leaf).reshape(-1).view(np.uint32)
+    return leaf
 
 
 def _leaf_nbytes(leaf) -> int:

@@ -20,9 +20,25 @@ Two manifest generations coexist:
   pipeline bounds chain length by writing a full manifest every K
   checkpoints, so resolution never chases unbounded history.
 
+Multi-run sharing (run lineage). One store root may be SHARED by many runs:
+each run gets a manifest namespace (``run_id``), so checkpoint keys like
+``train@2.0`` never collide across runs, while the content-addressed
+``objects/`` pool is shared — a fine-tune of a fine-tune stores (and, with
+the warm-started pipeline, transfers) only true deltas against its ancestor
+run. Cross-run references use QUALIFIED keys, ``"<run_id>::<key>"``
+(``"::<key>"`` addresses the flat, un-namespaced layout explicitly — an
+UNqualified key always binds to the handle's own namespace): a delta
+manifest whose ``parent`` is qualified resolves through the parent run's
+namespace transparently; unqualified parents resolve in the namespace of the
+manifest that names them. Run records themselves (parent run, final keys,
+status) live in ``checkpoint/lineage.py``'s ``RunRegistry`` beside the store.
+
 ``gc(live_keys)`` removes manifests outside the parent-closure of the live
-set and any chunk no surviving manifest references — long record runs with
-rolling retention stay bounded on disk.
+set — ACROSS namespaces: a chunk survives while reachable from any live
+manifest's chain, so deleting one run's registration reclaims only what no
+surviving run inherits. Chunk writes are tmp+rename atomic: chunks are
+cross-run shared state, and a truncated chunk from a killed writer must
+never be silently inherited by a descendant run.
 """
 from __future__ import annotations
 
@@ -30,6 +46,7 @@ import hashlib
 import json
 import os
 import threading
+import time
 from typing import Any, Iterable, Optional
 
 import numpy as np
@@ -39,6 +56,8 @@ from repro.utils.codec import Compressor, pack_obj, unpack_obj
 CHUNK = 4 * 1024 * 1024
 
 MANIFEST_VERSION = 2
+
+_CURRENT_RUN = object()          # sentinel: list_keys() default namespace
 
 
 def _leaf_to_np(x) -> np.ndarray:
@@ -61,24 +80,62 @@ def np_dtype(name: str) -> np.dtype:
 
 
 class CheckpointStore:
-    """Thread-safe on-disk store. Layout:
-       <root>/objects/<h[:2]>/<h>.zst      — chunk payloads
-       <root>/manifests/<key>.msgpack      — checkpoint manifests
-       <root>/meta/<name>.json             — run-level metadata
+    """Thread-safe on-disk store, shareable across runs. Layout:
+       <root>/objects/<h[:2]>/<h>.zst        — chunk payloads (shared pool)
+       <root>/manifests/<key>.msgpack        — un-namespaced manifests
+       <root>/manifests/<run>/<key>.msgpack  — per-run manifest namespaces
+       <root>/meta/[<run>/]<name>.json       — run-level metadata
+       <root>/runs/<run>.json                — RunRegistry records (lineage.py)
     (File extensions are historical; the actual codec is sniffed from
     content, see utils/codec.py.)
+
+    ``run_id`` selects the namespace unqualified keys read and write;
+    ``None`` (the default, and the only mode before multi-run sharing) is
+    the flat un-namespaced layout. Keys of the form ``"<run>::<key>"`` are
+    fully qualified and address any namespace from any handle.
     """
 
-    def __init__(self, root: str, compress_level: int = 3):
+    def __init__(self, root: str, compress_level: int = 3,
+                 run_id: Optional[str] = None):
         self.root = root
+        self.run_id = run_id
         os.makedirs(os.path.join(root, "objects"), exist_ok=True)
         os.makedirs(os.path.join(root, "manifests"), exist_ok=True)
         os.makedirs(os.path.join(root, "meta"), exist_ok=True)
         self._codec = Compressor(level=compress_level)
         self._lock = threading.Lock()
-        # objects/<h[:2]>/ fan-out dirs, cached to avoid a mkdir syscall on
-        # every chunk (the delta pipeline writes many small chunks)
+        # objects/<h[:2]>/ (and manifest-namespace) fan-out dirs, cached to
+        # avoid a mkdir syscall on every chunk (the delta pipeline writes
+        # many small chunks)
         self._dirs: set[str] = set()
+
+    # ------------------------------------------------------------ naming --
+    def _split_key(self, key: str) -> tuple[Optional[str], str]:
+        """(run namespace, run-local key). Unqualified keys belong to this
+        handle's namespace."""
+        if "::" in key:
+            rid, k = key.split("::", 1)
+            return rid or None, k
+        return self.run_id, key
+
+    def _norm_key(self, key: str) -> tuple[Optional[str], str]:
+        """Filesystem-space identity: (sanitized namespace | None, sanitized
+        key). Idempotent for already-sanitized names, so raw keys
+        ('train@2.0') and list_keys() output ('train_at_2.0') normalize to
+        the same tuple."""
+        rid, k = self._split_key(key)
+        return (_safe(rid) if rid else None, _safe(k))
+
+    def qualify(self, key: str) -> str:
+        """This handle's fully-qualified form of a run-local key."""
+        if self.run_id and "::" not in key:
+            return f"{self.run_id}::{key}"
+        return key
+
+    def _ensure_dir(self, d: str):
+        if d not in self._dirs:
+            os.makedirs(d, exist_ok=True)
+            self._dirs.add(d)
 
     # ------------------------------------------------------------ chunks --
     def _chunk_path(self, h: str) -> str:
@@ -91,15 +148,9 @@ class CheckpointStore:
         path = self._chunk_path(h)
         if os.path.exists(path):
             return h, 0, False
-        d = os.path.dirname(path)
-        if d not in self._dirs:
-            os.makedirs(d, exist_ok=True)
-            self._dirs.add(d)
+        self._ensure_dir(os.path.dirname(path))
         payload = self._codec.compress(data)
-        tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
-        with open(tmp, "wb") as f:
-            f.write(payload)
-        os.replace(tmp, path)          # atomic: crash-safe
+        _atomic_write(path, payload)   # chunks are cross-run shared state
         return h, len(payload), True
 
     # kept under the old private name too — tests and older callers use it
@@ -112,16 +163,23 @@ class CheckpointStore:
     _get_chunk = get_chunk
 
     # --------------------------------------------------------- manifests --
-    def _manifest_path(self, key: str) -> str:
-        return os.path.join(self.root, "manifests", _safe(key) + ".msgpack")
+    def _mpath(self, rid_safe: Optional[str], key_safe: str) -> str:
+        parts = [self.root, "manifests"]
+        if rid_safe:
+            parts.append(rid_safe)
+        parts.append(key_safe + ".msgpack")
+        return os.path.join(*parts)
 
-    def put_manifest(self, manifest: dict):
-        """Atomically persist a manifest (crash-safe tmp+rename)."""
-        mpath = self._manifest_path(manifest["key"])
-        tmp = mpath + f".tmp.{os.getpid()}.{threading.get_ident()}"
-        with open(tmp, "wb") as f:
-            f.write(pack_obj(manifest))
-        os.replace(tmp, mpath)
+    def _manifest_path(self, key: str) -> str:
+        return self._mpath(*self._norm_key(key))
+
+    def put_manifest(self, manifest: dict, key: Optional[str] = None):
+        """Atomically persist a manifest (crash-safe tmp+rename). ``key``
+        defaults to the manifest's own (run-local) key."""
+        mpath = self._manifest_path(key if key is not None
+                                    else manifest["key"])
+        self._ensure_dir(os.path.dirname(mpath))
+        _atomic_write(mpath, pack_obj(manifest))
 
     def get_manifest(self, key: str) -> dict:
         with open(self._manifest_path(key), "rb") as f:
@@ -147,10 +205,36 @@ class CheckpointStore:
         except FileNotFoundError:
             pass
 
+    def _load_tuple(self, t: tuple, cache: dict) -> Optional[dict]:
+        """Memoized manifest read by normalized (rid, key) tuple; None for a
+        missing file. Shared by stats() and gc() so each manifest is read at
+        most once per pass."""
+        if t not in cache:
+            try:
+                with open(self._mpath(*t), "rb") as f:
+                    cache[t] = unpack_obj(f.read())
+            except FileNotFoundError:
+                cache[t] = None
+        return cache[t]
+
+    def _parent_of(self, manifest: dict,
+                   child_rid_safe: Optional[str]) -> Optional[tuple]:
+        """Normalized (rid, key) of a manifest's parent. Unqualified parents
+        live in the same namespace as the child manifest."""
+        parent = manifest.get("parent")
+        if not parent:
+            return None
+        if "::" in parent:
+            rid, k = parent.split("::", 1)
+            return (_safe(rid) if rid else None, _safe(k))
+        return (child_rid_safe, _safe(parent))
+
     def resolve_manifest(self, key: str, _max_depth: int = 10_000) -> dict:
         """Return a manifest with every leaf's full chunk-hash list, walking
-        the delta parent chain as needed. v1 and full v2 manifests return
-        (normalized) as-is."""
+        the delta parent chain as needed — across run namespaces when the
+        chain crosses a run boundary (warm-started derived runs). v1 and
+        full v2 manifests return (normalized) as-is."""
+        cur_rid, _ = self._split_key(key)
         manifest = self.get_manifest(key)
         if manifest.get("version", 1) < 2 or manifest.get("kind", "full") == "full":
             return manifest
@@ -178,13 +262,19 @@ class CheckpointStore:
             depth += 1
             if depth > _max_depth:
                 raise RuntimeError(f"delta chain too deep resolving {key!r}")
+            if "::" in parent:
+                cur_rid, parent = parent.split("::", 1)
+                cur_rid = cur_rid or None
+            # always re-qualify: "::key" is the explicit flat form — a bare
+            # key would rebind to THIS handle's namespace
+            pkey = f"{cur_rid or ''}::{parent}"
             try:
-                pm = self.get_manifest(parent)
+                pm = self.get_manifest(pkey)
             except FileNotFoundError as e:
                 raise RuntimeError(
                     f"delta manifest {key!r} references missing parent "
-                    f"{parent!r} — deleted outside store.gc (which retains "
-                    f"the parent closure)?") from e
+                    f"{pkey!r} — deleted outside store.gc (which retains "
+                    f"the parent closure across run lineage)?") from e
             by_path = {lf["path"]: lf for lf in pm["leaves"]}
             for path, out in list(unresolved.items()):
                 src = by_path.get(path)
@@ -246,23 +336,27 @@ class CheckpointStore:
                 "chunks": chunks,
             })
         manifest = {
-            "key": key,
+            "key": self._split_key(key)[1],
             "treedef": str(treedef),
             "leaves": leaves,
             "meta": meta or {},
         }
-        self.put_manifest(manifest)
+        self.put_manifest(manifest, key=key)
         return {"key": key, "total_bytes": total_bytes, "new_bytes": new_bytes,
                 "total_chunks": total_chunks, "new_chunks": new_chunks}
 
-    def get_tree(self, key: str, like: Any = None):
-        """Load a checkpoint (delta manifests resolve transparently). If
-        `like` (a pytree with the same structure) is given, arrays are
-        unflattened into that structure; otherwise a flat {path: array} dict
-        is returned. Returned arrays are WRITABLE copies — np.frombuffer
-        views are read-only and silently break in-place consumers."""
+    def get_tree(self, key: str, like: Any = None,
+                 manifest: Optional[dict] = None):
+        """Load a checkpoint (delta manifests resolve transparently, across
+        run lineage). If `like` (a pytree with the same structure) is given,
+        arrays are unflattened into that structure; otherwise a flat
+        {path: array} dict is returned. Pass a pre-``resolve_manifest``'d
+        `manifest` to skip re-resolution (warm-start reads it anyway).
+        Returned arrays are WRITABLE copies — np.frombuffer views are
+        read-only and silently break in-place consumers."""
         import jax
-        manifest = self.resolve_manifest(key)
+        if manifest is None:
+            manifest = self.resolve_manifest(key)
         arrays = []
         for leaf in manifest["leaves"]:
             raw = b"".join(self.get_chunk(h) for h in leaf["chunks"])
@@ -282,71 +376,198 @@ class CheckpointStore:
     def has(self, key: str) -> bool:
         return os.path.exists(self._manifest_path(key))
 
-    def list_keys(self) -> list[str]:
+    def list_keys(self, run=_CURRENT_RUN) -> list[str]:
+        """Sanitized run-local manifest names in one namespace (default:
+        this handle's)."""
+        rid = self.run_id if run is _CURRENT_RUN else run
         d = os.path.join(self.root, "manifests")
+        if rid:
+            d = os.path.join(d, _safe(rid))
+        if not os.path.isdir(d):
+            return []
         return sorted(f[: -len(".msgpack")] for f in os.listdir(d)
-                      if f.endswith(".msgpack"))
+                      if f.endswith(".msgpack")
+                      and not os.path.isdir(os.path.join(d, f)))
+
+    def list_namespaces(self) -> list[str]:
+        """Sanitized run namespaces that have at least one manifest dir."""
+        d = os.path.join(self.root, "manifests")
+        return sorted(e for e in os.listdir(d)
+                      if os.path.isdir(os.path.join(d, e)))
+
+    def _iter_manifest_tuples(self):
+        """Every manifest in the store as (rid_safe | None, key_safe)."""
+        for k in self.list_keys(run=None):
+            yield (None, k)
+        for rid in self.list_namespaces():
+            for k in self.list_keys(run=rid):
+                yield (rid, k)
+
+    # --------------------------------------------------------------- stats --
+    def stats(self, keys: Optional[Iterable[str]] = None,
+              include_chunks: bool = True) -> dict:
+        """Single-pass, memoized summary of manifests (default: the whole
+        store; pass `keys` — possibly qualified — to restrict to one run's
+        manifests while chain depths still follow parents across runs).
+        Returns {manifests, full_manifests, delta_manifests, max_chain_depth,
+        chunks, stored_bytes}. Chain depth is the number of parent hops a
+        restore resolves; broken links (missing parents) end the chain
+        rather than raising — this is a diagnostic, not a restore.
+        `include_chunks=False` skips the objects-pool walk (O(store) stat
+        calls on a large shared pool) and reports chunks/stored_bytes as
+        0 — use it when only manifest counts/depths are needed."""
+        cache: dict[tuple, Optional[dict]] = {}
+
+        def load(t):
+            return self._load_tuple(t, cache)
+
+        if keys is not None:
+            targets = [self._norm_key(k) for k in keys]
+        else:
+            targets = list(self._iter_manifest_tuples())
+        depth: dict[tuple, int] = {}
+        counts = {"full": 0, "delta": 0}
+        max_depth = 0
+        n_manifests = 0
+        for t0 in targets:
+            m = load(t0)
+            if m is None:
+                continue
+            n_manifests += 1
+            kind = m.get("kind", "full") if m.get("version", 1) >= 2 else "full"
+            counts[kind] = counts.get(kind, 0) + 1
+            # walk up to the first memoized ancestor (or the chain end),
+            # then unwind — every manifest is read at most once store-wide
+            chain: list[tuple] = []
+            seen: set[tuple] = set()
+            t = t0
+            while t is not None and t not in depth and t not in seen:
+                seen.add(t)
+                mm = load(t)
+                if mm is None:
+                    depth[t] = 0          # broken link: chain ends here
+                    break
+                chain.append(t)
+                t = self._parent_of(mm, t[0])
+            for node in reversed(chain):
+                p = self._parent_of(load(node), node[0])
+                depth[node] = depth[p] + 1 if p is not None and p in depth \
+                    else (1 if p is not None and p in seen else 0)
+            max_depth = max(max_depth, depth.get(t0, 0))
+        chunks = 0
+        stored = 0
+        if include_chunks:
+            for dirpath, _, files in os.walk(os.path.join(self.root,
+                                                          "objects")):
+                for fn in files:
+                    if fn.endswith(".zst"):
+                        chunks += 1
+                        stored += os.path.getsize(os.path.join(dirpath, fn))
+        return {"manifests": n_manifests,
+                "full_manifests": counts.get("full", 0),
+                "delta_manifests": counts.get("delta", 0),
+                "max_chain_depth": max_depth,
+                "chunks": chunks, "stored_bytes": stored}
 
     # ---------------------------------------------------------------- gc --
     def gc(self, live_keys: Iterable[str]) -> dict:
         """Delete manifests outside the parent-closure of ``live_keys`` and
-        every chunk no surviving manifest references. Delta parents of live
-        manifests are always retained (deleting them would break resolve).
+        every chunk no surviving manifest references. The closure follows
+        delta parents ACROSS run namespaces (qualified ``run::key`` refs), so
+        a derived run pins exactly the ancestor manifests its chain resolves
+        through — a chunk survives while ANY live run can still reach it.
         Returns {kept_manifests, deleted_manifests, kept_chunks,
         deleted_chunks, deleted_bytes}."""
         with self._lock:
-            # work in sanitized-name space throughout: callers pass raw keys
-            # ('train@2.0') but list_keys() yields file names ('train_at_2.0')
-            live = {_safe(k) for k in live_keys}
-            # parent closure: a live delta manifest pins its ancestry
+            cache: dict[tuple, Optional[dict]] = {}
+
+            def load(t):
+                return self._load_tuple(t, cache)
+
+            # normalize to filesystem-space (rid, key) tuples: callers pass
+            # raw keys ('train@2.0', 'B::train@2.0') but listings yield
+            # sanitized names ('train_at_2.0')
+            live = {self._norm_key(k) for k in live_keys}
+            # parent closure: a live delta manifest pins its ancestry, run
+            # boundaries included
             frontier = list(live)
             while frontier:
-                k = frontier.pop()
-                try:
-                    m = self.get_manifest(k)
-                except FileNotFoundError:
-                    live.discard(k)
+                t = frontier.pop()
+                m = load(t)
+                if m is None:
+                    live.discard(t)
                     continue
-                parent = _safe(m["parent"]) if m.get("parent") else None
-                if parent and parent not in live:
-                    live.add(parent)
-                    frontier.append(parent)
+                p = self._parent_of(m, t[0])
+                if p is not None and p not in live:
+                    live.add(p)
+                    frontier.append(p)
             referenced: set[str] = set()
             deleted_manifests = 0
-            for key in self.list_keys():
-                if key not in live:
-                    self.delete_manifest(key)
+            namespaces: set[Optional[str]] = set()
+            for t in list(self._iter_manifest_tuples()):
+                namespaces.add(t[0])
+                if t not in live:
+                    try:
+                        os.remove(self._mpath(*t))
+                    except FileNotFoundError:
+                        pass
                     deleted_manifests += 1
                     continue
-                referenced.update(_manifest_chunk_hashes(self.get_manifest(key)))
-            kept = deleted = deleted_bytes = 0
+                m = load(t)
+                if m is not None:
+                    referenced.update(_manifest_chunk_hashes(m))
+            for rid in namespaces:       # drop emptied namespace dirs
+                if rid:
+                    try:
+                        os.rmdir(os.path.join(self.root, "manifests", rid))
+                    except OSError:
+                        pass
+            kept = deleted = deleted_bytes = deleted_tmp = 0
+            now = time.time()
             obj_root = os.path.join(self.root, "objects")
             for dirpath, _, files in os.walk(obj_root):
                 for fn in files:
-                    if not fn.endswith(".zst"):
-                        continue          # stray .tmp from a crashed writer
-                    h = fn[: -len(".zst")]
                     p = os.path.join(dirpath, fn)
+                    if not fn.endswith(".zst"):
+                        # stray .tmp from a KILLED writer (the in-process
+                        # failure path unlinks its own): reclaim once aged —
+                        # a live writer holds a tmp for milliseconds, so the
+                        # age gate never races an in-flight _atomic_write
+                        deleted_tmp += _reclaim_stale_tmp(p, now)
+                        continue
+                    h = fn[: -len(".zst")]
                     if h in referenced:
                         kept += 1
                     else:
                         deleted_bytes += os.path.getsize(p)
                         os.remove(p)
                         deleted += 1
+            for dirpath, _, files in os.walk(os.path.join(self.root,
+                                                          "manifests")):
+                for fn in files:
+                    if not fn.endswith(".msgpack"):
+                        deleted_tmp += _reclaim_stale_tmp(
+                            os.path.join(dirpath, fn), now)
             return {"kept_manifests": len(live), "deleted_manifests": deleted_manifests,
                     "kept_chunks": kept, "deleted_chunks": deleted,
-                    "deleted_bytes": deleted_bytes}
+                    "deleted_bytes": deleted_bytes,
+                    "deleted_tmp_files": deleted_tmp}
 
     # -------------------------------------------------------------- meta --
+    def _meta_path(self, name: str) -> str:
+        parts = [self.root, "meta"]
+        if self.run_id:
+            parts.append(_safe(self.run_id))
+        parts.append(_safe(name) + ".json")
+        return os.path.join(*parts)
+
     def put_meta(self, name: str, obj: dict):
-        path = os.path.join(self.root, "meta", _safe(name) + ".json")
-        tmp = path + f".tmp.{os.getpid()}"
-        with open(tmp, "w") as f:
-            json.dump(obj, f, indent=1, default=str)
-        os.replace(tmp, path)
+        path = self._meta_path(name)
+        self._ensure_dir(os.path.dirname(path))
+        _atomic_write(path, json.dumps(obj, indent=1, default=str).encode())
 
     def get_meta(self, name: str) -> Optional[dict]:
-        path = os.path.join(self.root, "meta", _safe(name) + ".json")
+        path = self._meta_path(name)
         if not os.path.exists(path):
             return None
         with open(path) as f:
@@ -358,6 +579,41 @@ class CheckpointStore:
             for fn in files:
                 total += os.path.getsize(os.path.join(dirpath, fn))
         return total
+
+
+def _atomic_write(path: str, payload: bytes):
+    """Crash-safe write: tmp file + atomic rename, tmp unlinked on failure.
+    A killed writer can leave a stray ``*.tmp.*`` (ignored by every reader
+    and by gc's chunk sweep) but never a truncated object under its final
+    name — which matters doubly now that chunks are shared across runs."""
+    tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
+    try:
+        with open(tmp, "wb") as f:
+            f.write(payload)
+        os.replace(tmp, path)          # atomic: crash-safe
+    except BaseException:
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
+        raise
+
+
+STALE_TMP_S = 60.0       # a live _atomic_write holds its tmp far less
+
+
+def _reclaim_stale_tmp(path: str, now: float) -> int:
+    """Delete one stray ``*.tmp.*`` file if it is old enough that no live
+    writer can still own it. Returns 1 if reclaimed."""
+    if ".tmp." not in os.path.basename(path):
+        return 0
+    try:
+        if now - os.path.getmtime(path) > STALE_TMP_S:
+            os.remove(path)
+            return 1
+    except OSError:
+        pass
+    return 0
 
 
 def _manifest_chunk_hashes(manifest: dict):

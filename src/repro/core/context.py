@@ -4,6 +4,13 @@ Mirrors the paper's parameterized-branching state machine (section 4.2):
 mode in {record, replay}; replay phase in {init, exec}; plus the probed-block
 set, the adaptive controller, the checkpoint store/async writer, and the
 fingerprint log.
+
+Run lineage: `store_root=` shares one content-addressed store across runs
+(per-run manifest namespaces, global chunk dedup); `parent_run=` declares
+the lineage edge and enables `warm_start` — restore the ancestor's final
+checkpoint and record this run's first checkpoint as a cross-run delta.
+The binding persists in `<run_dir>/flor.run.json` so replay reconnects
+without arguments; run records live in the `RunRegistry` beside the store.
 """
 from __future__ import annotations
 
@@ -12,7 +19,9 @@ import os
 import time
 from typing import Optional
 
-from repro.checkpoint import CheckpointPipeline, CheckpointStore
+from repro.checkpoint import CheckpointPipeline, CheckpointStore, RunRegistry
+from repro.checkpoint.lineage import (generate_run_id, read_run_meta,
+                                      write_run_meta)
 from repro.core.adaptive import AdaptiveController
 
 _CTX: Optional["FlorContext"] = None
@@ -69,7 +78,8 @@ class FlorContext:
                  epsilon: float = 1.0 / 15, adaptive: bool = True,
                  pid: int = 0, nworkers: int = 1, init_mode: str = "strong",
                  probed: Optional[set] = None, async_materialize: bool = True,
-                 full_manifest_every: int = 8):
+                 full_manifest_every: int = 8, store_root: Optional[str] = None,
+                 parent_run: Optional[str] = None, run_id: Optional[str] = None):
         assert mode in ("record", "replay")
         self.run_dir = run_dir
         self.mode = mode
@@ -81,7 +91,63 @@ class FlorContext:
         self.current_epoch: Optional[int] = None
         self._intra_epoch_counts: dict[str, int] = {}
         self.controller = AdaptiveController(epsilon=epsilon, enabled=adaptive)
-        self.store = CheckpointStore(os.path.join(run_dir, "store"))
+        # ---- run lineage binding (multi-run shared store) ----
+        # `store_root=` shares one content-addressed store across runs: each
+        # run gets a manifest NAMESPACE (its run id) so keys never collide,
+        # while chunks dedup globally. Without it, the store stays private
+        # at <run_dir>/store in the legacy flat layout. Record writes the
+        # binding to <run_dir>/flor.run.json; replay reads it back, so a
+        # derived run's hindsight replay reconnects to the shared store (and
+        # resolves through ancestor-run chunks) with zero extra arguments.
+        os.makedirs(run_dir, exist_ok=True)
+        if mode == "record":
+            shared = store_root is not None
+            self.store_root = os.path.abspath(store_root) if shared \
+                else os.path.join(run_dir, "store")
+            saved = read_run_meta(run_dir)
+            if run_id:
+                self.run_id = run_id
+            elif shared and saved.get("run_id") \
+                    and saved.get("store_root") == self.store_root:
+                # re-init of the same run dir against the same shared store
+                # is a crash-restart/resume, not a new run: forking a fresh
+                # namespace would orphan the run's own checkpoints
+                self.run_id = saved["run_id"]
+            else:
+                self.run_id = generate_run_id()
+            if parent_run is None and self.run_id == saved.get("run_id"):
+                # resuming the same run (however identified) keeps its
+                # lineage edge — dropping it would orphan the ancestor
+                # binding and skip warm_start on replay
+                parent_run = saved.get("parent_run")
+            self.namespace = self.run_id if shared else None
+            self.parent_run = parent_run
+            self._run_meta = {
+                "run_id": self.run_id, "namespace": self.namespace,
+                "store_root": self.store_root if shared else None,
+                "parent_run": self.parent_run}
+            if self.run_id == saved.get("run_id"):   # resume: keep bindings
+                self._run_meta["warm_start_keys"] = \
+                    saved.get("warm_start_keys") or {}
+            write_run_meta(run_dir, self._run_meta)
+        else:
+            saved = read_run_meta(run_dir)
+            self._run_meta = saved
+            self.run_id = run_id or saved.get("run_id")
+            self.store_root = os.path.abspath(store_root) if store_root \
+                else (saved.get("store_root") or os.path.join(run_dir, "store"))
+            self.namespace = saved.get("namespace") if saved \
+                else (self.run_id if store_root else None)
+            self.parent_run = parent_run or saved.get("parent_run")
+        self.store = CheckpointStore(self.store_root, run_id=self.namespace)
+        self.registry = RunRegistry(self.store_root)
+        self._registered = False
+        if mode == "record":
+            self.registry.register(self.run_id, parent=self.parent_run,
+                                   run_dir=os.path.abspath(run_dir),
+                                   namespace=self.namespace)
+            self._registered = True
+        self.warmstart_stats: dict[str, dict] = {}
         if adaptive and mode == "record":
             self.controller.write_bps = self._calibrate_store()
         self.async_materialize = async_materialize
@@ -156,6 +222,73 @@ class FlorContext:
                                           stat["transferred_bytes"],
                                           stat["logical_bytes"])
 
+    # ------------------------------------------------------- warm start --
+    def warm_start(self, block_id: str = "train", like=None):
+        """Restore the PARENT RUN's final checkpoint for `block_id` from the
+        shared store and (in record mode) seed the delta pipeline with it —
+        the derived run's first checkpoint is then a delta against its
+        ancestor instead of a cold full recording. Returns the restored
+        state (unflattened into `like` when given, else {path: array}).
+
+        In replay mode this only restores — a replayed derived run starts
+        from the same bytes its record run did, through the parent run's
+        chunks, with no pipeline to seed."""
+        import jax
+        if not self.parent_run:
+            raise RuntimeError(
+                "warm_start needs flor.init(..., store_root=, parent_run=)")
+        # replay must not depend on the REGISTRY still knowing the parent:
+        # `runs rm A` keeps descendants' chunk closure alive, so a derived
+        # run stays replayable from the key its record run persisted into
+        # its own flor.run.json
+        saved_keys = self._run_meta.get("warm_start_keys") or {}
+        qual = saved_keys.get(block_id) if self.mode == "replay" else None
+        if qual is None:
+            rec = self.registry.get(self.parent_run)
+            if rec is None:
+                raise RuntimeError(
+                    f"parent run {self.parent_run!r} is not registered in "
+                    f"{self.store_root!r}")
+            fk = (rec.get("final_keys") or {}).get(block_id)
+            if fk is None:
+                raise KeyError(
+                    f"parent run {self.parent_run!r} recorded no final "
+                    f"checkpoint for block {block_id!r} (scopes: "
+                    f"{sorted(rec.get('final_keys') or {})})")
+            # a scope that never submitted in the parent inherits ITS
+            # parent's qualified tip — already addressable as-is. "::key"
+            # is the explicit flat namespace (parent recorded without a
+            # shared store): an unqualified key would bind to OUR namespace.
+            qual = fk if "::" in fk \
+                else f"{rec.get('namespace') or ''}::{fk}"
+        if self.mode == "record":
+            saved_keys = dict(saved_keys)
+            saved_keys[block_id] = qual
+            self._run_meta["warm_start_keys"] = saved_keys
+            write_run_meta(self.run_dir, self._run_meta)
+        manifest = self.store.resolve_manifest(qual)
+        flat = self.store.get_tree(qual, manifest=manifest)
+        info = {"block": block_id, "parent_run": self.parent_run,
+                "parent_key": qual, "seeded": False}
+        if self.pipeline is not None:
+            try:
+                info.update(self.pipeline.warm_start(block_id, qual,
+                                                     manifest, flat))
+                info["seeded"] = True
+            except ValueError as e:
+                # incompatible ancestor manifest (v1 / other chunk_words):
+                # state still restores, but the first checkpoint records cold
+                info["reason"] = str(e)
+        self.warmstart_stats[block_id] = info
+        if like is None:
+            return flat
+        leaves, treedef = jax.tree_util.tree_flatten(like)
+        arrays = [flat[lf["path"]] for lf in manifest["leaves"]]
+        assert len(leaves) == len(arrays), \
+            f"structure mismatch: like has {len(leaves)} leaves, parent " \
+            f"checkpoint {len(arrays)}"
+        return jax.tree_util.tree_unflatten(treedef, arrays)
+
     def restore_checkpoint(self, key: str, like=None):
         """Load a checkpoint (delta manifests resolve transparently) and
         account the restore for the controller's restore/materialize ratio
@@ -169,27 +302,42 @@ class FlorContext:
     # ---------------------------------------------------------------- gc --
     def gc(self, keep_keys: Optional[list] = None) -> dict:
         """Collect unreferenced chunks. Default live set = every manifest
-        key (removes only orphans from crashed/partial runs); pass
-        `keep_keys` for rolling retention on long record runs. The active
-        delta-chain tips are always kept live — collecting them would leave
-        the pipeline inheriting chunk hashes from deleted manifests, making
-        every subsequent checkpoint unrestorable."""
+        key of THIS run (removes only orphans from crashed/partial runs);
+        pass `keep_keys` for rolling retention on long record runs. The
+        active delta-chain tips are always kept live — collecting them would
+        leave the pipeline inheriting chunk hashes from deleted manifests,
+        making every subsequent checkpoint unrestorable. In a shared store,
+        every OTHER registered run stays fully live: retention here is a
+        run-local policy; cross-run reclamation is the registry's job
+        (`python -m repro.launch.runs gc`)."""
         if self.pipeline is not None:
             self.pipeline.drain()      # don't race in-flight manifests
-        if keep_keys is None:
-            live = self.store.list_keys()
-        else:
-            live = list(keep_keys)
-            if self.pipeline is not None:
-                live += self.pipeline.chain_keys()
+        live = self.store.list_keys() if keep_keys is None \
+            else list(keep_keys)
+        if self.pipeline is not None:
+            # on BOTH branches: a warm-started run's tip may be a parent-run
+            # key that does not appear in this run's own namespace listing
+            live += self.pipeline.chain_keys()
+        live = [self.store.qualify(k) for k in live]
+        # every OTHER registered run stays fully live (retention is a
+        # run-local policy; cross-run reclamation belongs to `runs gc`)
+        live += self.registry.live_keys(self.store,
+                                        exclude_run_id=self.run_id)
         return self.store.gc(live)
 
     # ------------------------------------------------------------ finish --
     def finish(self):
+        final_keys: dict[str, str] = {}
         if self.pipeline is not None:
+            final_keys = {s: k for s, k in self.pipeline._last_key.items()
+                          if k}
             self.pipeline.close()
             self.pipeline = None
             self.writer = None
+        if self._registered:
+            # the per-scope tips are what a derived run warm-starts from
+            self.registry.finalize(self.run_id, final_keys=final_keys)
+            self._registered = False
         self.store.put_meta(f"controller_{self.mode}_p{self.pid}",
                             self.controller.snapshot())
         self.log.close()

@@ -16,6 +16,31 @@ Replay (hindsight logging): re-run the same script with
               init_mode="strong"|"weak", probed={"train"})
 adding any flor.log(...) probes you wished you had — only probed blocks
 re-execute; everything else restores physically from checkpoints.
+
+Run lineage (multi-run shared store): continuous-training workflows chain
+runs — a fine-tune of a fine-tune should pay for what CHANGED since its
+ancestor, not for the model. Point several runs at one store and declare
+the lineage edge:
+
+    flor.init(runA_dir, mode="record", store_root=STORE, run_id="base")
+    ...record run A...; flor.finish()
+
+    flor.init(runB_dir, mode="record", store_root=STORE,
+              parent_run="base", run_id="ft1")
+    state = flor.warm_start("train", like=state)   # A's final checkpoint
+    ...fine-tune...                                # 1st ckpt already a delta
+
+Each run gets its own manifest namespace inside `store_root` (keys never
+collide) while chunks dedup globally; `warm_start` restores the parent
+run's final checkpoint AND seeds the delta pipeline (structure signatures,
+writer-side chunk hashes, Pallas-fingerprint digest rehydration), so run
+B's first checkpoint transfers only the hot fraction. Record writes the
+binding to `<run_dir>/flor.run.json`; replaying run B reads it back and
+resolves delta chains through run A's chunks transparently. The registry
+(`<store_root>/runs/*.json`) tracks every run's parent, status and final
+per-scope checkpoint keys; inspect and reclaim with
+`python -m repro.launch.runs list | show RUN | gc | rm RUN` — gc keeps any
+chunk reachable from ANY registered run's manifest closure.
 """
 from __future__ import annotations
 
@@ -36,6 +61,15 @@ def log(key: str, value):
     """Log a metric / probe value (goes into the fingerprint log)."""
     ctx = get_context()
     ctx.log.log(ctx.current_epoch, key, value)
+
+
+def warm_start(block_id: str = "train", like=None):
+    """Restore the parent run's final checkpoint for `block_id` (see
+    `flor.init(..., store_root=, parent_run=)`) and, when recording, seed
+    the delta pipeline so this run's first checkpoint is a cross-run delta
+    against its ancestor. Returns the restored state — unflattened into
+    `like` when given, else a flat {path: array} dict."""
+    return get_context().warm_start(block_id, like=like)
 
 
 def augment(namespace_subset: dict, namespace: dict) -> dict:

@@ -1,8 +1,13 @@
-"""Re-derive roofline numbers from archived HLO (results/hlo/*.hlo.zst)
-without recompiling. Used whenever hlo_analysis.py improves.
+"""Re-derive analysis artifacts without re-running anything: roofline
+numbers from archived HLO (results/hlo/*.hlo.zst) whenever hlo_analysis.py
+improves, and checkpoint-store summaries for recorded runs — lineage-aware,
+so a derived run's chains resolving through ancestor-run manifests in a
+shared store are reported correctly.
 
     PYTHONPATH=src python -m repro.launch.reanalyze \
         --json results/dryrun_single.json
+    PYTHONPATH=src python -m repro.launch.reanalyze \
+        --store-summary /tmp/runB --store-summary /tmp/runA
 """
 from __future__ import annotations
 
@@ -43,13 +48,38 @@ def reanalyze_json(path: str, hlo_dir: str = "results/hlo"):
     print(f"reanalyzed {path}")
 
 
+def reanalyze_store(run_dir: str):
+    """Post-hoc store summary for one run dir (same single-pass
+    CheckpointStore.stats() the replay launcher and `runs` CLI use)."""
+    from repro.checkpoint import CheckpointStore
+    from repro.checkpoint.lineage import read_run_meta
+    meta = read_run_meta(run_dir)
+    root = meta.get("store_root") or os.path.join(run_dir, "store")
+    store = CheckpointStore(root, run_id=meta.get("namespace"))
+    st = store.stats(keys=store.list_keys())
+    lineage = f", run {meta['run_id']} in shared store {root}" \
+        if meta.get("store_root") else ""
+    print(f"{run_dir}: {st['manifests']} manifests "
+          f"({st['full_manifests']} full + {st['delta_manifests']} delta), "
+          f"max resolve chain {st['max_chain_depth']}, "
+          f"{st['stored_bytes'] / 2**20:.1f} MiB chunks{lineage}")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--json", action="append", required=True)
+    ap.add_argument("--json", action="append", default=[])
     ap.add_argument("--hlo-dir", default="results/hlo")
+    ap.add_argument("--store-summary", action="append", default=[],
+                    metavar="RUN_DIR",
+                    help="print a lineage-aware checkpoint-store summary "
+                         "for a recorded run dir")
     args = ap.parse_args()
+    if not args.json and not args.store_summary:
+        ap.error("pass --json and/or --store-summary")
     for p in args.json:
         reanalyze_json(p, args.hlo_dir)
+    for rd in args.store_summary:
+        reanalyze_store(rd)
 
 
 if __name__ == "__main__":

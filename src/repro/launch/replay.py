@@ -35,6 +35,13 @@ def worker_main(args):
     flor.init(args.run_dir, mode="replay", pid=args.pid,
               nworkers=args.nworkers, init_mode=args.init_mode, probed=probed)
     state = jax.jit(init_state)(jax.random.PRNGKey(args.seed))
+    if flor.get_context().parent_run:
+        # derived run (lineage): record started from the ancestor's final
+        # checkpoint, so replay must too — flor.run.json carries the
+        # binding; restore goes through the parent run's chunks
+        import jax.numpy as jnp
+        state = jax.tree_util.tree_map(
+            jnp.asarray, flor.warm_start("train", like=state))
     for epoch in flor.generator(range(args.epochs)):
         if flor.skipblock.step_into("train"):
             for s in range(args.steps_per_epoch):
@@ -50,27 +57,21 @@ def worker_main(args):
 
 def _print_store_summary(run_dir: str):
     """How the record run's checkpoints are laid out: full vs delta
-    manifests and the longest parent chain a restore has to resolve."""
+    manifests and the longest parent chain a restore has to resolve —
+    single-pass memoized via CheckpointStore.stats() (also used by the
+    `runs` CLI), lineage-aware: a derived run's chains may resolve through
+    its ancestor runs' manifests in a shared store."""
     from repro.checkpoint import CheckpointStore
-    store = CheckpointStore(os.path.join(run_dir, "store"))
-    kinds = {"full": 0, "delta": 0}
-    parents = {}
-    for key in store.list_keys():
-        m = store.get_manifest(key)
-        kind = m.get("kind", "full") if m.get("version", 1) >= 2 else "full"
-        kinds[kind] = kinds.get(kind, 0) + 1
-        # index by the manifest's own key: list_keys() returns sanitized
-        # file names, while `parent` refers to raw keys
-        parents[m.get("key", key)] = m.get("parent")
-    longest = 0
-    for key in parents:
-        depth, cur = 0, parents.get(key)
-        while cur is not None and depth <= len(parents):
-            depth, cur = depth + 1, parents.get(cur)
-        longest = max(longest, depth)
-    print(f"store: {kinds.get('full', 0)} full + {kinds.get('delta', 0)} "
-          f"delta manifests, max resolve chain {longest}, "
-          f"{store.stored_bytes() / 2**20:.1f} MiB chunks")
+    from repro.checkpoint.lineage import read_run_meta
+    meta = read_run_meta(run_dir)
+    root = meta.get("store_root") or os.path.join(run_dir, "store")
+    store = CheckpointStore(root, run_id=meta.get("namespace"))
+    st = store.stats(keys=store.list_keys())
+    print(f"store: {st['full_manifests']} full + {st['delta_manifests']} "
+          f"delta manifests, max resolve chain {st['max_chain_depth']}, "
+          f"{st['stored_bytes'] / 2**20:.1f} MiB chunks"
+          + (f" (shared store {root}, run {meta.get('run_id')})"
+             if meta.get("store_root") else ""))
 
 
 def main():

@@ -1,0 +1,157 @@
+"""Run-lineage CLI: inspect and garbage-collect a multi-run shared store.
+
+    PYTHONPATH=src python -m repro.launch.runs list --store-root STORE
+    PYTHONPATH=src python -m repro.launch.runs show RUN --store-root STORE
+    PYTHONPATH=src python -m repro.launch.runs gc   --store-root STORE
+    PYTHONPATH=src python -m repro.launch.runs rm RUN --store-root STORE [--gc]
+
+`--store-root` also accepts a RUN DIRECTORY (anything containing
+flor.run.json): the CLI follows the binding to the store the run actually
+used, so `runs list --store-root /tmp/runB` works on legacy per-run stores
+too.
+
+`gc` applies the multi-run live-set policy: the union of every registered
+run's manifests, extended by `CheckpointStore.gc` with the cross-run parent
+closure — so after `rm A`, `gc` reclaims exactly the checkpoints and chunks
+no surviving descendant of A still resolves through.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+from repro.checkpoint import CheckpointStore, RunRegistry
+from repro.checkpoint.lineage import read_run_meta
+
+
+def _resolve_store_root(path: str) -> str:
+    """Accept a store root directly, or a run dir carrying flor.run.json."""
+    meta = read_run_meta(path)
+    if meta.get("store_root"):
+        return meta["store_root"]
+    if os.path.isdir(os.path.join(path, "store")) \
+            and not os.path.isdir(os.path.join(path, "manifests")):
+        return os.path.join(path, "store")
+    return path
+
+
+def _fmt_ts(ts) -> str:
+    if not ts:
+        return "-"
+    return time.strftime("%Y-%m-%d %H:%M:%S", time.localtime(float(ts)))
+
+
+def _run_keys(store: CheckpointStore, rec: dict) -> list[str]:
+    return store.list_keys(run=rec.get("namespace"))
+
+
+def cmd_list(store: CheckpointStore, registry: RunRegistry, args) -> int:
+    runs = registry.list_runs()
+    if not runs:
+        print(f"no registered runs under {registry.root}")
+        return 0
+    print(f"{'RUN':<24} {'PARENT':<24} {'STATUS':<9} {'CKPTS':>5}  "
+          f"{'SCOPES':<16} CREATED")
+    for rec in runs:
+        scopes = ",".join(sorted(rec.get("final_keys") or {})) or "-"
+        print(f"{rec['run_id']:<24} {str(rec.get('parent') or '-'):<24} "
+              f"{rec.get('status', '?'):<9} {len(_run_keys(store, rec)):>5}  "
+              f"{scopes:<16} {_fmt_ts(rec.get('created_at'))}")
+    st = store.stats()
+    print(f"store: {st['manifests']} manifests "
+          f"({st['full_manifests']} full + {st['delta_manifests']} delta), "
+          f"max resolve chain {st['max_chain_depth']}, "
+          f"{st['chunks']} chunks, {st['stored_bytes'] / 2**20:.1f} MiB")
+    return 0
+
+
+def cmd_show(store: CheckpointStore, registry: RunRegistry, args) -> int:
+    rec = registry.get(args.run)
+    if rec is None:
+        print(f"unknown run {args.run!r} "
+              f"(known: {[r['run_id'] for r in registry.list_runs()]})")
+        return 1
+    print(f"run        {rec['run_id']}")
+    print(f"status     {rec.get('status', '?')}  "
+          f"(created {_fmt_ts(rec.get('created_at'))}, "
+          f"finished {_fmt_ts(rec.get('finished_at'))})")
+    print(f"run_dir    {rec.get('run_dir') or '-'}")
+    print(f"namespace  {rec.get('namespace') or '(flat)'}")
+    chain = registry.ancestry(args.run)
+    print("ancestry   " + " <- ".join(r["run_id"] for r in chain))
+    for scope, key in sorted((rec.get("final_keys") or {}).items()):
+        print(f"final      {scope}: {key}")
+    keys = _run_keys(store, rec)
+    ns = rec.get("namespace")
+    # no chunk fields printed here: skip the O(store) objects-pool walk
+    st = store.stats(keys=[f"{ns or ''}::{k}" for k in keys],
+                     include_chunks=False)
+    print(f"manifests  {st['manifests']} ({st['full_manifests']} full + "
+          f"{st['delta_manifests']} delta), max resolve chain "
+          f"{st['max_chain_depth']} (may cross into ancestor runs)")
+    return 0
+
+
+def cmd_gc(store: CheckpointStore, registry: RunRegistry, args) -> int:
+    stats = registry.gc(store)
+    print(f"gc: kept {stats['kept_manifests']} manifests / "
+          f"{stats['kept_chunks']} chunks; deleted "
+          f"{stats['deleted_manifests']} manifests / "
+          f"{stats['deleted_chunks']} chunks "
+          f"({stats['deleted_bytes'] / 2**20:.2f} MiB)")
+    return 0
+
+
+def cmd_rm(store: CheckpointStore, registry: RunRegistry, args) -> int:
+    descendants = [r["run_id"] for r in registry.list_runs()
+                   if r.get("parent") == args.run]
+    if descendants and not args.force:
+        print(f"run {args.run!r} has registered descendants {descendants}; "
+              f"their warm-start closure will keep pinning what they "
+              f"inherit. Pass --force to unregister anyway.")
+        return 1
+    if not registry.unregister(args.run):
+        print(f"unknown run {args.run!r}")
+        return 1
+    print(f"unregistered {args.run!r} "
+          f"(manifests remain until gc; descendants keep their closure)")
+    if args.gc:
+        return cmd_gc(store, registry, args)
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.launch.runs",
+                                 description=__doc__.splitlines()[0])
+    common = argparse.ArgumentParser(add_help=False)
+    common.add_argument("--store-root", required=True,
+                        help="shared store root, or a run dir with "
+                             "flor.run.json")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    sub.add_parser("list", parents=[common],
+                   help="registered runs + store summary")
+    p_show = sub.add_parser("show", parents=[common],
+                            help="one run: lineage, finals, stats")
+    p_show.add_argument("run")
+    sub.add_parser("gc", parents=[common],
+                   help="multi-run live-set garbage collection")
+    p_rm = sub.add_parser("rm", parents=[common],
+                          help="unregister a run (reclaim via gc)")
+    p_rm.add_argument("run")
+    p_rm.add_argument("--force", action="store_true",
+                      help="unregister even with registered descendants")
+    p_rm.add_argument("--gc", action="store_true",
+                      help="run gc immediately after unregistering")
+    args = ap.parse_args(argv)
+
+    root = _resolve_store_root(args.store_root)
+    store = CheckpointStore(root)
+    registry = RunRegistry(root)
+    return {"list": cmd_list, "show": cmd_show,
+            "gc": cmd_gc, "rm": cmd_rm}[args.cmd](store, registry, args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,6 +7,15 @@ Fault tolerance IS the paper's substrate: on start, if the run dir already
 holds checkpoints, training resumes from the latest epoch checkpoint
 (weak-init replay of the remainder). Kill the process mid-run and relaunch
 with the same command to see it.
+
+Run lineage (continuous training): record several runs into one shared
+store and chain them —
+
+    ... train --run-dir /tmp/base --store-root /tmp/store --run-id base
+    ... train --run-dir /tmp/ft1  --store-root /tmp/store --run-id ft1 \
+        --parent-run base          # warm-starts; 1st ckpt is a cross-run delta
+
+Inspect/reclaim with `python -m repro.launch.runs list|show|gc|rm`.
 """
 from __future__ import annotations
 
@@ -35,6 +44,14 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", default=None,
                     help="e.g. 1x1; data x model over local devices")
+    ap.add_argument("--store-root", default=None,
+                    help="SHARED checkpoint store root (multi-run lineage); "
+                         "default: private <run-dir>/store")
+    ap.add_argument("--run-id", default=None,
+                    help="explicit run id in the shared store")
+    ap.add_argument("--parent-run", default=None,
+                    help="ancestor run id: warm-start from its final "
+                         "checkpoint and record cross-run deltas")
     args = ap.parse_args()
 
     import repro.configs as C
@@ -68,9 +85,18 @@ def main():
             return
 
         flor.init(args.run_dir, mode="record", epsilon=args.epsilon,
-                  adaptive=not args.no_adaptive)
-        # crash-restart: resume from the latest epoch checkpoint if any
+                  adaptive=not args.no_adaptive,
+                  store_root=args.store_root, run_id=args.run_id,
+                  parent_run=args.parent_run)
         ctx = flor.get_context()
+        if ctx.parent_run and not ctx.store.list_keys():
+            # derived run (fine-tune of a fine-tune): start from the
+            # ancestor's final state; the first checkpoint is already a
+            # cross-run delta against it
+            print(f"warm start from run {ctx.parent_run!r}", flush=True)
+            state = flor.warm_start("train", like=state)
+            state = jax.tree_util.tree_map(jnp.asarray, state)
+        # crash-restart: resume from the latest epoch checkpoint if any
         done = set()
         for k in ctx.store.list_keys():
             if "_at_" in k:

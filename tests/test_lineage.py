@@ -1,0 +1,554 @@
+"""Multiversion run lineage: shared content-addressed store, cross-run
+warm-start deltas, registry-driven multi-run GC, and gc edge cases."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.flor as flor
+from repro.checkpoint import (CheckpointPipeline, CheckpointStore,
+                              RunRegistry)
+from repro.checkpoint.lineage import read_run_meta
+from repro.core.context import FlorContext
+from proptest import given, st
+
+
+def _tree(step: float):
+    """Frozen-majority state: one big frozen leaf, one small hot head."""
+    frozen = jax.random.normal(jax.random.PRNGKey(0), (64 * 256,))
+    head = jnp.full((256,), step, jnp.float32)
+    return {"frozen": frozen, "head": head}
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               and str(np.asarray(x).dtype) == str(np.asarray(y).dtype)
+               for x, y in zip(la, lb))
+
+
+def _record_run(run_dir, store_root, run_id, n_ckpts, *, parent=None,
+                full_every=2, start=None):
+    """Record one run of the lineage chain through the real flor API;
+    returns the final state."""
+    flor.init(str(run_dir), mode="record", adaptive=False,
+              async_materialize=False, store_root=str(store_root),
+              run_id=run_id, parent_run=parent,
+              full_manifest_every=full_every)
+    ctx = flor.get_context()
+    t = start if start is not None else _tree(1.0)
+    if parent is not None:
+        t = flor.warm_start("train", like=t)
+    for e in range(n_ckpts):
+        t = dict(t, head=np.asarray(t["head"]) + 1)
+        ctx.submit_checkpoint("train", f"train@{e}.0", t, meta={})
+    flor.finish()
+    return t
+
+
+# ------------------------------------------------------------- registry --
+def test_registry_lifecycle_and_ancestry(tmp_path):
+    reg = RunRegistry(str(tmp_path))
+    reg.register("A", namespace="A", run_dir="/r/a")
+    reg.register("B", parent="A", namespace="B", run_dir="/r/b")
+    reg.register("C", parent="B", namespace="C", run_dir="/r/c")
+    assert [r["run_id"] for r in reg.list_runs()] == ["A", "B", "C"]
+    assert reg.get("B")["parent"] == "A"
+    assert [r["run_id"] for r in reg.ancestry("C")] == ["C", "B", "A"]
+    reg.finalize("A", final_keys={"train": "train@4.0"})
+    assert reg.get("A")["status"] == "finished"
+    assert reg.get("A")["final_keys"] == {"train": "train@4.0"}
+    assert reg.unregister("B") and not reg.unregister("B")
+    # ancestry stops at the first unregistered ancestor (no crash)
+    assert [r["run_id"] for r in reg.ancestry("C")] == ["C"]
+
+
+def test_registry_rejects_unknown_parent(tmp_path):
+    reg = RunRegistry(str(tmp_path))
+    with pytest.raises(ValueError, match="not registered"):
+        reg.register("B", parent="ghost")
+
+
+def test_registry_rerecord_replaces_stale_registration(tmp_path):
+    """Re-recording into the same (run_dir, namespace) must not leave a
+    dangling record pinning dead chunks forever."""
+    reg = RunRegistry(str(tmp_path))
+    reg.register("old", namespace=None, run_dir="/r/x")
+    reg.register("new", namespace=None, run_dir="/r/x")
+    assert [r["run_id"] for r in reg.list_runs()] == ["new"]
+
+
+def test_noop_resume_preserves_final_keys_and_parent(tmp_path):
+    """Re-launching an already-completed run (the documented idempotent
+    crash-restart flow) must not wipe its registry final_keys or its
+    lineage edge — descendants' warm starts depend on both."""
+    root = str(tmp_path / "store")
+    _record_run(tmp_path / "runA", root, "A", 2)
+    _record_run(tmp_path / "runB", root, "B", 2, parent="A")
+    reg = RunRegistry(root)
+    assert reg.get("B")["final_keys"] == {"train": "train@1.0"}
+
+    # no-op resume with EXPLICIT run_id and no parent_run argument
+    flor.init(str(tmp_path / "runB"), mode="record", adaptive=False,
+              async_materialize=False, store_root=root, run_id="B")
+    ctx = flor.get_context()
+    assert ctx.parent_run == "A"          # lineage edge restored from meta
+    flor.finish()                         # zero submits this session
+    rec = reg.get("B")
+    assert rec["final_keys"] == {"train": "train@1.0"}   # tips survive
+    assert rec["parent"] == "A"
+    # a derived run can still warm-start from B after the no-op resume
+    flor.init(str(tmp_path / "runC"), mode="record", adaptive=False,
+              async_materialize=False, store_root=root, run_id="C",
+              parent_run="B")
+    state = flor.warm_start("train", like=_tree(0.0))
+    assert state is not None
+    flor.finish()
+
+
+# -------------------------------------------------- namespaces & binding --
+def test_shared_store_namespaces_do_not_collide(tmp_path):
+    """Two runs writing the SAME checkpoint keys into one store root."""
+    root = str(tmp_path / "store")
+    ta, tb = _tree(1.0), _tree(500.0)
+    for rid, t in (("A", ta), ("B", tb)):
+        s = CheckpointStore(root, run_id=rid)
+        p = CheckpointPipeline(s, chunk_words=256, async_stage=False)
+        p.submit("train@0.0", t, scope="train")
+        p.close()
+    sa = CheckpointStore(root, run_id="A")
+    assert _leaves_equal(ta, sa.get_tree("train@0.0", like=ta))
+    assert _leaves_equal(tb, sa.get_tree("B::train@0.0", like=tb))
+    # the frozen leaf's chunks dedup across namespaces: one shared pool
+    assert sa.stats()["manifests"] == 2
+    assert sa.stats()["chunks"] < 2 * (64 + 1) + 2
+
+
+def test_run_meta_binding_survives_replay(tmp_path):
+    root = str(tmp_path / "store")
+    run_b = tmp_path / "runB"
+    _record_run(tmp_path / "runA", root, "A", 2)
+    _record_run(run_b, root, "B", 2, parent="A")
+    meta = read_run_meta(str(run_b))
+    assert meta["run_id"] == "B" and meta["parent_run"] == "A"
+    assert meta["store_root"] == os.path.abspath(root)
+    # replay reconnects to the shared store with zero extra arguments
+    flor.init(str(run_b), mode="replay")
+    ctx = flor.get_context()
+    assert ctx.store.root == os.path.abspath(root)
+    assert ctx.namespace == "B" and ctx.parent_run == "A"
+    assert ctx.store.has("train@1.0")
+    flor.finish()
+
+
+# ------------------------------------------------------------ warm start --
+def test_warm_start_first_checkpoint_is_cross_run_delta(tmp_path):
+    root = str(tmp_path / "store")
+    final_a = _record_run(tmp_path / "runA", root, "A", 3)
+
+    flor.init(str(tmp_path / "runB"), mode="record", adaptive=False,
+              async_materialize=False, store_root=root, run_id="B",
+              parent_run="A", full_manifest_every=4)
+    ctx = flor.get_context()
+    state = flor.warm_start("train", like=_tree(0.0))
+    assert _leaves_equal(state, final_a)
+    info = ctx.warmstart_stats["train"]
+    assert info["seeded"] and info["parent_key"] == "A::train@2.0"
+
+    state = dict(state, head=np.asarray(state["head"]) + 1)
+    ctx.submit_checkpoint("train", "train@0.0", state, meta={})
+    stat = ctx.pipeline.stats[-1]
+    # the FIRST checkpoint of the derived run: a delta against the ancestor,
+    # transferring only the hot head (2 changed chunks out of 66)
+    assert stat["kind"] == "delta" and stat["parent"] == "A::train@2.0"
+    assert stat["transferred_bytes"] <= 3 * 256 * 4
+    assert stat["transferred_bytes"] < 0.05 * stat["logical_bytes"]
+    flor.finish()
+
+    # replay-side: B's chain resolves through A's chunks transparently
+    flor.init(str(tmp_path / "runB"), mode="replay")
+    back, _ = flor.get_context().restore_checkpoint("train@0.0",
+                                                    like=_tree(0.0))
+    assert _leaves_equal(back, state)
+    flor.finish()
+
+
+def test_warm_start_without_pipeline_seed_falls_back_cold(tmp_path):
+    """An ancestor whose final checkpoint is a v1 (put_tree) manifest can't
+    seed digests — warm_start still restores the state; the first
+    checkpoint records cold instead of failing."""
+    root = str(tmp_path / "store")
+    t = _tree(7.0)
+    sa = CheckpointStore(root, run_id="A")
+    sa.put_tree("train@0.0", t)
+    reg = RunRegistry(root)
+    reg.register("A", namespace="A")
+    reg.finalize("A", final_keys={"train": "train@0.0"})
+
+    flor.init(str(tmp_path / "runB"), mode="record", adaptive=False,
+              async_materialize=False, store_root=root, run_id="B",
+              parent_run="A")
+    ctx = flor.get_context()
+    state = flor.warm_start("train", like=_tree(0.0))
+    assert _leaves_equal(state, t)
+    info = ctx.warmstart_stats["train"]
+    assert not info["seeded"] and "v1" in info["reason"]
+    ctx.submit_checkpoint("train", "train@0.0", state, meta={})
+    assert ctx.pipeline.stats[-1]["kind"] == "full"   # cold, but correct
+    assert _leaves_equal(state, ctx.store.get_tree("train@0.0", like=state))
+    flor.finish()
+
+
+def test_warm_start_requires_lineage_config(tmp_path):
+    flor.init(str(tmp_path / "run"), mode="record", adaptive=False,
+              async_materialize=False)
+    with pytest.raises(RuntimeError, match="parent_run"):
+        flor.warm_start("train")
+    flor.finish()
+
+
+def test_warm_start_from_flat_namespace_parent(tmp_path):
+    """A legacy run (private flat store, no store_root) can parent a
+    namespaced derived run sharing its store: the '::key' explicit-flat
+    form must keep the parent addressable, and the child's gc must never
+    treat the flat sibling's manifests as dead."""
+    run_a = tmp_path / "runA"
+    final_a = None
+    flor.init(str(run_a), mode="record", adaptive=False,
+              async_materialize=False, full_manifest_every=2)
+    ctx = flor.get_context()
+    t = _tree(1.0)
+    for e in range(3):
+        t = dict(t, head=np.asarray(t["head"]) + 1)
+        ctx.submit_checkpoint("train", f"train@{e}.0", t, meta={})
+    flor.finish()
+    final_a = t
+    run_a_id = read_run_meta(str(run_a))["run_id"]
+
+    root = str(run_a / "store")              # share A's private store
+    flor.init(str(tmp_path / "runB"), mode="record", adaptive=False,
+              async_materialize=False, store_root=root, run_id="B",
+              parent_run=run_a_id, full_manifest_every=8)
+    ctx = flor.get_context()
+    state = flor.warm_start("train", like=_tree(0.0))
+    assert _leaves_equal(state, final_a)
+    assert ctx.warmstart_stats["train"]["parent_key"] == "::train@2.0"
+    state = dict(state, head=np.asarray(state["head"]) + 1)
+    ctx.submit_checkpoint("train", "train@0.0", state, meta={})
+    assert ctx.pipeline.stats[-1]["kind"] == "delta"
+    # B's run-local retention must not collect A's flat manifests
+    stats = ctx.gc(keep_keys=["train@0.0"])
+    sa = CheckpointStore(root)
+    for e in range(3):
+        assert sa.has(f"train@{e}.0"), f"flat sibling lost train@{e}.0"
+    assert _leaves_equal(final_a, sa.get_tree("train@2.0", like=final_a))
+    assert _leaves_equal(state, ctx.store.get_tree("train@0.0", like=state))
+    flor.finish()
+
+
+def test_derived_run_replays_after_parent_unregistered(tmp_path):
+    """`runs rm A` keeps descendants' chunk closure — replay of B must not
+    need A's registry record either (the warm-start key is persisted in
+    B's own flor.run.json at record time)."""
+    root = str(tmp_path / "store")
+    _record_run(tmp_path / "runA", root, "A", 4, full_every=2)
+    final_b = _record_run(tmp_path / "runB", root, "B", 1, parent="A",
+                          full_every=8)
+    meta = read_run_meta(str(tmp_path / "runB"))
+    assert meta["warm_start_keys"] == {"train": "A::train@3.0"}
+    reg = RunRegistry(root)
+    reg.unregister("A")
+    reg.gc(CheckpointStore(root))
+    flor.init(str(tmp_path / "runB"), mode="replay")
+    state = flor.warm_start("train", like=_tree(0.0))   # no registry lookup
+    back, _ = flor.get_context().restore_checkpoint("train@0.0",
+                                                    like=_tree(0.0))
+    assert _leaves_equal(back, final_b)
+    flor.finish()
+
+
+# -------------------------------------------------------- multi-run gc --
+def test_registry_gc_reclaims_only_unreachable(tmp_path):
+    """The acceptance scenario: drop run A's registration; gc keeps exactly
+    what run B's closure still resolves through."""
+    root = str(tmp_path / "store")
+    _record_run(tmp_path / "runA", root, "A", 4, full_every=2)
+    # A: ck0 full, ck1 delta, ck2 full, ck3 delta; B chains onto ck3
+    final_b = _record_run(tmp_path / "runB", root, "B", 1, parent="A",
+                          full_every=8)
+    store = CheckpointStore(root)
+    reg = RunRegistry(root)
+    assert reg.gc(store)["deleted_manifests"] == 0    # both runs live: no-op
+    reg.unregister("A")
+    stats = reg.gc(store)
+    # A's final chain (ck3 -> ck2 full) survives via B's closure; ck0/ck1 die
+    assert stats["deleted_manifests"] == 2
+    assert store.has("A::train@3.0") and store.has("A::train@2.0")
+    assert not store.has("A::train@0.0") and not store.has("A::train@1.0")
+    assert stats["deleted_chunks"] >= 1
+    sb = CheckpointStore(root, run_id="B")
+    assert _leaves_equal(final_b, sb.get_tree("train@0.0", like=final_b))
+    # second pass is a no-op
+    stats2 = reg.gc(store)
+    assert stats2["deleted_manifests"] == 0 and stats2["deleted_chunks"] == 0
+
+
+def test_ctx_gc_in_shared_store_keeps_other_runs_live(tmp_path):
+    """Run-local rolling retention must never collect a sibling run."""
+    root = str(tmp_path / "store")
+    final_a = _record_run(tmp_path / "runA", root, "A", 3, full_every=2)
+    flor.init(str(tmp_path / "runB"), mode="record", adaptive=False,
+              async_materialize=False, store_root=root, run_id="B",
+              full_manifest_every=2)
+    ctx = flor.get_context()
+    t = _tree(100.0)
+    for e in range(4):
+        t = dict(t, head=np.asarray(t["head"]) + 1)
+        ctx.submit_checkpoint("train", f"train@{e}.0", t, meta={})
+    stats = ctx.gc(keep_keys=["train@3.0"])
+    assert stats["deleted_manifests"] >= 1            # B's own early ckpts
+    sa = CheckpointStore(root, run_id="A")
+    for e in range(3):
+        assert sa.has(f"train@{e}.0")                 # A untouched
+    assert _leaves_equal(final_a, sa.get_tree("train@2.0", like=final_a))
+    assert _leaves_equal(t, ctx.store.get_tree("train@3.0", like=t))
+    flor.finish()
+
+
+# ------------------------------------------------------- gc edge cases --
+def test_gc_survives_externally_deleted_parent_manifest(tmp_path):
+    """A delta manifest whose parent was deleted OUTSIDE gc: gc must not
+    crash, must keep the live manifest, and resolve must fail loudly."""
+    store = CheckpointStore(str(tmp_path / "s"))
+    pipe = CheckpointPipeline(store, chunk_words=256, full_every=100,
+                              async_stage=False)
+    t = _tree(1.0)
+    for i in range(4):
+        t = dict(t, head=np.asarray(t["head"]) + 1)
+        pipe.submit(f"ck{i}", t, scope="s")
+    pipe.close()
+    store.delete_manifest("ck1")                      # simulated vandalism
+    stats = store.gc(["ck3"])                         # must not raise
+    assert store.has("ck3") and store.has("ck2")
+    assert not store.has("ck0")      # unreachable once the chain is cut
+    with pytest.raises(RuntimeError, match="missing parent"):
+        store.resolve_manifest("ck3")
+    # idempotent second pass
+    store.gc(["ck3"])
+
+
+def test_gc_with_inflight_async_writer_jobs(tmp_path):
+    """ctx.gc during record drains the writer first — in-flight manifests
+    must not be collected out from under the pipeline."""
+    ctx = FlorContext(str(tmp_path / "run"), "record", adaptive=False,
+                      async_materialize=True, full_manifest_every=2)
+    t = _tree(1.0)
+    for e in range(6):
+        t = dict(t, head=np.asarray(t["head"]) + 1)
+        ctx.submit_checkpoint("train", f"train@{e}.0", t, meta={})
+    stats = ctx.gc(keep_keys=["train@5.0"])           # no explicit drain
+    assert stats["deleted_manifests"] >= 1
+    assert ctx.store.has("train@5.0") and ctx.store.has("train@4.0")
+    back = ctx.store.get_tree("train@5.0", like=t)
+    assert _leaves_equal(t, back)
+    # the pipeline keeps recording correctly after the collection
+    t = dict(t, head=np.asarray(t["head"]) + 1)
+    ctx.submit_checkpoint("train", "train@6.0", t, meta={})
+    ctx.pipeline.drain()
+    assert _leaves_equal(t, ctx.store.get_tree("train@6.0", like=t))
+    ctx.finish()
+
+
+def test_gc_interleaved_scopes_keep_both_chains(tmp_path):
+    """Retention across interleaved SkipBlock scopes: each scope's tip and
+    its closure survive independently."""
+    store = CheckpointStore(str(tmp_path / "s"))
+    pipe = CheckpointPipeline(store, chunk_words=256, full_every=2,
+                              async_stage=False)
+    ta, tb = _tree(1.0), _tree(50.0)
+    for i in range(4):
+        ta = dict(ta, head=np.asarray(ta["head"]) + 1)
+        tb = dict(tb, head=np.asarray(tb["head"]) + 2)
+        pipe.submit(f"a{i}", ta, scope="A")
+        pipe.submit(f"b{i}", tb, scope="B")
+    pipe.close()
+    stats = store.gc(["a3", "b3"])
+    assert store.has("a3") and store.has("a2")        # A closure (full at 2)
+    assert store.has("b3") and store.has("b2")        # B closure
+    assert not store.has("a0") and not store.has("b0")
+    assert stats["deleted_manifests"] == 4
+    assert _leaves_equal(ta, store.get_tree("a3", like=ta))
+    assert _leaves_equal(tb, store.get_tree("b3", like=tb))
+
+
+def test_default_gc_keeps_warmstart_tip_before_first_submit(tmp_path):
+    """ctx.gc() with no keep_keys, called after warm_start but before the
+    first submit, must keep the ancestor tip the pipeline will chain to —
+    even when the ancestor run was unregistered."""
+    root = str(tmp_path / "store")
+    _record_run(tmp_path / "runA", root, "A", 2, full_every=8)
+    flor.init(str(tmp_path / "runB"), mode="record", adaptive=False,
+              async_materialize=False, store_root=root, run_id="B",
+              parent_run="A", full_manifest_every=8)
+    ctx = flor.get_context()
+    state = flor.warm_start("train", like=_tree(0.0))
+    RunRegistry(root).unregister("A")
+    ctx.gc()                      # default live set; B's namespace is empty
+    assert ctx.store.has("A::train@1.0")          # pipeline tip survives
+    state = dict(state, head=np.asarray(state["head"]) + 1)
+    ctx.submit_checkpoint("train", "train@0.0", state, meta={})
+    assert _leaves_equal(state, ctx.store.get_tree("train@0.0", like=state))
+    flor.finish()
+
+
+def test_derived_run_resumes_after_parent_unregistered(tmp_path):
+    """Crash-restart of a derived record run must work after `runs rm` of
+    its parent: parent validation only applies to FIRST registration."""
+    root = str(tmp_path / "store")
+    _record_run(tmp_path / "runA", root, "A", 2)
+    _record_run(tmp_path / "runB", root, "B", 2, parent="A")
+    RunRegistry(root).unregister("A")
+    # relaunch with the same arguments — must not raise
+    flor.init(str(tmp_path / "runB"), mode="record", adaptive=False,
+              async_materialize=False, store_root=root, run_id="B",
+              parent_run="A")
+    ctx = flor.get_context()
+    assert ctx.store.has("train@1.0")             # own checkpoints intact
+    flor.finish()
+
+
+def test_gc_reclaims_aged_tmp_files_only(tmp_path):
+    """Stray tmp files from KILLED writers are reclaimed once aged; a
+    fresh tmp (possibly an in-flight write) is left alone."""
+    store = CheckpointStore(str(tmp_path / "s"))
+    t = {"x": np.arange(2048, dtype=np.float32)}
+    store.put_tree("keep", t)
+    obj_dir = os.path.join(store.root, "objects", "zz")
+    os.makedirs(obj_dir, exist_ok=True)
+    old = os.path.join(obj_dir, "dead.zst.tmp.1.1")
+    fresh = os.path.join(obj_dir, "live.zst.tmp.2.2")
+    stale_man = os.path.join(store.root, "manifests", "x.msgpack.tmp.1.1")
+    for p in (old, fresh, stale_man):
+        with open(p, "wb") as f:
+            f.write(b"garbage")
+    past = os.path.getmtime(old) - 3600
+    os.utime(old, (past, past))
+    os.utime(stale_man, (past, past))
+    stats = store.gc(["keep"])
+    assert stats["deleted_tmp_files"] == 2
+    assert not os.path.exists(old) and not os.path.exists(stale_man)
+    assert os.path.exists(fresh)                  # age-gated: not raced
+    back = store.get_tree("keep", like=t)
+    assert _leaves_equal(t, back)
+
+
+# ------------------------------------------------------------ stats --
+def test_store_stats_single_pass_chain_depth(tmp_path):
+    store = CheckpointStore(str(tmp_path / "s"))
+    pipe = CheckpointPipeline(store, chunk_words=256, full_every=4,
+                              async_stage=False)
+    t = _tree(1.0)
+    for i in range(6):
+        t = dict(t, head=np.asarray(t["head"]) + 1)
+        pipe.submit(f"ck{i}", t, scope="s")
+    pipe.close()
+    st = store.stats()
+    # cadence 4: ck0 full, ck1-3 delta, ck4 full, ck5 delta
+    assert st["manifests"] == 6
+    assert st["full_manifests"] == 2 and st["delta_manifests"] == 4
+    assert st["max_chain_depth"] == 3
+    assert st["chunks"] >= 1 and st["stored_bytes"] > 0
+
+
+# ----------------------------------------------------------- runs CLI --
+def test_runs_cli_list_show_rm_gc(tmp_path, capsys):
+    from repro.launch.runs import main as runs_main
+    root = str(tmp_path / "store")
+    _record_run(tmp_path / "runA", root, "A", 4, full_every=2)
+    final_b = _record_run(tmp_path / "runB", root, "B", 1, parent="A")
+    assert runs_main(["list", "--store-root", root]) == 0
+    out = capsys.readouterr().out
+    assert "A" in out and "B" in out and "delta" in out
+    assert runs_main(["show", "B", "--store-root", root]) == 0
+    assert "ancestry   B <- A" in capsys.readouterr().out
+    # rm refuses while descendants are registered
+    assert runs_main(["rm", "A", "--store-root", root]) == 1
+    assert runs_main(["rm", "A", "--force", "--gc",
+                      "--store-root", root]) == 0
+    assert "deleted 2 manifests" in capsys.readouterr().out
+    # run-dir form resolves through flor.run.json
+    assert runs_main(["list", "--store-root", str(tmp_path / "runB")]) == 0
+    sb = CheckpointStore(root, run_id="B")
+    assert _leaves_equal(final_b, sb.get_tree("train@0.0", like=final_b))
+
+
+# ------------------------------------------------------- property test --
+@st.composite
+def _lineage_plan(draw):
+    """Per-run checkpoint plans for a 3-run chain: each checkpoint mutates a
+    random subset of the 16 chunks of `w` (and sometimes `b`)."""
+    plan = []
+    for _ in range(3):
+        n_ckpts = draw(st.integers(1, 3))
+        ckpts = []
+        for _ in range(n_ckpts):
+            idx = draw(st.lists(st.integers(0, 15), min_size=0, max_size=4))
+            ckpts.append((sorted(set(idx)), draw(st.booleans())))
+        plan.append(ckpts)
+    return plan
+
+
+@given(plan=_lineage_plan())
+def test_lineage_chain_restores_bit_identically(tmp_path_factory, plan):
+    """Random tree mutations across a 3-run lineage chain always restore
+    bit-identically from the shared store — before and after a full-liveness
+    gc."""
+    root = str(tmp_path_factory.mktemp("lineage_prop"))
+    reg = RunRegistry(root)
+    rng = np.random.default_rng(0)
+    state = {"w": rng.standard_normal(16 * 64).astype(np.float32),
+             "b": rng.standard_normal(64).astype(np.float32)}
+    truth = {}
+    prev_rid = None
+    for r, ckpts in enumerate(plan):
+        rid = f"r{r}"
+        store = CheckpointStore(root, run_id=rid)
+        pipe = CheckpointPipeline(store, chunk_words=64, full_every=3,
+                                  async_stage=False)
+        reg.register(rid, parent=prev_rid, namespace=rid)
+        if prev_rid is not None:
+            parent_key = reg.get(prev_rid)["final_keys"]["train"]
+            qual = f"{prev_rid}::{parent_key}"
+            manifest = store.resolve_manifest(qual)
+            restored = store.get_tree(qual, manifest=manifest)
+            pipe.warm_start("train", qual, manifest, restored)
+            state = {"w": restored["['w']"], "b": restored["['b']"]}
+        last = None
+        for c, (w_idx, bump_b) in enumerate(ckpts):
+            state = {"w": state["w"].copy(), "b": state["b"].copy()}
+            for i in w_idx:
+                state["w"][i * 64] += 1.0
+            if bump_b:
+                state["b"] += 0.5
+            key = f"ck{c}"
+            stat = pipe.submit(key, state, scope="train")
+            if stat["kind"] == "delta":
+                # never transfers more than the mutated chunks
+                assert stat["changed_chunks"] <= len(w_idx) + 1
+            truth[(rid, key)] = {k: v.copy() for k, v in state.items()}
+            last = key
+        pipe.close()
+        reg.finalize(rid, final_keys={"train": last})
+        prev_rid = rid
+    store = CheckpointStore(root)
+    for (rid, key), t in truth.items():
+        got = store.get_tree(f"{rid}::{key}", like=t)
+        assert _leaves_equal(t, got), (rid, key)
+    # gc with every run registered is content-preserving
+    reg.gc(store)
+    for (rid, key), t in truth.items():
+        got = store.get_tree(f"{rid}::{key}", like=t)
+        assert _leaves_equal(t, got), (rid, key)
