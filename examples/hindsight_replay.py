@@ -4,12 +4,15 @@
 
 Scenario (paper section 2.1): training looked wrong and you wish you had
 logged per-step gradient norms and the embedding-norm trajectory. This
-script "adds the log statements in hindsight": the outer-loop probe
-(embedding norm per epoch) needs NO re-execution — epochs restore physically
-from checkpoints in seconds; the inner probe (per-step grad norm) re-executes
-only the probed epochs.
+script "adds the log statements in hindsight" on the session API: the
+outer-loop probe (embedding norm per epoch) needs NO re-execution — epochs
+restore physically into the `flor.checkpointing` scope in seconds; the
+inner probe (per-step grad norm) re-executes only the probed epochs
+(`ReplaySpec(probed={"train"})`). `flor.arg` returns the RECORDED
+hyperparameters, so the replay loop shape can never drift from record.
 """
 import argparse
+import sys
 import time
 
 import jax
@@ -31,31 +34,37 @@ args = ap.parse_args()
 
 cfg = C.get("florbench-100m") if args.full else C.get_smoke("florbench-100m")
 batch_size, seq = (8, 512) if args.full else (4, 128)
-init_state, train_step = build_train_step(cfg, peak_lr=1e-3, warmup=20)
-ts = jax.jit(train_step)
 
-probed = {"train"} if args.probe_inner else set()
-flor.init(args.run_dir, mode="replay", probed=probed)
-state = jax.jit(init_state)(jax.random.PRNGKey(0))
-
+probed = frozenset({"train"}) if args.probe_inner else frozenset()
 t0 = time.time()
-for epoch in flor.generator(range(args.epochs)):
-    if flor.skipblock.step_into("train"):
-        for s in range(args.steps_per_epoch):
-            batch = synthetic_batch(cfg, batch_size, seq,
-                                    epoch * args.steps_per_epoch + s)
-            state, metrics = ts(state, batch)
-            if args.probe_inner:
-                # the hindsight INNER probe you wish you'd written:
-                flor.log("grad_norm", metrics["grad_norm"])
-        flor.log("loss", metrics["loss"])
-    state = flor.skipblock.end("train", state)
-    # the hindsight OUTER probe: embedding norm over time — computed from
-    # restored state, no re-execution needed
-    emb = state.params["embed"]["table"]
-    flor.log("embed_norm", float(jnp.linalg.norm(emb.astype(jnp.float32))))
-    print(f"epoch {epoch}: embed_norm logged", flush=True)
-flor.finish()
+with flor.Session(args.run_dir, mode="replay",
+                  replay=flor.ReplaySpec(probed=probed)) as sess:
+    epochs = flor.arg("epochs", args.epochs)
+    steps = flor.arg("steps_per_epoch", args.steps_per_epoch)
+    peak_lr = flor.arg("peak_lr", 1e-3)
+
+    init_state, train_step = build_train_step(cfg, peak_lr=peak_lr, warmup=20)
+    ts = jax.jit(train_step)
+    state = jax.jit(init_state)(jax.random.PRNGKey(0))
+
+    with flor.checkpointing(state=state) as ckpt:
+        for epoch in flor.loop("epochs", range(epochs)):
+            for s in flor.loop("train", range(steps)):
+                batch = synthetic_batch(cfg, batch_size, seq,
+                                        epoch * steps + s)
+                ckpt.state, metrics = ts(ckpt.state, batch)
+                if args.probe_inner:
+                    # the hindsight INNER probe you wish you'd written:
+                    flor.log("grad_norm", metrics["grad_norm"])
+            if flor.executed("train"):
+                flor.log("loss", metrics["loss"])
+            # the hindsight OUTER probe: embedding norm over time — computed
+            # from the (restored) scope state, no re-execution needed
+            emb = ckpt.state.params["embed"]["table"]
+            flor.log("embed_norm",
+                     float(jnp.linalg.norm(emb.astype(jnp.float32))))
+            print(f"epoch {epoch}: embed_norm logged", flush=True)
+
 mode = "inner-probe (logical redo)" if args.probe_inner else \
     "outer-probe (physical restore only)"
 print(f"\nhindsight replay [{mode}] finished in {time.time() - t0:.1f}s")
@@ -64,3 +73,12 @@ rec, reps = flor.run_logs(args.run_dir)
 res = flor.deferred_check(rec, reps)
 print(f"deferred correctness check: ok={res.ok} compared={res.compared} "
       f"hindsight_values={res.hindsight_only}")
+if not res.ok:
+    for a in res.anomalies[:5]:
+        print("  anomaly:", a)
+    sys.exit(1)
+
+# the new query surface: every logged value of this run (and any lineage
+# sharing its store) as one pivoted table
+rows = flor.pivot(args.run_dir, "loss", "embed_norm")
+print(f"\nflor.pivot: {len(rows)} (run, epoch) rows; last: {rows[-1]}")

@@ -23,7 +23,9 @@ ap.add_argument("--epochs", type=int, default=8)
 ap.add_argument("--init-mode", choices=("strong", "weak"), default="strong")
 args = ap.parse_args()
 
-env = dict(os.environ, PYTHONPATH=SRC)
+# strict: the launchers run on the session surface; any deprecation-shim
+# call escaping from them fails the example
+env = dict(os.environ, PYTHONPATH=SRC, FLOR_STRICT_DEPRECATIONS="1")
 shutil.rmtree(args.run_dir, ignore_errors=True)
 
 print("== record ==", flush=True)

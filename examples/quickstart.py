@@ -4,8 +4,15 @@
 
 Trains the florbench-100m model (reduced config by default so it runs on a
 laptop CPU in ~2 minutes; --full trains the real 124M config) for a few
-hundred steps with always-on hindsight-logging record. Afterwards, see
-examples/hindsight_replay.py to query execution data you never logged.
+hundred steps with always-on hindsight-logging record, on the session-first
+API: an explicit `flor.Session`, named nested `flor.loop`s, a declarative
+`flor.checkpointing` scope, and replay-stable `flor.arg` hyperparameters.
+Afterwards, see examples/hindsight_replay.py to query execution data you
+never logged, and
+
+    python -m repro.launch.runs pivot --store-root <run-dir>
+
+to view the run's logs (and any lineage sharing its store) as a table.
 """
 import argparse
 import time
@@ -22,30 +29,39 @@ ap.add_argument("--full", action="store_true", help="real 124M config")
 ap.add_argument("--epochs", type=int, default=8)
 ap.add_argument("--steps-per-epoch", type=int, default=25)
 ap.add_argument("--run-dir", default="/tmp/flor_quickstart")
+ap.add_argument("--no-adaptive", action="store_true",
+                help="checkpoint every epoch regardless of the eps budget "
+                     "(useful on slow disks / CI to guarantee physical "
+                     "replay restores)")
 args = ap.parse_args()
 
 cfg = C.get("florbench-100m") if args.full else C.get_smoke("florbench-100m")
 batch_size, seq = (8, 512) if args.full else (4, 128)
 
-init_state, train_step = build_train_step(cfg, peak_lr=1e-3, warmup=20)
-ts = jax.jit(train_step)
-state = jax.jit(init_state)(jax.random.PRNGKey(0))
-
-flor.init(args.run_dir, mode="record")        # <- the only Flor line you need
 t0 = time.time()
-for epoch in flor.generator(range(args.epochs)):
-    if flor.skipblock.step_into("train"):
-        loader = PrefetchLoader(
-            lambda s: synthetic_batch(cfg, batch_size, seq, s),
-            start_step=epoch * args.steps_per_epoch,
-            num_steps=args.steps_per_epoch)
-        for step, batch in loader:
-            state, metrics = ts(state, batch)
-        flor.log("loss", metrics["loss"])
-    state = flor.skipblock.end("train", state)
-    print(f"epoch {epoch}: loss={float(metrics['loss']):.4f} "
-          f"({time.time() - t0:.1f}s)", flush=True)
-flor.finish()
+with flor.Session(args.run_dir, mode="record",
+                  record=flor.RecordSpec(
+                      adaptive=not args.no_adaptive)) as sess:
+    # hyperparameters recorded for replay (override: FLOR_ARGS="peak_lr=3e-4")
+    epochs = flor.arg("epochs", args.epochs)
+    steps = flor.arg("steps_per_epoch", args.steps_per_epoch)
+    peak_lr = flor.arg("peak_lr", 1e-3)
+
+    init_state, train_step = build_train_step(cfg, peak_lr=peak_lr, warmup=20)
+    ts = jax.jit(train_step)
+    state = jax.jit(init_state)(jax.random.PRNGKey(0))
+
+    with flor.checkpointing(state=state) as ckpt:
+        for epoch in flor.loop("epochs", range(epochs)):
+            for step, batch in flor.loop("train", lambda: PrefetchLoader(
+                    lambda s: synthetic_batch(cfg, batch_size, seq, s),
+                    start_step=epoch * steps, num_steps=steps)):
+                ckpt.state, metrics = ts(ckpt.state, batch)
+            flor.log("loss", metrics["loss"])
+            print(f"epoch {epoch}: loss={float(metrics['loss']):.4f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    state = ckpt.state
+
 print(f"\nrecorded {args.epochs} epochs in {time.time() - t0:.1f}s; "
       f"checkpoints in {args.run_dir}/store")
 print("next: python examples/hindsight_replay.py --run-dir", args.run_dir)

@@ -117,6 +117,7 @@ class AdaptiveController:
         return {
             "epsilon": self.epsilon,
             "c": self.c.value,
+            "write_bps": self.write_bps,
             "blocks": {
                 bid: {"n": b.n, "k": b.k, "C": b.C.value, "M": b.M.value,
                       "transfer_frac": b.tfrac.value if b.tfrac.count else None}

@@ -17,6 +17,7 @@ from __future__ import annotations
 import json
 import os
 import time
+import warnings
 from typing import Optional
 
 from repro.checkpoint import CheckpointPipeline, CheckpointStore, RunRegistry
@@ -24,18 +25,57 @@ from repro.checkpoint.lineage import (generate_run_id, read_run_meta,
                                       write_run_meta)
 from repro.core.adaptive import AdaptiveController
 
-_CTX: Optional["FlorContext"] = None
+# Contexts form a STACK: `flor.Session` pushes on enter and pops on exit, so
+# nested and sequential sessions compose without a single mutable global.
+# The legacy `flor.init` shim manages exactly one stack entry of its own.
+_CTX_STACK: list["FlorContext"] = []
+_LEGACY_CTX: Optional["FlorContext"] = None
+
+
+class FlorDeprecationWarning(DeprecationWarning):
+    """Raised-or-warned category for the pre-Session Flor surface
+    (`flor.init`/`finish`/`generator`/`skipblock`). Set
+    ``FLOR_STRICT_DEPRECATIONS=1`` to turn any use into a hard error — CI
+    runs the examples that way, so no shim call can hide in them."""
+
+
+def _deprecated(msg: str):
+    if os.environ.get("FLOR_STRICT_DEPRECATIONS"):
+        raise FlorDeprecationWarning(msg)
+    warnings.warn(msg, FlorDeprecationWarning, stacklevel=3)
 
 
 class FingerprintLog:
     """Append-only metric log; record/replay logs are diffed by the deferred
-    correctness check (paper section 5.2.2)."""
+    correctness check (paper section 5.2.2).
 
-    def __init__(self, path: str):
+    ``fresh=True`` truncates (each replay ATTEMPT rotates its log — stale
+    lines from a previous attempt with the same pid would corrupt the
+    deferred diff); ``fresh=False`` appends and continues ``seq`` from the
+    existing tail, so a resumed record run never emits duplicate seqs."""
+
+    def __init__(self, path: str, fresh: bool = False):
         self.path = path
         os.makedirs(os.path.dirname(path), exist_ok=True)
-        self._f = open(path, "a", buffering=1)
-        self._seq = 0
+        self._f = open(path, "w" if fresh else "a", buffering=1)
+        self._seq = 0 if fresh else self._tail_seq(path)
+
+    @staticmethod
+    def _tail_seq(path: str) -> int:
+        """1 + the last valid seq already in the file (0 for a new file)."""
+        try:
+            last = -1
+            with open(path) as f:
+                for line in f:
+                    line = line.strip()
+                    if line:
+                        try:
+                            last = max(last, int(json.loads(line)["seq"]))
+                        except (ValueError, KeyError, json.JSONDecodeError):
+                            continue
+            return last + 1
+        except OSError:
+            return 0
 
     def log(self, epoch, key: str, value):
         rec = {"epoch": int(epoch) if epoch is not None else None,
@@ -149,7 +189,17 @@ class FlorContext:
             self._registered = True
         self.warmstart_stats: dict[str, dict] = {}
         if adaptive and mode == "record":
-            self.controller.write_bps = self._calibrate_store()
+            # a resumed run (or any run sharing this store namespace) already
+            # measured the store's throughput: reuse the persisted figure and
+            # skip the ~8MB probe write; fresh stores still calibrate once
+            calib = self.store.get_meta("store_calib")
+            if calib and calib.get("write_bps"):
+                self.controller.write_bps = float(calib["write_bps"])
+            else:
+                self.controller.write_bps = self._calibrate_store()
+                self.store.put_meta("store_calib",
+                                    {"write_bps": self.controller.write_bps,
+                                     "measured_at": time.time()})
         self.async_materialize = async_materialize
         # the delta-aware record flow; replay never submits checkpoints, so
         # it gets no pipeline (and no idle writer thread)
@@ -161,9 +211,22 @@ class FlorContext:
         # backward-compat handle (benchmarks call ctx.writer.drain())
         self.writer = self.pipeline.writer if self.pipeline else None
         suffix = "record" if mode == "record" else f"replay_p{pid}"
+        # record resumes (seq continues from the tail); each replay attempt
+        # rotates its per-pid log so stale lines never pollute deferred_check
         self.log = FingerprintLog(os.path.join(run_dir, "logs",
-                                               f"{suffix}.jsonl"))
+                                               f"{suffix}.jsonl"),
+                                  fresh=(mode == "replay"))
         self._block_keys_meta: dict[str, dict] = {}
+        # ---- session-surface state (flor.loop / flor.checkpointing /
+        # flor.arg): nesting depth of active flor.loop iterators (0 = the
+        # next loop opened is the MAIN loop), the stack of declared
+        # checkpointing scopes, and replay-stable hyperparameters
+        self.loop_depth = 0
+        self.scope_stack: list = []
+        self.block_executed: dict[str, bool] = {}
+        self._hparams: dict = {}
+        self._arg_overrides = _parse_arg_overrides(
+            os.environ.get("FLOR_ARGS", ""))
         self.t_start = time.time()
         # background-materialization callback bookkeeping: map store key ->
         # block id so M_i lands on the right block
@@ -289,6 +352,25 @@ class FlorContext:
             f"checkpoint {len(arrays)}"
         return jax.tree_util.tree_unflatten(treedef, arrays)
 
+    # ---------------------------------------------------- hyperparameters --
+    def hparam(self, name: str, default=None):
+        """Replay-stable hyperparameter (`flor.arg`). Record: resolve the
+        value (``FLOR_ARGS="name=value,..."`` overrides the code default),
+        persist it in store meta, return it. Replay: return the RECORDED
+        value — the run dir, not the code, is the source of truth — coerced
+        to the default's type when one is given."""
+        if self.mode == "record":
+            val = default
+            if name in self._arg_overrides:
+                val = _coerce(self._arg_overrides[name], default)
+            self._hparams[name] = _jsonable(val)
+            self.store.put_meta("hparams", {"args": self._hparams})
+            return val
+        recorded = (self.store.get_meta("hparams") or {}).get("args", {})
+        if name in recorded:
+            return _coerce(recorded[name], default)
+        return default        # hindsight arg the record run never declared
+
     def restore_checkpoint(self, key: str, like=None):
         """Load a checkpoint (delta manifests resolve transparently) and
         account the restore for the controller's restore/materialize ratio
@@ -326,7 +408,7 @@ class FlorContext:
         return self.store.gc(live)
 
     # ------------------------------------------------------------ finish --
-    def finish(self):
+    def finish(self, status: str = "finished"):
         final_keys: dict[str, str] = {}
         if self.pipeline is not None:
             final_keys = {s: k for s, k in self.pipeline._last_key.items()
@@ -336,29 +418,83 @@ class FlorContext:
             self.writer = None
         if self._registered:
             # the per-scope tips are what a derived run warm-starts from
-            self.registry.finalize(self.run_id, final_keys=final_keys)
+            self.registry.finalize(self.run_id, final_keys=final_keys,
+                                   status=status)
             self._registered = False
         self.store.put_meta(f"controller_{self.mode}_p{self.pid}",
                             self.controller.snapshot())
         self.log.close()
 
 
-def init(run_dir: str, mode: str = "record", **kw) -> FlorContext:
-    global _CTX
-    if _CTX is not None:
-        _CTX.finish()
-    _CTX = FlorContext(run_dir, mode, **kw)
-    return _CTX
+def _parse_arg_overrides(spec: str) -> dict[str, str]:
+    """``FLOR_ARGS="epochs=12,peak_lr=3e-4"`` -> {"epochs": "12", ...}."""
+    out = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k.strip()] = v.strip()
+    return out
+
+
+def _coerce(val, default):
+    """Coerce a recorded/override value to the default's type (JSON and env
+    round-trips lose int/float/bool/tuple-ness)."""
+    if default is None or isinstance(val, type(default)):
+        return val
+    try:
+        if isinstance(default, bool):
+            return val if isinstance(val, bool) \
+                else str(val).lower() in ("1", "true", "yes", "on")
+        return type(default)(val)
+    except (TypeError, ValueError):
+        return val
+
+
+# ------------------------------------------------------- context binding --
+def push_context(ctx: FlorContext) -> FlorContext:
+    _CTX_STACK.append(ctx)
+    return ctx
+
+
+def pop_context(ctx: FlorContext):
+    """Unbind `ctx`. Sessions unwind LIFO; an out-of-order pop (e.g. a
+    leaked legacy context under an active Session) removes just that entry."""
+    if ctx in _CTX_STACK:
+        _CTX_STACK.remove(ctx)
 
 
 def get_context() -> FlorContext:
-    if _CTX is None:
-        raise RuntimeError("flor.init(run_dir, mode=...) must be called first")
-    return _CTX
+    if not _CTX_STACK:
+        raise RuntimeError(
+            "no active Flor context — enter `with flor.Session(run_dir, "
+            "mode=...)` (or call the legacy flor.init) first")
+    return _CTX_STACK[-1]
+
+
+def init(run_dir: str, mode: str = "record", **kw) -> FlorContext:
+    """DEPRECATED shim: the pre-Session single-slot API. Finishes any
+    previous init()-made context, then constructs and binds a new one. The
+    old context is unbound BEFORE construction, so a constructor failure
+    leaves no closed context reachable from get_context()."""
+    global _LEGACY_CTX
+    _deprecated("flor.init() is deprecated; use `with flor.Session(run_dir, "
+                "mode=...)` (typed RecordSpec/ReplaySpec/LineageSpec specs)")
+    if _LEGACY_CTX is not None:
+        old, _LEGACY_CTX = _LEGACY_CTX, None
+        pop_context(old)
+        old.finish()
+    ctx = FlorContext(run_dir, mode, **kw)
+    _LEGACY_CTX = ctx
+    return push_context(ctx)
 
 
 def finish():
-    global _CTX
-    if _CTX is not None:
-        _CTX.finish()
-        _CTX = None
+    """DEPRECATED shim: finish + unbind the context made by flor.init()."""
+    global _LEGACY_CTX
+    _deprecated("flor.finish() is deprecated; Session.__exit__ finishes "
+                "the run")
+    if _LEGACY_CTX is not None:
+        old, _LEGACY_CTX = _LEGACY_CTX, None
+        pop_context(old)
+        old.finish()

@@ -69,9 +69,11 @@ def sampling_generator(iterator: Iterable, sample: Sequence[int]):
         covered = i
 
 
-def generator(iterator: Iterable):
-    """Wrap the MAIN loop's iterator (Fig. 8 line 2)."""
-    ctx = get_context()
+def epoch_iter(ctx, iterator: Iterable):
+    """MAIN-loop epoch iteration against an explicit context: record-side
+    run metadata, replay-side partitioning + strong/weak init phases. Both
+    the legacy ``generator()`` shim and the session-surface ``flor.loop``
+    outer iterator drive this."""
     items = list(iterator)
 
     if ctx.mode == "record":
@@ -103,3 +105,12 @@ def generator(iterator: Iterable):
     for e in work:
         ctx.begin_epoch(e)
         yield e
+
+
+def generator(iterator: Iterable):
+    """DEPRECATED shim: wrap the MAIN loop's iterator (Fig. 8 line 2).
+    New code spells this ``for e in flor.loop("epochs", iterator)``."""
+    from repro.core.context import _deprecated
+    _deprecated("flor.generator() is deprecated; use "
+                "flor.loop(name, iterable) under a flor.Session")
+    return epoch_iter(get_context(), iterator)

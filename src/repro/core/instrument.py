@@ -1,10 +1,11 @@
 """Auto-instrumentation (paper sections 3.1/4.2, Figs. 4 & 8).
 
-Rewrites a training script's AST so that:
-  * the MAIN loop's iterator is wrapped in flor.generator(...)  (Fig. 8), and
-  * each instrumentable nested loop is enclosed in a SkipBlock (Fig. 4),
-    with its statically-estimated changeset captured at the Loop End
-    Checkpoint and restored on skip.
+Rewrites a training script's AST onto the SESSION surface so that:
+  * the MAIN loop's iterator is wrapped in flor.loop("main_L<line>", ...)
+    (Fig. 8's generator, session-surface spelling), and
+  * each instrumentable nested loop becomes a named flor.loop inside a
+    flor.checkpointing scope holding its statically-estimated changeset —
+    captured at the Loop End Checkpoint, physically restored on skip.
 
 A loop qualifies when the Table-1 analysis (core/changeset.py) produces a
 changeset (no rule 0/5 refusal). Refused loops are left intact — they are
@@ -12,10 +13,21 @@ fully re-executed on replay, exactly the paper's behavior for the main loop.
 
 The transform is purely syntactic:
 
-    if flor.skipblock.step_into("L<line>"):
-        <original loop>
-    __flor_cs = flor.skipblock.end("L<line>", {"net": net, "opt": opt})
-    net = __flor_cs["net"]; opt = __flor_cs["opt"]
+    with flor.checkpointing(
+            **flor.augment({"net": net, "opt": opt}, globals())) as __flor_s:
+        for batch in flor.loop("L<line>", <original iterator>):
+            try:
+                <original body>
+            finally:
+                __flor_s.update(**flor.augment({"net": net, "opt": opt},
+                                               globals()))
+    net = __flor_s["net"]; opt = __flor_s["opt"]
+
+(the per-iteration ``update`` keeps the scope tracking live values even
+across ``continue``, mirroring the old end-of-block capture; a loop that
+exits EARLY — ``break`` or an exception — writes no checkpoint for that
+occurrence and warns, so replay re-executes it logically, which is the only
+outcome consistent with a partially-run body).
 """
 from __future__ import annotations
 
@@ -37,17 +49,29 @@ def _block_id(loop: ast.stmt) -> str:
     return f"L{loop.lineno}"
 
 
-def _skipblock_wrap(loop: ast.stmt, changeset: list[str]) -> list[ast.stmt]:
+def _loop_wrap(loop: ast.For, changeset: list[str]) -> list[ast.stmt]:
     bid = _block_id(loop)
-    cond = ast.parse(f"flor.skipblock.step_into({bid!r})", mode="eval").body
-    guarded = ast.If(test=cond, body=[loop], orelse=[])
+    scope_var = f"__flor_scope_{bid}"
     dict_src = "{" + ", ".join(f"{n!r}: {n}" for n in changeset) + "}"
-    end_stmt = ast.parse(
-        f"__flor_cs = flor.skipblock.end({bid!r}, "
-        f"flor.augment({dict_src}, globals()))").body[0]
-    restores = [ast.parse(f"{n} = __flor_cs[{n!r}]").body[0]
+    update = ast.parse(f"{scope_var}.update(**flor.augment({dict_src}, "
+                       f"globals()))").body[0]
+    # per-iteration capture survives continue/break in the original body
+    loop.body = [ast.Try(body=loop.body, handlers=[], orelse=[],
+                         finalbody=[update])]
+    # lazy iterator (lambda): a skipped replay epoch must not construct the
+    # loader / consume a shared iterator — matching the old `if step_into:`
+    # guard, which only evaluated the iterator when the block executed
+    wrapped_iter = ast.parse(f"flor.loop({bid!r}, lambda: None)",
+                             mode="eval").body
+    wrapped_iter.args[1].body = loop.iter
+    loop.iter = ast.copy_location(wrapped_iter, loop.iter)
+    with_stmt = ast.parse(
+        f"with flor.checkpointing(**flor.augment({dict_src}, globals())) "
+        f"as {scope_var}:\n    pass").body[0]
+    with_stmt.body = [loop]
+    restores = [ast.parse(f"{n} = {scope_var}[{n!r}]").body[0]
                 for n in changeset]
-    return [guarded, end_stmt] + restores
+    return [with_stmt] + restores
 
 
 class _Instrumenter(ast.NodeTransformer):
@@ -63,16 +87,14 @@ class _Instrumenter(ast.NodeTransformer):
         finally:
             self._depth -= 1
         if self._depth == 0:
-            # MAIN loop: wrap iterator in flor.generator (Fig. 8); the loop
-            # itself is not skipped (paper: refused / re-executed)
+            # MAIN loop: wrap iterator in the outer flor.loop (Fig. 8's
+            # generator); the loop itself is not skipped (paper: refused /
+            # re-executed)
             self.report.main_loops.append(node.lineno)
-            node.iter = ast.copy_location(
-                ast.Call(
-                    func=ast.Attribute(
-                        value=ast.Name(id="flor", ctx=ast.Load()),
-                        attr="generator", ctx=ast.Load()),
-                    args=[node.iter], keywords=[]),
-                node.iter)
+            wrapped = ast.parse(f"flor.loop('main_L{node.lineno}', None)",
+                                mode="eval").body
+            wrapped.args[1] = node.iter
+            node.iter = ast.copy_location(wrapped, node.iter)
             ast.fix_missing_locations(node)
             return node
         outer = outer_assignments(self.module, node.lineno)
@@ -81,7 +103,7 @@ class _Instrumenter(ast.NodeTransformer):
             self.report.refused[node.lineno] = res.refused_reason or "?"
             return node
         self.report.instrumented[_block_id(node)] = res.changeset
-        stmts = _skipblock_wrap(node, res.changeset)
+        stmts = _loop_wrap(node, res.changeset)
         for s in stmts:
             ast.fix_missing_locations(s)
             ast.copy_location(s, node)
@@ -113,20 +135,22 @@ def exec_instrumented(path: str, namespace: Optional[dict] = None,
     """The script tier's entry point: `import flor` is the only user-visible
     change; this function instruments and runs the file under Flor."""
     import repro.flor as flor
+    from repro.core.session import Session, specs_from_kwargs
     with open(path) as f:
         src = f.read()
     new_src, report = instrument_source(src)
     ns = namespace if namespace is not None else {}
     ns.setdefault("__name__", "__main__")
     ns["flor"] = flor
-    if run_dir is not None:
-        flor.init(run_dir, mode=mode, **flor_kw)
+    code = compile(new_src, path + ".flor", "exec")
+    if run_dir is None:
+        exec(code, ns)
+        return ns, report
+    record, replay, lineage = specs_from_kwargs(mode, flor_kw)
+    with Session(run_dir, mode=mode, record=record, replay=replay,
+                 lineage=lineage) as sess:
         if mode == "record":
             # keep a copy of the un-instrumented source for probe detection
-            flor.get_context().store.put_meta("source", {"path": path,
-                                                         "src": src})
-    code = compile(new_src, path + ".flor", "exec")
-    exec(code, ns)
-    if run_dir is not None:
-        flor.finish()
+            sess.ctx.store.put_meta("source", {"path": path, "src": src})
+        exec(code, ns)
     return ns, report

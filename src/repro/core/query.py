@@ -1,0 +1,124 @@
+"""Cross-run log query surface: the PR-2 run registry exposed as DATA.
+
+FlorDB (arXiv:2408.02498) treats the accumulated logs of every run sharing
+a store as one queryable relation. This module gives that surface to the
+library tier:
+
+* ``log_records(path)`` — flat rows across ALL registered runs:
+  ``{run_id, parent_run, source, epoch, seq, key, value}`` (source is
+  ``record`` or ``replay_p<pid>``; hindsight replay probes appear alongside
+  the original record rows).
+* ``pivot(path, *keys)`` — one row per (run, epoch) with the requested log
+  keys as columns: the "loss across a whole lineage" view.
+
+``path`` is a shared store root, a run dir carrying ``flor.run.json`` (the
+binding is followed to its store), or a bare legacy run dir (queried as a
+single pseudo-run). The CLI lives in ``repro.launch.runs``
+(``python -m repro.launch.runs logs|pivot``).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+from repro.checkpoint.lineage import RunRegistry, read_run_meta
+from repro.core.context import FingerprintLog
+
+
+def resolve_store_root(path: str) -> str:
+    """Accept a store root directly, or a run dir carrying flor.run.json
+    (follow the binding), or a legacy run dir with a private ./store."""
+    meta = read_run_meta(path)
+    if meta.get("store_root"):
+        return meta["store_root"]
+    if os.path.isdir(os.path.join(path, "store")) \
+            and not os.path.isdir(os.path.join(path, "manifests")):
+        return os.path.join(path, "store")
+    return path
+
+
+def _registered_runs(path: str) -> list[dict]:
+    """[{run_id, parent, run_dir}] for every run reachable from `path`, in
+    registry (creation) order; falls back to `path` itself as a single
+    pseudo-run when no registry exists (pre-lineage run dirs)."""
+    root = resolve_store_root(path)
+    runs = []
+    if os.path.isdir(os.path.join(root, "runs")):
+        runs = [r for r in RunRegistry(root).list_runs()]
+    if not runs and os.path.isdir(os.path.join(path, "logs")):
+        meta = read_run_meta(path)
+        runs = [{"run_id": meta.get("run_id")
+                 or os.path.basename(os.path.abspath(path)),
+                 "parent": meta.get("parent_run"),
+                 "run_dir": os.path.abspath(path)}]
+    return runs
+
+
+def _run_log_files(run_dir: Optional[str],
+                   include_replay: bool) -> list[tuple[str, str]]:
+    """[(source, path)] of the fingerprint logs a run dir holds."""
+    if not run_dir:
+        return []
+    d = os.path.join(run_dir, "logs")
+    if not os.path.isdir(d):
+        return []
+    out = [("record", os.path.join(d, "record.jsonl"))]
+    if include_replay:
+        for fn in sorted(os.listdir(d)):
+            if fn.startswith("replay_") and fn.endswith(".jsonl"):
+                out.append((fn[: -len(".jsonl")], os.path.join(d, fn)))
+    return [(src, p) for src, p in out if os.path.exists(p)]
+
+
+def log_records(path: str, run: Optional[str] = None,
+                key: Optional[str] = None,
+                include_replay: bool = True) -> list[dict]:
+    """Every logged value across every run registered under `path`, as flat
+    row dicts tagged with the run lineage. Filter with ``run=`` (a run id)
+    and ``key=`` (a log key)."""
+    rows = []
+    for rec in _registered_runs(path):
+        rid = rec.get("run_id")
+        if run is not None and rid != run:
+            continue
+        for source, lp in _run_log_files(rec.get("run_dir"), include_replay):
+            for r in FingerprintLog.read(lp):
+                if key is not None and r.get("key") != key:
+                    continue
+                rows.append({"run_id": rid,
+                             "parent_run": rec.get("parent"),
+                             "source": source,
+                             "epoch": r.get("epoch"),
+                             "seq": r.get("seq"),
+                             "key": r.get("key"),
+                             "value": r.get("value")})
+    return rows
+
+
+def pivot(path: str, *keys: str, run: Optional[str] = None,
+          include_replay: bool = True) -> list[dict]:
+    """One row per (run, epoch) with log keys as columns, across the whole
+    lineage: ``[{run_id, parent_run, epoch, <key>: value, ...}, ...]``.
+    With no explicit `keys`, every observed key becomes a column. The LAST
+    logged occurrence in an epoch wins (replay attempts, logging after
+    record, override earlier values — hindsight refines the log)."""
+    rows = log_records(path, run=run, include_replay=include_replay)
+    want = list(keys)
+    if not want:
+        seen = []
+        for r in rows:
+            if r["key"] not in seen:
+                seen.append(r["key"])
+        want = seen
+    order: list[tuple] = []
+    cells: dict[tuple, dict] = {}
+    for r in rows:
+        if r["key"] not in want:
+            continue
+        g = (r["run_id"], r["epoch"])
+        if g not in cells:
+            order.append(g)
+            cells[g] = {"run_id": r["run_id"], "parent_run": r["parent_run"],
+                        "epoch": r["epoch"]}
+        cells[g][r["key"]] = r["value"]
+    return [cells[g] for g in order]

@@ -1,0 +1,381 @@
+"""The session-first Flor surface: typed specs, `flor.Session`, nested
+`flor.loop`, declarative `flor.checkpointing`, replay-stable `flor.arg`.
+
+The paper pitches Flor as a library adopted with minimal ceremony; FlorDB
+(arXiv:2408.02498) shows where that lands: named nested loops instead of a
+hand-paired ``step_into``/``end`` protocol, checkpointing declared as a
+scope instead of threaded through call sites, and hyperparameters that
+record on record and replay the recorded value on replay.
+
+    with flor.Session(run_dir) as sess:                   # record
+        lr = flor.arg("peak_lr", 1e-3)
+        with flor.checkpointing(state=state) as ckpt:
+            for epoch in flor.loop("epochs", range(flor.arg("epochs", 8))):
+                for step, batch in flor.loop("train", lambda: loader()):
+                    ckpt.state, m = ts(ckpt.state, batch)
+                flor.log("loss", m["loss"])
+        state = ckpt.state
+
+Replay is the same script with ``mode="replay"`` (plus any hindsight
+``flor.log`` probes): the OUTER loop drives epoch bookkeeping and the
+replay init/exec phases; each INNER loop is a SkipBlock — skipped epochs
+yield nothing and the checkpointing scope is physically restored, probed
+epochs re-execute logically. Loops opened with no enclosing
+``checkpointing`` scope are sub-epoch probes: they always execute and never
+checkpoint.
+
+Sessions nest and sequence (the context binding is a stack, not a global);
+the legacy ``flor.init``/``finish`` shims keep working but warn with
+:class:`FlorDeprecationWarning`.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, fields
+from typing import Any, Iterable, Optional, Union
+
+from repro.core.context import (FlorContext, FlorDeprecationWarning,  # noqa: F401
+                                get_context, pop_context, push_context)
+from repro.core.generator import epoch_iter
+from repro.core.skipblock import skipblock
+
+VALID_INIT_MODES = ("strong", "weak")
+
+
+# ------------------------------------------------------------- typed specs --
+@dataclass(frozen=True)
+class RecordSpec:
+    """Record-side knobs (subsumes the old kwargs bag's record half)."""
+    epsilon: float = 1.0 / 15          # record-overhead budget (Eq. 1)
+    adaptive: bool = True              # adaptive checkpointing (section 5.3)
+    async_materialize: bool = True     # background write stage
+    full_manifest_every: int = 8       # delta-chain length bound
+
+    def __post_init__(self):
+        if not 0 < self.epsilon <= 1:
+            raise ValueError(f"epsilon must be in (0, 1], got {self.epsilon}")
+        if self.full_manifest_every < 1:
+            raise ValueError("full_manifest_every must be >= 1")
+
+    def to_kwargs(self) -> dict:
+        return {f.name: getattr(self, f.name) for f in fields(self)}
+
+
+@dataclass(frozen=True)
+class ReplaySpec:
+    """Replay-side knobs: worker identity, init mode, probed blocks."""
+    pid: int = 0
+    nworkers: int = 1
+    init_mode: str = "strong"          # strong | weak
+    probed: frozenset = frozenset()    # block names to re-execute ('*' = all)
+
+    def __post_init__(self):
+        if self.init_mode not in VALID_INIT_MODES:
+            raise ValueError(f"init_mode must be one of {VALID_INIT_MODES}, "
+                             f"got {self.init_mode!r}")
+        if not 0 <= self.pid < self.nworkers:
+            raise ValueError(f"pid {self.pid} outside [0, {self.nworkers})")
+        object.__setattr__(self, "probed", frozenset(self.probed))
+
+    def to_kwargs(self) -> dict:
+        return {"pid": self.pid, "nworkers": self.nworkers,
+                "init_mode": self.init_mode, "probed": set(self.probed)}
+
+
+@dataclass(frozen=True)
+class LineageSpec:
+    """Multi-run shared-store binding (PR 2's run lineage, typed)."""
+    store_root: Optional[str] = None   # shared store (default: private store)
+    run_id: Optional[str] = None       # explicit id in the shared store
+    parent_run: Optional[str] = None   # ancestor run id: enables warm_start
+
+    def __post_init__(self):
+        if self.parent_run and not self.store_root:
+            # a parent ref only resolves against a store that can hold two
+            # runs; a private flat store cannot
+            raise ValueError("parent_run requires store_root (a shared "
+                             "store) to resolve the ancestor")
+
+    def to_kwargs(self) -> dict:
+        return {"store_root": self.store_root, "run_id": self.run_id,
+                "parent_run": self.parent_run}
+
+
+_RECORD_KEYS = {f.name for f in fields(RecordSpec)}
+_REPLAY_KEYS = {f.name for f in fields(ReplaySpec)}
+_LINEAGE_KEYS = {f.name for f in fields(LineageSpec)}
+
+
+def specs_from_kwargs(mode: str, kw: dict) -> tuple[
+        Optional[RecordSpec], Optional[ReplaySpec], Optional[LineageSpec]]:
+    """Partition a legacy kwargs bag into typed specs (unknown keys raise).
+    Used by the `flor.init` shim and `exec_instrumented` so every entry
+    point validates through the same typed layer."""
+    rec_kw = {k: v for k, v in kw.items() if k in _RECORD_KEYS}
+    rep_kw = {k: v for k, v in kw.items() if k in _REPLAY_KEYS}
+    lin_kw = {k: v for k, v in kw.items() if k in _LINEAGE_KEYS}
+    unknown = set(kw) - _RECORD_KEYS - _REPLAY_KEYS - _LINEAGE_KEYS
+    if unknown:
+        raise TypeError(f"unknown Flor arguments {sorted(unknown)}; valid: "
+                        f"{sorted(_RECORD_KEYS | _REPLAY_KEYS | _LINEAGE_KEYS)}")
+    if rep_kw.get("probed") is not None:
+        rep_kw["probed"] = frozenset(rep_kw["probed"])
+    record = RecordSpec(**rec_kw) if (rec_kw and mode == "record") else None
+    replay = ReplaySpec(**rep_kw) if (rep_kw and mode == "replay") else None
+    lineage = LineageSpec(**lin_kw) if any(v is not None
+                                           for v in lin_kw.values()) else None
+    return record, replay, lineage
+
+
+# ------------------------------------------------------------------ session --
+class Session:
+    """An explicit Flor run: `with flor.Session(run_dir, mode=...) as sess`.
+
+    Owns one :class:`FlorContext` for its extent, binds it on the context
+    STACK (so sessions nest and sequence safely — no single mutable global),
+    and finishes it on exit (registry status ``finished``, or ``failed``
+    when the body raised). All module-level surface functions
+    (``flor.loop``/``checkpointing``/``log``/``arg``) resolve the innermost
+    active session; the methods on this object address THIS session
+    explicitly, which is the primary, non-ambient path.
+    """
+
+    def __init__(self, run_dir: str, mode: str = "record", *,
+                 record: Optional[RecordSpec] = None,
+                 replay: Optional[ReplaySpec] = None,
+                 lineage: Optional[LineageSpec] = None):
+        if mode not in ("record", "replay"):
+            raise ValueError(f"mode must be 'record' or 'replay', got {mode!r}")
+        if mode == "record" and replay is not None:
+            raise ValueError("ReplaySpec given for a record session")
+        if mode == "replay" and record is not None:
+            raise ValueError("RecordSpec given for a replay session")
+        self.run_dir = run_dir
+        self.mode = mode
+        self.record = record if mode == "record" else None
+        self.replay = replay if mode == "replay" else None
+        self.lineage = lineage or LineageSpec()
+        self._ctx: Optional[FlorContext] = None
+
+    # ------------------------------------------------------- lifecycle --
+    def __enter__(self) -> "Session":
+        if self._ctx is not None:
+            raise RuntimeError("Session is not re-entrant; create a new one")
+        kw = dict(self.lineage.to_kwargs())
+        if self.mode == "record":
+            kw.update((self.record or RecordSpec()).to_kwargs())
+        else:
+            kw.update((self.replay or ReplaySpec()).to_kwargs())
+        self._ctx = FlorContext(self.run_dir, self.mode, **kw)
+        push_context(self._ctx)
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        ctx, self._ctx = self._ctx, None
+        if ctx is not None:
+            pop_context(ctx)
+            ctx.finish(status="finished" if exc_type is None else "failed")
+        return False
+
+    @property
+    def ctx(self) -> FlorContext:
+        if self._ctx is None:
+            raise RuntimeError("Session is not active (use `with Session(...) "
+                               "as sess:`)")
+        return self._ctx
+
+    # ------------------------------------------------- explicit surface --
+    @property
+    def run_id(self):
+        return self.ctx.run_id
+
+    @property
+    def parent_run(self):
+        return self.ctx.parent_run
+
+    @property
+    def store_root(self):
+        return self.ctx.store_root
+
+    @property
+    def current_epoch(self):
+        return self.ctx.current_epoch
+
+    def log(self, key: str, value):
+        ctx = self.ctx
+        ctx.log.log(ctx.current_epoch, key, value)
+
+    def arg(self, name: str, default=None):
+        return self.ctx.hparam(name, default)
+
+    def loop(self, name: str, iterable):
+        return loop(name, iterable, ctx=self.ctx)
+
+    def checkpointing(self, **slots) -> "checkpointing":
+        return checkpointing(_ctx=self.ctx, **slots)
+
+    def executed(self, name: str) -> bool:
+        return self.ctx.block_executed.get(name, False)
+
+    def warm_start(self, block_id: str = "train", like=None):
+        return self.ctx.warm_start(block_id, like=like)
+
+
+# -------------------------------------------------------------- scopes -----
+class CheckpointScope:
+    """A mutable namespace of named state slots — WHAT gets checkpointed for
+    the `flor.loop` blocks in its extent. Slots are read/written as
+    attributes or items; a skipped block's physical restore lands back in
+    the same slots."""
+
+    def __init__(self, slots: dict):
+        object.__setattr__(self, "_slots", dict(slots))
+
+    def __getattr__(self, name: str):
+        try:
+            return object.__getattribute__(self, "_slots")[name]
+        except KeyError:
+            raise AttributeError(f"no checkpointing slot {name!r} "
+                                 f"(declared: {sorted(self._slots)})") from None
+
+    def __setattr__(self, name: str, value):
+        self._slots[name] = value
+
+    def __getitem__(self, name: str):
+        return self._slots[name]
+
+    def __setitem__(self, name: str, value):
+        self._slots[name] = value
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._slots
+
+    def keys(self):
+        return self._slots.keys()
+
+    def update(self, **kw):
+        self._slots.update(kw)
+
+    def state_dict(self) -> dict:
+        """The checkpoint payload: a plain dict pytree of the slots."""
+        return dict(self._slots)
+
+    def _restore(self, tree: dict):
+        self._slots.update(tree)
+
+    def __repr__(self):
+        return f"CheckpointScope({sorted(self._slots)})"
+
+
+class checkpointing:
+    """``with flor.checkpointing(state=..., opt=...) as ckpt:`` — declare the
+    checkpointed state for the `flor.loop` blocks inside the scope, instead
+    of threading it through `skipblock.end`. Scopes nest; a loop binds to
+    the INNERMOST active scope."""
+
+    def __init__(self, _ctx: Optional[FlorContext] = None, **slots):
+        self._ctx = _ctx
+        self._scope = CheckpointScope(slots)
+        self._bound: Optional[FlorContext] = None
+
+    def __enter__(self) -> CheckpointScope:
+        self._bound = self._ctx or get_context()
+        self._bound.scope_stack.append(self._scope)
+        return self._scope
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if self._bound is not None and self._scope in self._bound.scope_stack:
+            self._bound.scope_stack.remove(self._scope)
+        self._bound = None
+        return False
+
+
+# --------------------------------------------------------------- flor.loop --
+def loop(name: str, iterable: Union[Iterable, Any], *,
+         ctx: Optional[FlorContext] = None):
+    """Named Flor loop. The FIRST loop entered on a context is the MAIN loop
+    (epoch bookkeeping, replay partitioning and init/exec phases); loops
+    nested inside it are SkipBlocks bound to the innermost
+    `flor.checkpointing` scope — on replay they skip (yield nothing,
+    physically restore the scope) or re-execute per the probed set. A
+    nested loop with NO active scope is a sub-epoch probe: always executes,
+    never checkpoints.
+
+    ``iterable`` may be a zero-arg callable returning the iterable — it is
+    only invoked when the block actually executes, so skipped epochs never
+    pay for (or leak) data-loader construction."""
+    ctx = ctx or get_context()
+    if ctx.loop_depth == 0 and ctx.current_epoch is None:
+        return _outer_loop(ctx, name, _materialize(iterable))
+    return _inner_loop(ctx, name, iterable)
+
+
+def _materialize(iterable):
+    return iterable() if callable(iterable) else iterable
+
+
+def _outer_loop(ctx: FlorContext, name: str, iterable: Iterable):
+    ctx.loop_depth += 1
+    try:
+        for e in epoch_iter(ctx, iterable):
+            yield e
+    finally:
+        ctx.loop_depth -= 1
+        # sequential main loops on one context each start fresh
+        ctx.current_epoch = None
+
+
+def _inner_loop(ctx: FlorContext, name: str, iterable):
+    scope = ctx.scope_stack[-1] if ctx.scope_stack else None
+    if scope is None:
+        yield from _probe_loop(ctx, name, iterable)
+        return
+    execute = skipblock._open(ctx, name)
+    ctx.loop_depth += 1
+    completed = False
+    try:
+        if execute:
+            for item in _materialize(iterable):
+                yield item
+        completed = True
+    finally:
+        ctx.loop_depth -= 1
+        if completed:
+            # both branches close the block: executed -> (maybe) memoize the
+            # scope's slots; skipped -> physically restore them
+            scope._restore(
+                skipblock._close(ctx, name, scope.state_dict()))
+        else:
+            # early exit (break / exception): no checkpoint — replay then
+            # re-executes this block logically, the only consistent outcome
+            skipblock._abort(ctx, name)
+
+
+def _probe_loop(ctx: FlorContext, name: str, iterable):
+    """A nested loop with no checkpointing scope: nothing declared to
+    restore, so it always executes (logical redo on replay)."""
+    t0 = time.perf_counter()
+    ctx.block_executed[name] = True
+    ctx.loop_depth += 1
+    try:
+        for item in _materialize(iterable):
+            yield item
+    finally:
+        ctx.loop_depth -= 1
+        ctx.controller.observe_execution(name, time.perf_counter() - t0)
+        ctx.advance_block(name)
+
+
+# ----------------------------------------------------------- module surface --
+def arg(name: str, default=None):
+    """Replay-stable hyperparameter: record the resolved value on record
+    (``FLOR_ARGS="name=value,..."`` overrides the code default), return the
+    RECORDED value on replay."""
+    return get_context().hparam(name, default)
+
+
+def executed(name: str) -> bool:
+    """Whether the most recent occurrence of loop/block `name` actually ran
+    (False = skipped + physically restored). Guard post-loop logging that
+    only makes sense after real execution."""
+    return skipblock.executed(name)

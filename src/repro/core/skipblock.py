@@ -26,10 +26,8 @@ class _SkipBlockAPI:
         self._t_enter: dict[str, float] = {}
         self._executed: dict[str, bool] = {}
 
-    # ---------------------------------------------------------------------
-    def step_into(self, block_id: str) -> bool:
-        """True => execute the enclosed loop; False => skip (end() restores)."""
-        ctx = get_context()
+    # -- internal protocol (shared with the session surface's flor.loop) --
+    def _open(self, ctx, block_id: str) -> bool:
         key = ctx.block_key(block_id)
         if ctx.mode == "record":
             execute = True
@@ -44,13 +42,50 @@ class _SkipBlockAPI:
                 probed = block_id in ctx.probed or "*" in ctx.probed
                 execute = probed or not has
         self._executed[block_id] = execute
+        ctx.block_executed[block_id] = execute   # per-context, not global
         self._t_enter[block_id] = time.perf_counter()
         return execute
+
+    def _abort(self, ctx, block_id: str):
+        """Abandon an open block without memoizing (early exit / exception):
+        no checkpoint is written, so replay re-executes the block logically —
+        the only consistent outcome for a partially-run body. In record mode
+        this is worth a warning: an every-epoch early exit (e.g. a `break`
+        in an instrumented legacy loop) would silently leave the whole run
+        checkpoint-less."""
+        ran = self._executed.pop(block_id, False)
+        self._t_enter.pop(block_id, None)
+        if ran and ctx.mode == "record":
+            import warnings
+            warnings.warn(
+                f"flor block {block_id!r} exited early (break/exception); "
+                f"no checkpoint was written for this occurrence, so replay "
+                f"will re-execute it logically", stacklevel=3)
+        ctx.advance_block(block_id)
+
+    def executed(self, block_id: str) -> bool:
+        """Whether the most recent occurrence of `block_id` on the ACTIVE
+        context actually ran (False = it was skipped and physically restored
+        on replay). Per-context state: sequential/nested sessions never see
+        each other's blocks."""
+        return get_context().block_executed.get(block_id, False)
+
+    # ---------------------------------------------------------------------
+    def step_into(self, block_id: str) -> bool:
+        """True => execute the enclosed loop; False => skip (end() restores).
+        DEPRECATED with end(): use `for x in flor.loop(name, iterable)`
+        inside a `with flor.checkpointing(...)` scope."""
+        from repro.core.context import _deprecated
+        _deprecated("flor.skipblock.step_into/end are deprecated; use "
+                    "flor.loop(name, iterable) + flor.checkpointing(...)")
+        return self._open(get_context(), block_id)
 
     # ---------------------------------------------------------------------
     def end(self, block_id: str, state: Any) -> Any:
         """Close the block. Returns the (possibly restored) state."""
-        ctx = get_context()
+        return self._close(get_context(), block_id, state)
+
+    def _close(self, ctx, block_id: str, state: Any) -> Any:
         key = ctx.block_key(block_id)
         executed = self._executed.pop(block_id, True)
         elapsed = time.perf_counter() - self._t_enter.pop(block_id, time.perf_counter())

@@ -1,59 +1,78 @@
-"""The Flor public API (paper: ``import flor``).
+"""The Flor public API (paper: ``import flor``) — session-first.
 
 Record:
     import repro.flor as flor
-    flor.init(run_dir, mode="record")
-    for epoch in flor.generator(range(N)):
-        if flor.skipblock.step_into("train"):
-            for batch in batches(epoch):
-                state, m = train_step(state, batch)
+    with flor.Session(run_dir) as sess:               # mode="record"
+        lr = flor.arg("peak_lr", 1e-3)                # replay-stable hparam
+        with flor.checkpointing(state=state) as ckpt:
+            for epoch in flor.loop("epochs", range(flor.arg("epochs", N))):
+                for step, batch in flor.loop("train", lambda: loader()):
+                    ckpt.state, m = train_step(ckpt.state, batch)
                 flor.log("loss", m["loss"])
-        state = flor.skipblock.end("train", state)
-    flor.finish()
+        state = ckpt.state
 
-Replay (hindsight logging): re-run the same script with
-    flor.init(run_dir, mode="replay", pid=PID, nworkers=G,
-              init_mode="strong"|"weak", probed={"train"})
-adding any flor.log(...) probes you wished you had — only probed blocks
-re-execute; everything else restores physically from checkpoints.
+Replay (hindsight logging): the same script with
+    flor.Session(run_dir, mode="replay",
+                 replay=flor.ReplaySpec(pid=PID, nworkers=G,
+                                        init_mode="strong", probed={"train"}))
+plus any ``flor.log(...)`` probes you wished you had. The OUTER loop drives
+epoch bookkeeping and the replay init/exec phases; each INNER loop is a
+SkipBlock: skipped epochs yield nothing and the ``checkpointing`` scope is
+physically restored from the Loop End Checkpoint, probed epochs re-execute
+logically. ``flor.arg`` returns the RECORDED value, so hyperparameters can
+never drift between record and replay. Guard post-loop logging that needs
+real execution with ``flor.executed("train")``.
 
-Run lineage (multi-run shared store): continuous-training workflows chain
-runs — a fine-tune of a fine-tune should pay for what CHANGED since its
-ancestor, not for the model. Point several runs at one store and declare
-the lineage edge:
+Sessions are explicit and STACKED — they nest and sequence with no hidden
+global. Typed specs subsume the old kwargs bag:
 
-    flor.init(runA_dir, mode="record", store_root=STORE, run_id="base")
-    ...record run A...; flor.finish()
+    flor.RecordSpec(epsilon=, adaptive=, async_materialize=,
+                    full_manifest_every=)
+    flor.ReplaySpec(pid=, nworkers=, init_mode=, probed=)
+    flor.LineageSpec(store_root=, run_id=, parent_run=)
 
-    flor.init(runB_dir, mode="record", store_root=STORE,
-              parent_run="base", run_id="ft1")
-    state = flor.warm_start("train", like=state)   # A's final checkpoint
-    ...fine-tune...                                # 1st ckpt already a delta
+Run lineage (multi-run shared store): point several runs at one store and
+declare the edge —
 
-Each run gets its own manifest namespace inside `store_root` (keys never
-collide) while chunks dedup globally; `warm_start` restores the parent
-run's final checkpoint AND seeds the delta pipeline (structure signatures,
-writer-side chunk hashes, Pallas-fingerprint digest rehydration), so run
-B's first checkpoint transfers only the hot fraction. Record writes the
-binding to `<run_dir>/flor.run.json`; replaying run B reads it back and
-resolves delta chains through run A's chunks transparently. The registry
-(`<store_root>/runs/*.json`) tracks every run's parent, status and final
-per-scope checkpoint keys; inspect and reclaim with
-`python -m repro.launch.runs list | show RUN | gc | rm RUN` — gc keeps any
-chunk reachable from ANY registered run's manifest closure.
+    with flor.Session(runB_dir,
+                      lineage=flor.LineageSpec(store_root=STORE,
+                                               parent_run="base",
+                                               run_id="ft1")) as sess:
+        state = sess.warm_start("train", like=state)  # ancestor's final ckpt
+        ...fine-tune...                               # 1st ckpt already a delta
+
+Query the accumulated logs of a whole lineage as data:
+
+    flor.log_records(STORE)           # flat rows: run_id, parent_run, epoch,
+                                      #   seq, key, value (+ replay sources)
+    flor.pivot(STORE, "loss")         # one row per (run, epoch), keys as cols
+
+or from the shell: ``python -m repro.launch.runs logs|pivot --store-root ...``
+(plus the PR-2 ``list|show|gc|rm`` lineage management).
+
+Legacy surface: ``flor.init/finish/get_context/generator/skipblock`` keep
+working as thin shims but warn with ``FlorDeprecationWarning`` (set
+``FLOR_STRICT_DEPRECATIONS=1`` to make any use raise). Migration is
+mechanical: ``init/finish`` -> ``with Session(...)``; ``generator(it)`` ->
+``loop("epochs", it)``; ``step_into(b)``/``end(b, state)`` ->
+``loop(b, items)`` under ``with checkpointing(state=state)``.
 """
 from __future__ import annotations
 
 from repro.core.changeset import (    # noqa: F401
     analyze_loop, augment_changeset, outer_assignments, register_augmenter)
 from repro.core.context import (      # noqa: F401
-    FlorContext, finish, get_context, init)
+    FlorContext, FlorDeprecationWarning, finish, get_context, init)
 from repro.core.fingerprint import deferred_check, run_logs  # noqa: F401
 from repro.core.generator import (generator, partition,      # noqa: F401
                                   sampling_generator)
 from repro.core.instrument import (   # noqa: F401
     exec_instrumented, instrument_source)
 from repro.core.probes import detect_probes                  # noqa: F401
+from repro.core.query import log_records, pivot              # noqa: F401
+from repro.core.session import (      # noqa: F401
+    CheckpointScope, LineageSpec, RecordSpec, ReplaySpec, Session, arg,
+    checkpointing, executed, loop)
 from repro.core.skipblock import skipblock                   # noqa: F401
 
 
@@ -65,7 +84,7 @@ def log(key: str, value):
 
 def warm_start(block_id: str = "train", like=None):
     """Restore the parent run's final checkpoint for `block_id` (see
-    `flor.init(..., store_root=, parent_run=)`) and, when recording, seed
+    ``LineageSpec(store_root=, parent_run=)``) and, when recording, seed
     the delta pipeline so this run's first checkpoint is a cross-run delta
     against its ancestor. Returns the restored state — unflattened into
     `like` when given, else a flat {path: array} dict."""

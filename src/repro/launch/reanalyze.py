@@ -8,6 +8,7 @@ shared store are reported correctly.
         --json results/dryrun_single.json
     PYTHONPATH=src python -m repro.launch.reanalyze \
         --store-summary /tmp/runB --store-summary /tmp/runA
+    PYTHONPATH=src python -m repro.launch.reanalyze --logs-summary STORE
 """
 from __future__ import annotations
 
@@ -65,6 +66,27 @@ def reanalyze_store(run_dir: str):
           f"{st['stored_bytes'] / 2**20:.1f} MiB chunks{lineage}")
 
 
+def reanalyze_logs(path: str):
+    """Cross-run log summary without re-running anything: per registered run,
+    how many fingerprint rows / distinct keys / epochs the lineage holds
+    (`flor.log_records` is the row-level spelling)."""
+    from repro.core.query import log_records
+    rows = log_records(path)
+    per_run: dict = {}
+    for r in rows:
+        d = per_run.setdefault(r["run_id"],
+                               {"parent": r["parent_run"], "rows": 0,
+                                "keys": set(), "epochs": set()})
+        d["rows"] += 1
+        d["keys"].add(r["key"])
+        if r["epoch"] is not None:
+            d["epochs"].add(r["epoch"])
+    print(f"{path}: {len(rows)} log rows across {len(per_run)} run(s)")
+    for rid, d in per_run.items():
+        print(f"  {rid} (parent {d['parent'] or '-'}): {d['rows']} rows, "
+              f"{len(d['epochs'])} epochs, keys {sorted(d['keys'])}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", action="append", default=[])
@@ -73,13 +95,19 @@ def main():
                     metavar="RUN_DIR",
                     help="print a lineage-aware checkpoint-store summary "
                          "for a recorded run dir")
+    ap.add_argument("--logs-summary", action="append", default=[],
+                    metavar="STORE_OR_RUN_DIR",
+                    help="print a cross-run fingerprint-log summary "
+                         "(rows/keys/epochs per registered run)")
     args = ap.parse_args()
-    if not args.json and not args.store_summary:
-        ap.error("pass --json and/or --store-summary")
+    if not args.json and not args.store_summary and not args.logs_summary:
+        ap.error("pass --json, --store-summary and/or --logs-summary")
     for p in args.json:
         reanalyze_json(p, args.hlo_dir)
     for rd in args.store_summary:
         reanalyze_store(rd)
+    for p in args.logs_summary:
+        reanalyze_logs(p)
 
 
 if __name__ == "__main__":

@@ -31,28 +31,32 @@ def worker_main(args):
     cfg = C.get_smoke(args.arch) if args.smoke else C.get(args.arch)
     init_state, train_step = build_train_step(cfg)
     ts = jax.jit(train_step)
-    probed = set(args.probe.split(",")) if args.probe else set()
-    flor.init(args.run_dir, mode="replay", pid=args.pid,
-              nworkers=args.nworkers, init_mode=args.init_mode, probed=probed)
-    state = jax.jit(init_state)(jax.random.PRNGKey(args.seed))
-    if flor.get_context().parent_run:
-        # derived run (lineage): record started from the ancestor's final
-        # checkpoint, so replay must too — flor.run.json carries the
-        # binding; restore goes through the parent run's chunks
-        import jax.numpy as jnp
-        state = jax.tree_util.tree_map(
-            jnp.asarray, flor.warm_start("train", like=state))
-    for epoch in flor.generator(range(args.epochs)):
-        if flor.skipblock.step_into("train"):
-            for s in range(args.steps_per_epoch):
-                b = synthetic_batch(cfg, args.batch, args.seq,
-                                    epoch * args.steps_per_epoch + s, args.seed)
-                state, m = ts(state, b)
-                if args.probe:
-                    flor.log("probe_grad_norm", m["grad_norm"])
-            flor.log("loss", m["loss"])
-        state = flor.skipblock.end("train", state)
-    flor.finish()
+    probed = frozenset(args.probe.split(",")) if args.probe else frozenset()
+    with flor.Session(args.run_dir, mode="replay",
+                      replay=flor.ReplaySpec(pid=args.pid,
+                                             nworkers=args.nworkers,
+                                             init_mode=args.init_mode,
+                                             probed=probed)) as sess:
+        state = jax.jit(init_state)(jax.random.PRNGKey(args.seed))
+        if sess.parent_run:
+            # derived run (lineage): record started from the ancestor's
+            # final checkpoint, so replay must too — flor.run.json carries
+            # the binding; restore goes through the parent run's chunks
+            import jax.numpy as jnp
+            state = jax.tree_util.tree_map(
+                jnp.asarray, sess.warm_start("train", like=state))
+        steps = sess.arg("steps_per_epoch", args.steps_per_epoch)
+        with sess.checkpointing(state=state) as ckpt:
+            for epoch in sess.loop("epochs",
+                                   range(sess.arg("epochs", args.epochs))):
+                for s in sess.loop("train", range(steps)):
+                    b = synthetic_batch(cfg, args.batch, args.seq,
+                                        epoch * steps + s, args.seed)
+                    ckpt.state, m = ts(ckpt.state, b)
+                    if args.probe:
+                        flor.log("probe_grad_norm", m["grad_norm"])
+                if sess.executed("train"):
+                    flor.log("loss", m["loss"])
 
 
 def _print_store_summary(run_dir: str):

@@ -1,9 +1,13 @@
-"""Run-lineage CLI: inspect and garbage-collect a multi-run shared store.
+"""Run-lineage CLI: inspect, QUERY and garbage-collect a multi-run store.
 
     PYTHONPATH=src python -m repro.launch.runs list --store-root STORE
     PYTHONPATH=src python -m repro.launch.runs show RUN --store-root STORE
     PYTHONPATH=src python -m repro.launch.runs gc   --store-root STORE
     PYTHONPATH=src python -m repro.launch.runs rm RUN --store-root STORE [--gc]
+    PYTHONPATH=src python -m repro.launch.runs logs --store-root STORE \
+        [--run RUN] [--key loss] [--no-replay]
+    PYTHONPATH=src python -m repro.launch.runs pivot --store-root STORE \
+        [loss grad_norm ...] [--run RUN]
 
 `--store-root` also accepts a RUN DIRECTORY (anything containing
 flor.run.json): the CLI follows the binding to the store the run actually
@@ -14,27 +18,23 @@ too.
 run's manifests, extended by `CheckpointStore.gc` with the cross-run parent
 closure — so after `rm A`, `gc` reclaims exactly the checkpoints and chunks
 no surviving descendant of A still resolves through.
+
+`logs` streams every fingerprint-log row of every registered run (tagged
+run_id/parent/source); `pivot` prints one row per (run, epoch) with log
+keys as columns — the cross-run hindsight-logging view (`flor.log_records`
+/ `flor.pivot` are the library spellings).
 """
 from __future__ import annotations
 
 import argparse
-import os
+import json
 import sys
 import time
 
 from repro.checkpoint import CheckpointStore, RunRegistry
-from repro.checkpoint.lineage import read_run_meta
+from repro.core.query import log_records, pivot, resolve_store_root
 
-
-def _resolve_store_root(path: str) -> str:
-    """Accept a store root directly, or a run dir carrying flor.run.json."""
-    meta = read_run_meta(path)
-    if meta.get("store_root"):
-        return meta["store_root"]
-    if os.path.isdir(os.path.join(path, "store")) \
-            and not os.path.isdir(os.path.join(path, "manifests")):
-        return os.path.join(path, "store")
-    return path
+_resolve_store_root = resolve_store_root      # back-compat alias
 
 
 def _fmt_ts(ts) -> str:
@@ -122,6 +122,49 @@ def cmd_rm(store: CheckpointStore, registry: RunRegistry, args) -> int:
     return 0
 
 
+def cmd_logs(store: CheckpointStore, registry: RunRegistry, args) -> int:
+    rows = log_records(args.store_root, run=args.run, key=args.key,
+                       include_replay=not args.no_replay)
+    if not rows:
+        print("no log records found")
+        return 0
+    print(f"{'RUN':<24} {'PARENT':<24} {'SOURCE':<10} {'EPOCH':>5} "
+          f"{'SEQ':>4}  {'KEY':<18} VALUE")
+    for r in rows:
+        print(f"{str(r['run_id']):<24} {str(r['parent_run'] or '-'):<24} "
+              f"{r['source']:<10} {str(r['epoch']):>5} {str(r['seq']):>4}  "
+              f"{str(r['key']):<18} {json.dumps(r['value'], default=str)}")
+    print(f"({len(rows)} rows)")
+    return 0
+
+
+def cmd_pivot(store: CheckpointStore, registry: RunRegistry, args) -> int:
+    rows = pivot(args.store_root, *args.keys, run=args.run,
+                 include_replay=not args.no_replay)
+    if not rows:
+        print("no log records found")
+        return 0
+    cols = []
+    for r in rows:
+        for k in r:
+            if k not in cols and k not in ("run_id", "parent_run", "epoch"):
+                cols.append(k)
+    header = f"{'RUN':<24} {'PARENT':<24} {'EPOCH':>5}"
+    for c in cols:
+        header += f" {c:>14}"
+    print(header)
+    for r in rows:
+        line = (f"{str(r['run_id']):<24} {str(r['parent_run'] or '-'):<24} "
+                f"{str(r['epoch']):>5}")
+        for c in cols:
+            v = r.get(c)
+            line += f" {v:>14.6g}" if isinstance(v, float) \
+                else f" {str(v if v is not None else '-'):>14}"
+        print(line)
+    print(f"({len(rows)} rows x {len(cols)} keys)")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="repro.launch.runs",
                                  description=__doc__.splitlines()[0])
@@ -144,13 +187,27 @@ def main(argv=None) -> int:
                       help="unregister even with registered descendants")
     p_rm.add_argument("--gc", action="store_true",
                       help="run gc immediately after unregistering")
+    p_logs = sub.add_parser("logs", parents=[common],
+                            help="every log row across the lineage")
+    p_logs.add_argument("--run", default=None, help="restrict to one run id")
+    p_logs.add_argument("--key", default=None, help="restrict to one log key")
+    p_logs.add_argument("--no-replay", action="store_true",
+                        help="record logs only (skip hindsight replay logs)")
+    p_piv = sub.add_parser("pivot", parents=[common],
+                           help="one row per (run, epoch), keys as columns")
+    p_piv.add_argument("keys", nargs="*",
+                       help="log keys to pivot (default: all observed)")
+    p_piv.add_argument("--run", default=None, help="restrict to one run id")
+    p_piv.add_argument("--no-replay", action="store_true",
+                       help="record logs only (skip hindsight replay logs)")
     args = ap.parse_args(argv)
 
-    root = _resolve_store_root(args.store_root)
+    root = resolve_store_root(args.store_root)
     store = CheckpointStore(root)
     registry = RunRegistry(root)
-    return {"list": cmd_list, "show": cmd_show,
-            "gc": cmd_gc, "rm": cmd_rm}[args.cmd](store, registry, args)
+    return {"list": cmd_list, "show": cmd_show, "gc": cmd_gc, "rm": cmd_rm,
+            "logs": cmd_logs, "pivot": cmd_pivot}[args.cmd](store, registry,
+                                                            args)
 
 
 if __name__ == "__main__":

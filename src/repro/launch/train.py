@@ -84,48 +84,51 @@ def main():
             print(f"vanilla wall {time.time() - t0:.2f}s")
             return
 
-        flor.init(args.run_dir, mode="record", epsilon=args.epsilon,
-                  adaptive=not args.no_adaptive,
-                  store_root=args.store_root, run_id=args.run_id,
-                  parent_run=args.parent_run)
-        ctx = flor.get_context()
-        if ctx.parent_run and not ctx.store.list_keys():
-            # derived run (fine-tune of a fine-tune): start from the
-            # ancestor's final state; the first checkpoint is already a
-            # cross-run delta against it
-            print(f"warm start from run {ctx.parent_run!r}", flush=True)
-            state = flor.warm_start("train", like=state)
-            state = jax.tree_util.tree_map(jnp.asarray, state)
-        # crash-restart: resume from the latest epoch checkpoint if any
-        done = set()
-        for k in ctx.store.list_keys():
-            if "_at_" in k:
-                try:
-                    done.add(int(k.split("_at_")[1].split(".")[0]))
-                except ValueError:
-                    pass
-        resume_from = max(done) + 1 if done else 0
-        if resume_from:
-            # physical restore of the latest Loop End Checkpoint, then skip
-            # the completed epochs — restart == weak-init replay
-            print(f"resuming: restoring epoch {max(done)} checkpoint",
-                  flush=True)
-            state = ctx.store.get_tree(f"train@{max(done)}.0", like=state)
+        with flor.Session(
+                args.run_dir, mode="record",
+                record=flor.RecordSpec(epsilon=args.epsilon,
+                                       adaptive=not args.no_adaptive),
+                lineage=flor.LineageSpec(store_root=args.store_root,
+                                         run_id=args.run_id,
+                                         parent_run=args.parent_run)) as sess:
+            ctx = sess.ctx
+            if ctx.parent_run and not ctx.store.list_keys():
+                # derived run (fine-tune of a fine-tune): start from the
+                # ancestor's final state; the first checkpoint is already a
+                # cross-run delta against it
+                print(f"warm start from run {ctx.parent_run!r}", flush=True)
+                state = sess.warm_start("train", like=state)
+                state = jax.tree_util.tree_map(jnp.asarray, state)
+            # crash-restart: resume from the latest epoch checkpoint if any
+            done = set()
+            for k in ctx.store.list_keys():
+                if "_at_" in k:
+                    try:
+                        done.add(int(k.split("_at_")[1].split(".")[0]))
+                    except ValueError:
+                        pass
+            resume_from = max(done) + 1 if done else 0
+            if resume_from:
+                # physical restore of the latest Loop End Checkpoint, then
+                # skip the completed epochs — restart == weak-init replay
+                print(f"resuming: restoring epoch {max(done)} checkpoint",
+                      flush=True)
+                state = ctx.store.get_tree(f"train@{max(done)}.0", like=state)
 
-        t0 = time.time()
-        for epoch in flor.generator(range(args.epochs)):
-            if epoch < resume_from:
-                continue
-            if flor.skipblock.step_into("train"):
-                for s in range(args.steps_per_epoch):
-                    b = synthetic_batch(cfg, args.batch, args.seq,
-                                        epoch * args.steps_per_epoch + s,
-                                        args.seed)
-                    state, m = ts(state, b)
-                flor.log("loss", m["loss"])
-            state = flor.skipblock.end("train", state)
-            print(f"epoch {epoch} done", flush=True)
-        flor.finish()
+            t0 = time.time()
+            steps = sess.arg("steps_per_epoch", args.steps_per_epoch)
+            with sess.checkpointing(state=state) as ckpt:
+                for epoch in sess.loop("epochs",
+                                       range(sess.arg("epochs", args.epochs))):
+                    if epoch < resume_from:
+                        continue
+                    for s in sess.loop("train", range(steps)):
+                        b = synthetic_batch(cfg, args.batch, args.seq,
+                                            epoch * steps + s, args.seed)
+                        ckpt.state, m = ts(ckpt.state, b)
+                    flor.log("loss", m["loss"])
+                    print(f"epoch {epoch} done", flush=True)
+            state = ckpt.state
         print(f"record wall {time.time() - t0:.2f}s")
 
 

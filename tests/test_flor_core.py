@@ -207,8 +207,12 @@ def test_instrument_wraps_inner_loop_and_main_generator():
         report(metrics)
     """)
     out, rep = instrument_source(src)
-    assert "flor.generator(range(4))" in out
-    assert "flor.skipblock.step_into" in out
+    # session surface: outer loop wraps the main iterator, inner loop is a
+    # named flor.loop inside a flor.checkpointing scope
+    assert "flor.loop('main_L4', range(4))" in out
+    assert "flor.loop('L5'" in out
+    assert "flor.checkpointing(" in out
+    assert "flor.skipblock" not in out
     assert list(rep.instrumented.values()) == [["state", "metrics"]]
     # main loop itself is not skippable (report() is rule 5 anyway)
     assert len(rep.main_loops) == 1

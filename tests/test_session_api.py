@@ -1,0 +1,396 @@
+"""Session-first API: typed specs, Session lifecycle (nested/sequential,
+legacy-shim equivalence), flor.loop skip/exec parity with the old
+generator+skipblock protocol, flor.arg record->replay round-trips, the
+cross-run log query surface, and the satellite fixes (fingerprint-log seq
+continuity, replay-log rotation, calibration reuse, init() failure
+atomicity)."""
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.flor as flor
+from repro.core.context import FingerprintLog, FlorDeprecationWarning
+from repro.core import context as ctx_mod
+
+
+def _state(x=0.0):
+    return {"w": np.arange(6.0) + x, "b": np.zeros(3) + x}
+
+
+def _step(s):
+    return {k: v + 1.0 for k, v in s.items()}
+
+
+def _leaves_equal(a, b):
+    import jax
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        if not np.array_equal(np.asarray(x), np.asarray(y)):
+            return False
+    return True
+
+
+def _legacy_record(run, epochs=4, steps=3):
+    """A run recorded entirely on the OLD surface (shims)."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", FlorDeprecationWarning)
+        flor.init(run, mode="record", adaptive=False)
+        s = _state()
+        for e in flor.generator(range(epochs)):
+            if flor.skipblock.step_into("train"):
+                for _ in range(steps):
+                    s = _step(s)
+                flor.log("loss", float(s["w"][0]))
+            s = flor.skipblock.end("train", s)
+        flor.finish()
+    return s
+
+
+def _session_record(run, epochs=4, steps=3, **session_kw):
+    with flor.Session(run, mode="record",
+                      record=flor.RecordSpec(adaptive=False),
+                      **session_kw) as sess:
+        with sess.checkpointing(state=_state()) as ckpt:
+            for e in sess.loop("epochs", range(epochs)):
+                for _ in sess.loop("train", range(steps)):
+                    ckpt.state = _step(ckpt.state)
+                sess.log("loss", float(ckpt.state["w"][0]))
+        return ckpt.state
+
+
+# ------------------------------------------------------------ specs ---------
+def test_specs_validate():
+    with pytest.raises(ValueError):
+        flor.RecordSpec(epsilon=0.0)
+    with pytest.raises(ValueError):
+        flor.ReplaySpec(init_mode="eager")
+    with pytest.raises(ValueError):
+        flor.ReplaySpec(pid=2, nworkers=2)
+    with pytest.raises(ValueError):
+        flor.LineageSpec(parent_run="base")      # needs a shared store
+    with pytest.raises(ValueError):
+        # run_id alone is not enough: the parent can't live in a private
+        # per-run store either
+        flor.LineageSpec(parent_run="base", run_id="ft1")
+    assert flor.ReplaySpec(probed={"a"}).probed == frozenset({"a"})
+
+
+def test_session_rejects_mismatched_spec(tmp_path):
+    with pytest.raises(ValueError):
+        flor.Session(str(tmp_path / "r"), mode="record",
+                     replay=flor.ReplaySpec())
+    with pytest.raises(ValueError):
+        flor.Session(str(tmp_path / "r"), mode="replay",
+                     record=flor.RecordSpec())
+    with pytest.raises(TypeError):
+        from repro.core.session import specs_from_kwargs
+        specs_from_kwargs("record", {"bogus_knob": 1})
+
+
+# ------------------------------------------------- session lifecycle --------
+def test_sequential_and_nested_sessions(tmp_path):
+    r1, r2 = str(tmp_path / "r1"), str(tmp_path / "r2")
+    with flor.Session(r1, record=flor.RecordSpec(adaptive=False)) as s1:
+        assert flor.get_context() is s1.ctx
+        with flor.Session(r2, record=flor.RecordSpec(adaptive=False)) as s2:
+            # innermost session is the ambient context; the outer one is
+            # still addressable explicitly
+            assert flor.get_context() is s2.ctx
+            assert s1.ctx is not s2.ctx
+        assert flor.get_context() is s1.ctx
+    with pytest.raises(RuntimeError):
+        flor.get_context()
+    # sequential reuse: a fresh session on the same dir is a resume
+    with flor.Session(r1, record=flor.RecordSpec(adaptive=False)) as s3:
+        assert flor.get_context() is s3.ctx
+
+
+def test_session_failure_marks_registry(tmp_path):
+    run = str(tmp_path / "run")
+    with pytest.raises(RuntimeError, match="boom"):
+        with flor.Session(run, record=flor.RecordSpec(adaptive=False)) as s:
+            rid = s.run_id
+            raise RuntimeError("boom")
+    from repro.checkpoint import RunRegistry
+    rec = RunRegistry(os.path.join(run, "store")).get(rid)
+    assert rec["status"] == "failed"
+    with pytest.raises(RuntimeError):
+        flor.get_context()                       # unbound despite the raise
+
+
+def test_shim_equivalence_with_session(tmp_path):
+    """The legacy protocol and the session surface record interchangeable
+    runs: each replays the other's record dir bit-identically."""
+    legacy_run = str(tmp_path / "legacy")
+    sess_run = str(tmp_path / "sess")
+    final_legacy = _legacy_record(legacy_run)
+    final_sess = _session_record(sess_run)
+    assert _leaves_equal(final_legacy, {"state": final_sess}["state"])
+
+    # session replay over the LEGACY record dir: every epoch skips
+    with flor.Session(legacy_run, mode="replay") as sess:
+        with sess.checkpointing(state=_state()) as ckpt:
+            for e in sess.loop("epochs", range(4)):
+                for _ in sess.loop("train", range(3)):
+                    raise AssertionError("must skip")
+    assert _leaves_equal(ckpt.state, final_legacy)
+
+    # legacy replay over the SESSION record dir
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", FlorDeprecationWarning)
+        flor.init(sess_run, mode="replay")
+        s = {"state": _state()}
+        for e in flor.generator(range(4)):
+            if flor.skipblock.step_into("train"):
+                raise AssertionError("must skip")
+            s = flor.skipblock.end("train", s)
+        flor.finish()
+    assert _leaves_equal(s["state"], final_sess)
+
+
+# -------------------------------------------------- loop semantics ----------
+@pytest.mark.parametrize("probed", [frozenset(), frozenset({"train"})])
+def test_loop_skip_exec_parity_on_legacy_record(tmp_path, probed):
+    """flor.loop replay (both phases) over an OLD-API record dir matches the
+    record run exactly; probed blocks re-execute and fingerprints agree."""
+    run = str(tmp_path / "run")
+    final = _legacy_record(run)
+    with flor.Session(run, mode="replay",
+                      replay=flor.ReplaySpec(probed=probed)) as sess:
+        with sess.checkpointing(state=_state()) as ckpt:
+            for e in sess.loop("epochs", range(4)):
+                ran = 0
+                for _ in sess.loop("train", range(3)):
+                    ckpt.state = _step(ckpt.state)
+                    ran += 1
+                assert sess.executed("train") == bool(probed)
+                assert ran == (3 if probed else 0)
+                if sess.executed("train"):
+                    sess.log("loss", float(ckpt.state["w"][0]))
+    assert _leaves_equal(ckpt.state, final)
+    if probed:
+        rec, reps = flor.run_logs(run)
+        res = flor.deferred_check(rec, reps)
+        assert res.ok and res.compared == 4
+
+
+def test_executed_state_is_per_context(tmp_path):
+    """sess.executed() must reflect THIS session's blocks, not a sibling's."""
+    r1, r2 = str(tmp_path / "r1"), str(tmp_path / "r2")
+    with flor.Session(r1, record=flor.RecordSpec(adaptive=False)) as s1:
+        with s1.checkpointing(state=_state()) as ckpt:
+            for e in s1.loop("epochs", range(1)):
+                for _ in s1.loop("train", range(2)):
+                    ckpt.state = _step(ckpt.state)
+        assert s1.executed("train")
+    with flor.Session(r2, record=flor.RecordSpec(adaptive=False)) as s2:
+        assert not s2.executed("train")           # fresh context: no leak
+
+
+def test_loop_without_scope_is_probe_loop(tmp_path):
+    """A nested loop with no checkpointing scope always executes (nothing
+    declared to restore) — on record AND on replay."""
+    run = str(tmp_path / "run")
+    with flor.Session(run, record=flor.RecordSpec(adaptive=False)):
+        for e in flor.loop("epochs", range(2)):
+            n = sum(1 for _ in flor.loop("probe", range(5)))
+            assert n == 5 and flor.executed("probe")
+    with flor.Session(run, mode="replay"):
+        for e in flor.loop("epochs", range(2)):
+            n = sum(1 for _ in flor.loop("probe", range(5)))
+            assert n == 5
+
+
+def test_loop_early_exit_aborts_block(tmp_path):
+    """break out of an inner loop -> no checkpoint for that occurrence, so
+    replay re-executes the block logically instead of restoring garbage."""
+    run = str(tmp_path / "run")
+    with flor.Session(run, record=flor.RecordSpec(adaptive=False)) as sess:
+        store = sess.ctx.store
+        with sess.checkpointing(state=_state()) as ckpt:
+            with pytest.warns(UserWarning, match="exited early"):
+                for e in sess.loop("epochs", range(2)):
+                    for i in sess.loop("train", range(3)):
+                        ckpt.state = _step(ckpt.state)
+                        if e == 0 and i == 1:
+                            break                 # partial epoch 0
+        final = ckpt.state
+    assert not store.has("train@0.0")             # aborted: nothing memoized
+    assert store.has("train@1.0")
+    with flor.Session(run, mode="replay") as sess:
+        with sess.checkpointing(state=_state()) as ckpt:
+            for e in sess.loop("epochs", range(2)):
+                ran = 0
+                for i in sess.loop("train", range(3)):
+                    ckpt.state = _step(ckpt.state)
+                    ran += 1
+                    if e == 0 and i == 1:
+                        break
+                # epoch 0 re-executes (no ckpt), epoch 1 restores
+                assert ran == (2 if e == 0 else 0)
+    assert _leaves_equal(ckpt.state, final)
+
+
+def test_callable_iterable_not_built_on_skip(tmp_path):
+    run = str(tmp_path / "run")
+    built = []
+
+    def make_loader():
+        built.append(1)
+        return range(2)
+
+    with flor.Session(run, record=flor.RecordSpec(adaptive=False)) as sess:
+        with sess.checkpointing(state=_state()) as ckpt:
+            for e in sess.loop("epochs", range(2)):
+                for _ in sess.loop("train", make_loader):
+                    ckpt.state = _step(ckpt.state)
+    assert len(built) == 2
+    built.clear()
+    with flor.Session(run, mode="replay") as sess:
+        with sess.checkpointing(state=_state()) as ckpt:
+            for e in sess.loop("epochs", range(2)):
+                for _ in sess.loop("train", make_loader):
+                    pass
+    assert built == []                            # skipped: never constructed
+
+
+# ----------------------------------------------------- flor.arg -------------
+def test_arg_record_replay_roundtrip(tmp_path, monkeypatch):
+    run = str(tmp_path / "run")
+    monkeypatch.setenv("FLOR_ARGS", "lr=0.5,epochs=7,tag=exp1")
+    with flor.Session(run, record=flor.RecordSpec(adaptive=False)) as sess:
+        assert sess.arg("lr", 1e-3) == 0.5        # override, float-coerced
+        assert sess.arg("epochs", 3) == 7         # override, int-coerced
+        assert sess.arg("tag", "base") == "exp1"
+        assert sess.arg("beta", 0.9) == 0.9       # code default recorded
+    monkeypatch.delenv("FLOR_ARGS")
+    with flor.Session(run, mode="replay") as sess:
+        # replay returns RECORDED values regardless of new code defaults
+        assert sess.arg("lr", 123.0) == 0.5
+        assert sess.arg("epochs", 999) == 7
+        assert sess.arg("tag", "other") == "exp1"
+        assert sess.arg("beta", 0.1) == 0.9
+        assert sess.arg("never_recorded", 42) == 42
+
+
+# ------------------------------------------------- query surface ------------
+def test_log_records_and_pivot_across_lineage(tmp_path):
+    store = str(tmp_path / "store")
+    _session_record(str(tmp_path / "base"), epochs=2,
+                    lineage=flor.LineageSpec(store_root=store, run_id="base"))
+    with flor.Session(str(tmp_path / "ft1"), mode="record",
+                      record=flor.RecordSpec(adaptive=False),
+                      lineage=flor.LineageSpec(store_root=store, run_id="ft1",
+                                               parent_run="base")) as sess:
+        start = sess.warm_start("train", like={"state": _state()})
+        with sess.checkpointing(state=start["state"]) as ckpt:
+            for e in sess.loop("epochs", range(2)):
+                for _ in sess.loop("train", range(3)):
+                    ckpt.state = _step(ckpt.state)
+                sess.log("loss", float(ckpt.state["w"][0]))
+
+    rows = flor.log_records(store)
+    by_run = {}
+    for r in rows:
+        by_run.setdefault(r["run_id"], []).append(r)
+    assert set(by_run) == {"base", "ft1"}
+    assert all(r["parent_run"] is None for r in by_run["base"])
+    assert all(r["parent_run"] == "base" for r in by_run["ft1"])
+    assert {r["key"] for r in rows} == {"loss"}
+
+    piv = flor.pivot(store, "loss")
+    assert len(piv) == 4                          # 2 runs x 2 epochs
+    assert [(p["run_id"], p["epoch"]) for p in piv] == \
+        [("base", 0), ("base", 1), ("ft1", 0), ("ft1", 1)]
+    # ft1 warm-started from base's final state: losses continue the curve
+    assert piv[2]["loss"] > piv[1]["loss"]
+    # a run DIR also resolves (follows flor.run.json to the shared store)
+    assert len(flor.pivot(str(tmp_path / "ft1"), "loss")) == 4
+    # filters
+    assert all(r["run_id"] == "ft1" for r in flor.log_records(store, run="ft1"))
+
+
+def test_pivot_on_legacy_private_store(tmp_path):
+    run = str(tmp_path / "run")
+    _legacy_record(run, epochs=3)
+    piv = flor.pivot(run, "loss")
+    assert len(piv) == 3 and all("loss" in p for p in piv)
+
+
+# ------------------------------------------------- satellite fixes ----------
+def test_fingerprint_log_resumes_seq(tmp_path):
+    p = str(tmp_path / "logs" / "record.jsonl")
+    log = FingerprintLog(p)
+    log.log(0, "a", 1)
+    log.log(0, "b", 2)
+    log.close()
+    log = FingerprintLog(p)                       # record resume: continue
+    log.log(1, "a", 3)
+    log.close()
+    seqs = [r["seq"] for r in FingerprintLog.read(p)]
+    assert seqs == [0, 1, 2]                      # no duplicate seq values
+
+    fresh = FingerprintLog(p, fresh=True)         # replay attempt: rotate
+    fresh.log(0, "a", 9)
+    fresh.close()
+    recs = FingerprintLog.read(p)
+    assert len(recs) == 1 and recs[0]["seq"] == 0
+
+
+def test_replay_attempts_rotate_log(tmp_path):
+    run = str(tmp_path / "run")
+    _legacy_record(run, epochs=2)
+    for _ in range(2):                            # two replay attempts
+        with flor.Session(run, mode="replay",
+                          replay=flor.ReplaySpec(probed=frozenset({"train"}))) \
+                as sess:
+            with sess.checkpointing(state=_state()) as ckpt:
+                for e in sess.loop("epochs", range(2)):
+                    for _ in sess.loop("train", range(3)):
+                        ckpt.state = _step(ckpt.state)
+                    sess.log("loss", float(ckpt.state["w"][0]))
+    rec, reps = flor.run_logs(run)
+    res = flor.deferred_check(rec, reps)
+    assert res.ok, res.anomalies                  # second attempt replaced,
+    assert res.compared == 2                      # not appended to, the first
+
+
+def test_calibration_probe_skipped_on_resume(tmp_path):
+    run = str(tmp_path / "run")
+    calls = []
+    orig = ctx_mod.FlorContext._calibrate_store
+
+    def counting(self):
+        calls.append(1)
+        return orig(self)
+
+    ctx_mod.FlorContext._calibrate_store = counting
+    try:
+        with flor.Session(run, record=flor.RecordSpec()) as s1:
+            bps = s1.ctx.controller.write_bps
+        assert calls == [1]                       # fresh store: one probe
+        with flor.Session(run, record=flor.RecordSpec()) as s2:
+            assert s2.ctx.controller.write_bps == bps
+        assert calls == [1]                       # resume: probe skipped
+    finally:
+        ctx_mod.FlorContext._calibrate_store = orig
+
+
+def test_init_failure_leaves_no_closed_context(tmp_path):
+    """Satellite: a failing re-init must not leave the FINISHED old context
+    bound — get_context() should say 'no context', not hand out a corpse."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", FlorDeprecationWarning)
+        flor.init(str(tmp_path / "ok"), mode="record", adaptive=False)
+        with pytest.raises(Exception):
+            flor.init(str(tmp_path / "bad"), mode="neither")   # bad mode
+        with pytest.raises(RuntimeError, match="no active Flor context"):
+            flor.get_context()
+        flor.finish()                             # idempotent no-op
+
+
+def test_strict_deprecations_raise(tmp_path, monkeypatch):
+    monkeypatch.setenv("FLOR_STRICT_DEPRECATIONS", "1")
+    with pytest.raises(FlorDeprecationWarning):
+        flor.init(str(tmp_path / "run"), mode="record", adaptive=False)
