@@ -1,51 +1,65 @@
-"""Paper Fig. 12: replay latency by probe position.
+"""Paper Fig. 12 + planned replay: latency by probe position, and
+cost-balanced vs contiguous partitioning on a SKEWED run.
 
-Outer-loop probe -> partial replay (memoized epochs skipped, state restored
-physically): latency is restore-bound. Inner-loop probe -> logical redo of
-every epoch. Both compared against a vanilla re-execution.
+Part 1 (fig12): outer-loop probe -> partial replay (memoized epochs
+skipped, state restored physically): latency is restore-bound. Inner-loop
+probe -> logical redo of every epoch. Both vs a vanilla re-execution.
+Runs on the session surface through the replay planner.
+
+Part 2 (skew): epochs with wildly non-uniform compute (a few heavy epochs
+among many light ones — think curriculum phases or data-size drift). The
+record-side block profile measures the skew; the planner's per-segment
+cost estimates expose it; LPT partitioning then beats the blind contiguous
+split by construction: contiguous lands both heavy epochs on ONE worker.
+Workers run serially here (1-CPU container) and parallel wall = max over
+workers — the coordination-free bound (workers never communicate).
+Asserts: balanced >= 1.3x faster than contiguous, deferred check ok, and
+the per-segment MERGED multi-worker log is bit-identical to a
+single-worker replay of the same plan.
 """
 from __future__ import annotations
 
 import shutil
 import time
 
+import jax
+
 import repro.flor as flor
 from benchmarks.common import Rows, make_runner, train_like
+from repro.core.query import merge_replay_logs
+from repro.replay import balanced_shares, build_plan, contiguous_shares
 
 EPOCHS = 8
+# part-2 skew: steps per epoch — two adjacent heavy epochs at the end is
+# the contiguous split's worst case (both land on the last worker)
+SKEW = [1, 1, 1, 1, 1, 1, 16, 16]
 
 
-def _record(state0, run_epoch, run_dir):
-    shutil.rmtree(run_dir, ignore_errors=True)
-    flor.init(run_dir, mode="record", adaptive=False)
-    state = state0
-    for e in flor.generator(range(EPOCHS)):
-        if flor.skipblock.step_into("train"):
-            state, m = run_epoch(state, e)
-            flor.log("loss", m["loss"])
-        state = flor.skipblock.end("train", state)
-    flor.finish()
+# ------------------------------------------------------------------ fig12 --
+def _session_loop(run_dir, mode, state0, run_epoch, probed=frozenset(),
+                  plan=None, outer_probe=False):
+    spec = flor.ReplaySpec(probed=probed, plan=plan) if mode == "replay" \
+        else None
+    kw = {"replay": spec} if mode == "replay" else \
+        {"record": flor.RecordSpec(adaptive=False)}
+    with flor.Session(run_dir, mode=mode, **kw) as sess:
+        state = state0
+        with sess.checkpointing(state=state) as ckpt:
+            for e in sess.loop("epochs", range(EPOCHS)):
+                for _ in sess.loop("train", range(1)):
+                    ckpt.state, m = run_epoch(ckpt.state, e)
+                    flor.log("loss", m["loss"])
+                if outer_probe:
+                    flor.log("outer_probe", float(ckpt.state.step))
+        return ckpt.state
 
 
-def _replay(state0, run_epoch, run_dir, probed):
-    flor.init(run_dir, mode="replay", probed=probed)
-    t0 = time.perf_counter()
-    state = state0
-    for e in flor.generator(range(EPOCHS)):
-        if flor.skipblock.step_into("train"):
-            state, m = run_epoch(state, e)
-        state = flor.skipblock.end("train", state)
-        flor.log("outer_probe", float(state.step))   # hindsight outer probe
-    wall = time.perf_counter() - t0
-    flor.finish()
-    return wall
-
-
-def run(rows: Rows, tmp="/tmp/bench_replay"):
+def run_fig12(rows: Rows, tmp="/tmp/bench_replay"):
     cfg, kw = train_like()
     state0, run_epoch = make_runner(cfg, **kw)
     run_dir = f"{tmp}/run"
-    _record(state0, run_epoch, run_dir)
+    shutil.rmtree(run_dir, ignore_errors=True)
+    _session_loop(run_dir, "record", state0, run_epoch)
 
     t0 = time.perf_counter()
     state = state0
@@ -53,8 +67,19 @@ def run(rows: Rows, tmp="/tmp/bench_replay"):
         state, _ = run_epoch(state, e)
     t_vanilla = time.perf_counter() - t0
 
-    t_outer = _replay(state0, run_epoch, run_dir, probed=set())
-    t_inner = _replay(state0, run_epoch, run_dir, probed={"train"})
+    # outer probe: restore-only plan (no probed inner blocks)
+    plan = build_plan(run_dir, probed=set())
+    t0 = time.perf_counter()
+    _session_loop(run_dir, "replay", state0, run_epoch, plan=plan,
+                  outer_probe=True)
+    t_outer = time.perf_counter() - t0
+
+    # inner probe: every epoch re-executes logically
+    plan = build_plan(run_dir, probed={"train"})
+    t0 = time.perf_counter()
+    _session_loop(run_dir, "replay", state0, run_epoch,
+                  probed=frozenset({"train"}), plan=plan)
+    t_inner = time.perf_counter() - t0
 
     rows.add("replay_latency(fig12)", "vanilla_s", round(t_vanilla, 3))
     rows.add("replay_latency(fig12)", "outer_probe_s", round(t_outer, 3),
@@ -65,7 +90,100 @@ def run(rows: Rows, tmp="/tmp/bench_replay"):
              "full logical redo (1 worker)")
     rows.add("replay_latency(fig12)", "inner_probe_speedup",
              round(t_vanilla / max(t_inner, 1e-9), 2),
-             "~1x serial; parallelism = fig13")
+             "~1x serial; parallelism = fig13 / skew below")
+
+
+# ------------------------------------------------------------- skewed run --
+def _skew_loop(run_dir, mode, state0, run_step, pid=0, visits=None,
+               probed=frozenset()):
+    spec = flor.ReplaySpec(pid=pid, segments=visits, probed=probed) \
+        if mode == "replay" else None
+    kw = {"replay": spec} if mode == "replay" else \
+        {"record": flor.RecordSpec(adaptive=False)}
+    with flor.Session(run_dir, mode=mode, **kw) as sess:
+        state = state0
+        with sess.checkpointing(state=state) as ckpt:
+            for e in sess.loop("epochs", range(EPOCHS)):
+                base = sum(SKEW[:e])
+                for s in sess.loop("train", range(SKEW[e])):
+                    ckpt.state, m = run_step(ckpt.state, base + s)
+                    if mode == "replay":
+                        flor.log("probe", m["grad_norm"])   # hindsight probe
+                if sess.executed("train"):
+                    flor.log("loss", m["loss"])
+        return ckpt.state
+
+
+def run_skew(rows: Rows, tmp="/tmp/bench_replay_skew"):
+    import repro.configs as C
+    from repro.data import synthetic_batch
+    from repro.train.step import build_train_step
+    cfg = C.get_smoke("florbench-100m")
+    init_state, train_step = build_train_step(cfg)
+    ts = jax.jit(train_step)
+    state0 = jax.jit(init_state)(jax.random.PRNGKey(0))
+
+    def run_step(state, i):
+        state, m = ts(state, synthetic_batch(cfg, 4, 128, i, 0))
+        jax.block_until_ready(m["loss"])
+        return state, m
+
+    state0, _ = run_step(state0, 10 ** 6)       # warm the jit cache
+    run_dir = f"{tmp}/run"
+    shutil.rmtree(run_dir, ignore_errors=True)
+    _skew_loop(run_dir, "record", state0, run_step)
+
+    plan = build_plan(run_dir, probed={"train"})
+    work = plan.work_segments()
+    rows.add("replay_skew", "plan",
+             f"{len(plan.exec_segments())}/{len(plan.segments)} exec",
+             "; ".join(f"e{s.epoch}:{s.cost:.2f}s" for s in work))
+
+    # single worker: the merge baseline (pid 9 keeps its log distinct)
+    single = _run_share(run_dir, state0, run_step, plan, 9,
+                        plan.visits_for())
+    merged_single = merge_replay_logs(
+        run_dir, [("replay_p9", [s.epoch for s in work])])
+
+    results = {}
+    for label, split in (("contiguous", contiguous_shares),
+                         ("balanced", balanced_shares)):
+        shares = [sh for sh in split(work, 2) if sh]
+        walls, owners = [], []
+        for pid, sh in enumerate(shares):
+            walls.append(_run_share(run_dir, state0, run_step, plan, pid,
+                                    plan.visits_for(sh)))
+            owners.append((f"replay_p{pid}", [s.epoch for s in sh]))
+        wall = max(walls)    # parallel wall: workers never communicate
+        results[label] = wall
+        merged = merge_replay_logs(run_dir, owners)
+        rec, _ = flor.run_logs(run_dir)
+        res = flor.deferred_check(rec, merged)
+        assert res.ok, f"{label}: deferred check failed: {res.anomalies[:3]}"
+        assert merged == merged_single, \
+            f"{label}: merged multi-worker log differs from single-worker"
+        rows.add("replay_skew", f"{label}_wall_s", round(wall, 2),
+                 f"per-worker {[round(w, 2) for w in walls]}")
+
+    speedup = results["contiguous"] / max(results["balanced"], 1e-9)
+    rows.add("replay_skew", "balanced_vs_contiguous",
+             round(speedup, 2), "LPT over measured per-epoch cost")
+    rows.add("replay_skew", "single_worker_s", round(single, 2))
+    assert speedup >= 1.3, \
+        f"cost-balanced partitioning only {speedup:.2f}x vs contiguous " \
+        f"on a skewed run (expected >= 1.3x)"
+
+
+def _run_share(run_dir, state0, run_step, plan, pid, visits) -> float:
+    t0 = time.perf_counter()
+    _skew_loop(run_dir, "replay", state0, run_step, pid=pid, visits=visits,
+               probed=plan.probed)
+    return time.perf_counter() - t0
+
+
+def run(rows: Rows, tmp="/tmp/bench_replay"):
+    run_fig12(rows, tmp)
+    run_skew(rows, tmp + "_skew")
 
 
 if __name__ == "__main__":

@@ -1,13 +1,23 @@
-"""Hindsight parallelism: replay a sequential training run on G workers.
+"""Hindsight parallelism, query-driven: record, EDIT the script to add the
+log statement you wish you had, and let the replay planner work out the
+minimal re-execution — then scale it over G workers.
 
     PYTHONPATH=src python examples/parallel_replay.py --nworkers 4
 
-Records a run, then launches G coordination-free replay workers (separate
-processes, as on a cluster) each re-executing its contiguous share of epochs
-with per-step probes, and merges + checks the logs. Work partitioning and
-strong/weak initialization are the paper's Fig. 9 machinery.
+Flow:
+  1. record a run with the stock training launcher (the record session
+     stores a copy of the driving script automatically);
+  2. simulate the hindsight edit: copy the recorded script and insert a
+     ``flor.log`` probe INSIDE the training loop;
+  3. replay with ``--probe auto``: the launcher diffs recorded vs edited
+     source, maps the added line to its innermost enclosing flor loop
+     ("train"), plans which epochs must re-execute at what cost, schedules
+     them cost-balanced over G worker processes (dynamic work queue), and
+     merges the per-worker logs by plan segment;
+  4. the deferred fingerprint check must pass on the merged log.
 """
 import argparse
+import importlib.util
 import os
 import shutil
 import subprocess
@@ -37,15 +47,36 @@ subprocess.run([sys.executable, "-m", "repro.launch.train",
                env=env, check=True)
 print(f"record wall {time.time() - t0:.1f}s")
 
-print(f"== parallel replay: {args.nworkers} workers, inner probe ==",
+# the hindsight edit: add a probe line inside the train loop of the SAME
+# script that recorded (here: the train launcher), exactly what a user does
+# when training looked wrong and they wish they had logged more
+try:
+    train_py = importlib.util.find_spec("repro.launch.train").origin
+except (ImportError, AttributeError):
+    sys.path.insert(0, SRC)
+    train_py = importlib.util.find_spec("repro.launch.train").origin
+src_lines = open(train_py).read().splitlines(keepends=True)
+anchor = next(i for i, ln in enumerate(src_lines)
+              if "ckpt.state, m = ts(ckpt.state, b)" in ln)
+indent = src_lines[anchor][: len(src_lines[anchor])
+                           - len(src_lines[anchor].lstrip())]
+probe = indent + 'flor.log("probe_grad_norm", m["grad_norm"])\n'
+edited = os.path.join(args.run_dir, "train_probed.py")
+with open(edited, "w") as f:
+    f.writelines(src_lines[: anchor + 1] + [probe]
+                 + src_lines[anchor + 1:])
+print(f"== hindsight edit: probe inserted after line {anchor + 1} "
+      f"-> {edited} ==")
+
+print(f"== planned replay: --probe auto, {args.nworkers} workers ==",
       flush=True)
 t0 = time.time()
 subprocess.run([sys.executable, "-m", "repro.launch.replay",
                 "--run-dir", args.run_dir, "--arch", "florbench-100m",
                 "--smoke", "--epochs", str(args.epochs),
                 "--steps-per-epoch", "6", "--nworkers", str(args.nworkers),
-                "--probe", "train", "--init-mode", args.init_mode,
-                "--check"],
+                "--probe", "auto", "--current-src", edited,
+                "--init-mode", args.init_mode, "--check"],
                env=env, check=True)
 print(f"replay wall {time.time() - t0:.1f}s "
       f"(workers are processes; on a cluster each maps to a pod slice)")

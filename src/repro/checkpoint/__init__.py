@@ -2,4 +2,5 @@ from repro.checkpoint.store import CheckpointStore  # noqa: F401
 from repro.checkpoint.async_writer import AsyncWriter  # noqa: F401
 from repro.checkpoint.pipeline import CheckpointPipeline  # noqa: F401
 from repro.checkpoint.lineage import (  # noqa: F401
-    RunRegistry, generate_run_id, read_run_meta, write_run_meta)
+    RunIdCollision, RunRegistry, generate_run_id, read_run_meta,
+    write_run_meta)

@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 import time
 import uuid
 from typing import Optional
@@ -42,6 +43,13 @@ from typing import Optional
 from repro.checkpoint.store import _atomic_write
 
 RUN_META_FILE = "flor.run.json"
+
+
+class RunIdCollision(RuntimeError):
+    """An exclusive registration lost the race: the run id already belongs
+    to a DIFFERENT run (other run_dir/namespace). Callers with generated
+    ids retry with a fresh id; callers with explicit ids surface the
+    conflict."""
 
 
 def generate_run_id() -> str:
@@ -80,36 +88,93 @@ class RunRegistry:
     def register(self, run_id: str, parent: Optional[str] = None,
                  run_dir: Optional[str] = None,
                  namespace: Optional[str] = None,
-                 meta: Optional[dict] = None) -> dict:
+                 meta: Optional[dict] = None,
+                 exclusive: bool = False) -> dict:
         """Create (or replace) a run record at record-init time. A re-record
         into the same (run_dir, namespace) replaces the stale registration —
         its manifests were overwritten anyway, and a dangling record would
         pin dead chunks forever. Parent validation applies only to FIRST
         registration: a resumed run whose parent was since `runs rm`'d must
-        still relaunch (its closure survived the rm by design)."""
+        still relaunch (its closure survived the rm by design).
+
+        ``exclusive=True`` makes the CREATE atomic on the shared filesystem
+        (hard-link publish of a fully-written temp record): of two
+        simultaneous recorders racing the same run id, exactly one wins; the
+        loser gets :class:`RunIdCollision` and (when its id was generated)
+        retries with a fresh one. A record that already belongs to this
+        (run_dir, namespace) is a crash-restart/resume, not a collision."""
         if parent is not None and self.get(parent) is None \
                 and self.get(run_id) is None:
             raise ValueError(
                 f"parent run {parent!r} is not registered in this store "
                 f"(known runs: {[r['run_id'] for r in self.list_runs()]})")
-        for rec in self.list_runs():
-            if rec["run_id"] != run_id and run_dir is not None \
-                    and rec.get("run_dir") == run_dir \
-                    and rec.get("namespace") == namespace:
-                self.unregister(rec["run_id"])
-        prev = self.get(run_id)
         rec = {"run_id": run_id, "parent": parent, "namespace": namespace,
                "run_dir": run_dir, "status": "running",
                "created_at": time.time(), "finished_at": None,
-               # a crash-restart/resume re-registers the same run id: its
-               # prior final_keys must survive until finalize() updates
-               # them, or a no-op resume would break every descendant's
-               # warm start
-               "final_keys": dict(prev.get("final_keys") or {}) if prev
-               else {},
+               "final_keys": {},
                "meta": meta or {}}
+        # a re-record into the same (run_dir, namespace) under a NEW id must
+        # drop the stale registration on BOTH paths — a dangling record
+        # would show as a ghost in `runs list` and pin dead chunks through
+        # registry-driven gc forever
+        self._sweep_stale(run_id, run_dir, namespace)
+        if exclusive:
+            prev = self.get(run_id)
+            if prev is None:
+                if self._create_exclusive(rec):
+                    return rec
+                # lost the race between get() and link(): someone else owns
+                # the path now — reload and fall through to the ownership
+                # check below
+                prev = self.get(run_id)
+            if prev is not None and (prev.get("run_dir") != run_dir
+                                     or prev.get("namespace") != namespace):
+                raise RunIdCollision(
+                    f"run id {run_id!r} is already registered for "
+                    f"{prev.get('run_dir')!r} (ns {prev.get('namespace')!r})")
+            # else: our own stale/resumed registration — safe to replace
+        prev = self.get(run_id)
+        if prev:
+            # a crash-restart/resume re-registers the same run id: its
+            # prior final_keys must survive until finalize() updates
+            # them, or a no-op resume would break every descendant's
+            # warm start
+            rec["final_keys"] = dict(prev.get("final_keys") or {})
         self._write(rec)
         return rec
+
+    def _sweep_stale(self, run_id: str, run_dir: Optional[str],
+                     namespace: Optional[str]):
+        """Unregister OTHER run ids previously recorded into the same
+        (run_dir, namespace) — their manifests were overwritten anyway."""
+        if run_dir is None:
+            return
+        for other in self.list_runs():
+            if other["run_id"] != run_id \
+                    and other.get("run_dir") == run_dir \
+                    and other.get("namespace") == namespace:
+                self.unregister(other["run_id"])
+
+    def _create_exclusive(self, rec: dict) -> bool:
+        """Atomically publish a NEW run record; False when the path already
+        exists (a concurrent recorder won). The record is fully written to a
+        temp file first and published via hard link, so a racing reader can
+        never observe a torn record under the final name."""
+        path = self._path(rec["run_id"])
+        tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
+        try:
+            with open(tmp, "wb") as f:
+                f.write(json.dumps(rec, indent=1, default=str).encode())
+            try:
+                os.link(tmp, path)     # atomic create-if-absent
+                return True
+            except FileExistsError:
+                return False
+        finally:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
 
     def finalize(self, run_id: str, final_keys: dict,
                  status: str = "finished") -> Optional[dict]:

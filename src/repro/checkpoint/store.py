@@ -405,7 +405,7 @@ class CheckpointStore:
 
     # --------------------------------------------------------------- stats --
     def stats(self, keys: Optional[Iterable[str]] = None,
-              include_chunks: bool = True) -> dict:
+              include_chunks: bool = True, per_key: bool = False) -> dict:
         """Single-pass, memoized summary of manifests (default: the whole
         store; pass `keys` — possibly qualified — to restrict to one run's
         manifests while chain depths still follow parents across runs).
@@ -415,20 +415,26 @@ class CheckpointStore:
         rather than raising — this is a diagnostic, not a restore.
         `include_chunks=False` skips the objects-pool walk (O(store) stat
         calls on a large shared pool) and reports chunks/stored_bytes as
-        0 — use it when only manifest counts/depths are needed."""
+        0 — use it when only manifest counts/depths are needed.
+        `per_key=True` adds a ``per_key`` map {input key: {depth, kind,
+        direct_chunks}} — the resume-cost raw material the replay planner
+        turns into per-segment estimates."""
         cache: dict[tuple, Optional[dict]] = {}
 
         def load(t):
             return self._load_tuple(t, cache)
 
         if keys is not None:
-            targets = [self._norm_key(k) for k in keys]
+            key_list = list(keys)
+            targets = [self._norm_key(k) for k in key_list]
         else:
+            key_list = None
             targets = list(self._iter_manifest_tuples())
         depth: dict[tuple, int] = {}
         counts = {"full": 0, "delta": 0}
         max_depth = 0
         n_manifests = 0
+        info: dict[tuple, dict] = {}
         for t0 in targets:
             m = load(t0)
             if m is None:
@@ -454,6 +460,10 @@ class CheckpointStore:
                 depth[node] = depth[p] + 1 if p is not None and p in depth \
                     else (1 if p is not None and p in seen else 0)
             max_depth = max(max_depth, depth.get(t0, 0))
+            if per_key:
+                info[t0] = {"depth": depth.get(t0, 0), "kind": kind,
+                            "direct_chunks":
+                                sum(1 for _ in _manifest_chunk_hashes(m))}
         chunks = 0
         stored = 0
         if include_chunks:
@@ -463,11 +473,66 @@ class CheckpointStore:
                     if fn.endswith(".zst"):
                         chunks += 1
                         stored += os.path.getsize(os.path.join(dirpath, fn))
-        return {"manifests": n_manifests,
-                "full_manifests": counts.get("full", 0),
-                "delta_manifests": counts.get("delta", 0),
-                "max_chain_depth": max_depth,
-                "chunks": chunks, "stored_bytes": stored}
+        out = {"manifests": n_manifests,
+               "full_manifests": counts.get("full", 0),
+               "delta_manifests": counts.get("delta", 0),
+               "max_chain_depth": max_depth,
+               "chunks": chunks, "stored_bytes": stored}
+        if per_key:
+            if key_list is not None:
+                out["per_key"] = {k: info[self._norm_key(k)]
+                                  for k in key_list
+                                  if self._norm_key(k) in info}
+            else:
+                # whole-store pass: qualified "rid::key" form ("::key" =
+                # explicit flat namespace)
+                out["per_key"] = {f"{rid or ''}::{k}": v
+                                  for (rid, k), v in info.items()}
+        return out
+
+    # ------------------------------------------------------------ closure --
+    def _parent_closure(self, keys: Iterable[str],
+                        cache: dict) -> set[tuple]:
+        """Normalized (rid, key) tuples of `keys` plus every ancestor their
+        delta chains resolve through (across run namespaces). Tuples whose
+        manifest is missing are dropped."""
+        live = {self._norm_key(k) for k in keys}
+        frontier = list(live)
+        while frontier:
+            t = frontier.pop()
+            m = self._load_tuple(t, cache)
+            if m is None:
+                live.discard(t)
+                continue
+            p = self._parent_of(m, t[0])
+            if p is not None and p not in live:
+                live.add(p)
+                frontier.append(p)
+        return live
+
+    def closure_chunks(self, keys: Iterable[str]) -> set[str]:
+        """Every chunk hash reachable from `keys`' manifest parent closure —
+        the byte footprint a set of checkpoints actually pins. Two runs'
+        closures intersected/differenced give the `runs diff` view of what
+        lineage sharing saves."""
+        cache: dict[tuple, Optional[dict]] = {}
+        hashes: set[str] = set()
+        for t in self._parent_closure(keys, cache):
+            m = self._load_tuple(t, cache)
+            if m is not None:
+                hashes.update(_manifest_chunk_hashes(m))
+        return hashes
+
+    def chunk_bytes(self, hashes: Iterable[str]) -> int:
+        """On-disk (compressed) bytes of the given chunk hashes; missing
+        chunks count 0."""
+        total = 0
+        for h in hashes:
+            try:
+                total += os.path.getsize(self._chunk_path(h))
+            except OSError:
+                pass
+        return total
 
     # ---------------------------------------------------------------- gc --
     def gc(self, live_keys: Iterable[str]) -> dict:
@@ -484,23 +549,11 @@ class CheckpointStore:
             def load(t):
                 return self._load_tuple(t, cache)
 
-            # normalize to filesystem-space (rid, key) tuples: callers pass
-            # raw keys ('train@2.0', 'B::train@2.0') but listings yield
-            # sanitized names ('train_at_2.0')
-            live = {self._norm_key(k) for k in live_keys}
-            # parent closure: a live delta manifest pins its ancestry, run
+            # normalize to filesystem-space (rid, key) tuples (callers pass
+            # raw keys, listings yield sanitized names) and take the parent
+            # closure: a live delta manifest pins its ancestry, run
             # boundaries included
-            frontier = list(live)
-            while frontier:
-                t = frontier.pop()
-                m = load(t)
-                if m is None:
-                    live.discard(t)
-                    continue
-                p = self._parent_of(m, t[0])
-                if p is not None and p not in live:
-                    live.add(p)
-                    frontier.append(p)
+            live = self._parent_closure(live_keys, cache)
             referenced: set[str] = set()
             deleted_manifests = 0
             namespaces: set[Optional[str]] = set()

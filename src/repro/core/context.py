@@ -20,7 +20,8 @@ import time
 import warnings
 from typing import Optional
 
-from repro.checkpoint import CheckpointPipeline, CheckpointStore, RunRegistry
+from repro.checkpoint import (CheckpointPipeline, CheckpointStore,
+                              RunIdCollision, RunRegistry)
 from repro.checkpoint.lineage import (generate_run_id, read_run_meta,
                                       write_run_meta)
 from repro.core.adaptive import AdaptiveController
@@ -117,7 +118,9 @@ class FlorContext:
     def __init__(self, run_dir: str, mode: str = "record", *,
                  epsilon: float = 1.0 / 15, adaptive: bool = True,
                  pid: int = 0, nworkers: int = 1, init_mode: str = "strong",
-                 probed: Optional[set] = None, async_materialize: bool = True,
+                 probed: Optional[set] = None,
+                 segments: Optional[list] = None,
+                 async_materialize: bool = True,
                  full_manifest_every: int = 8, store_root: Optional[str] = None,
                  parent_run: Optional[str] = None, run_id: Optional[str] = None):
         assert mode in ("record", "replay")
@@ -128,6 +131,11 @@ class FlorContext:
         self.nworkers = nworkers
         self.init_mode = init_mode           # strong | weak
         self.probed: set = set(probed or ())
+        # planned replay (repro.replay): an explicit ordered visit list
+        # [(epoch, "init"|"exec"), ...] supersedes the contiguous
+        # pid/nworkers split — the generator iterates exactly these
+        self.segments = None if segments is None else \
+            tuple((e, ph) for e, ph in segments)
         self.current_epoch: Optional[int] = None
         self._intra_epoch_counts: dict[str, int] = {}
         self.controller = AdaptiveController(epsilon=epsilon, enabled=adaptive)
@@ -145,6 +153,7 @@ class FlorContext:
             self.store_root = os.path.abspath(store_root) if shared \
                 else os.path.join(run_dir, "store")
             saved = read_run_meta(run_dir)
+            generated = False
             if run_id:
                 self.run_id = run_id
             elif shared and saved.get("run_id") \
@@ -155,6 +164,7 @@ class FlorContext:
                 self.run_id = saved["run_id"]
             else:
                 self.run_id = generate_run_id()
+                generated = True
             if parent_run is None and self.run_id == saved.get("run_id"):
                 # resuming the same run (however identified) keeps its
                 # lineage edge — dropping it would orphan the ancestor
@@ -169,6 +179,30 @@ class FlorContext:
             if self.run_id == saved.get("run_id"):   # resume: keep bindings
                 self._run_meta["warm_start_keys"] = \
                     saved.get("warm_start_keys") or {}
+            # register BEFORE binding the store handle: simultaneous
+            # recorders race the registry on a shared filesystem. The
+            # atomic create-or-retry applies to every NEW registration —
+            # a generated id retries with a fresh one, an explicit id
+            # surfaces the conflict (two recorders given the same
+            # --run-id must not silently clobber each other); a resume of
+            # this run's own (run_dir, namespace) is never a collision.
+            self.registry = RunRegistry(self.store_root)
+            for attempt in range(8):
+                try:
+                    self.registry.register(self.run_id,
+                                           parent=self.parent_run,
+                                           run_dir=os.path.abspath(run_dir),
+                                           namespace=self.namespace,
+                                           exclusive=True)
+                    break
+                except RunIdCollision:
+                    if not generated or attempt == 7:
+                        raise
+                    self.run_id = generate_run_id()
+                    self.namespace = self.run_id if shared else None
+                    self._run_meta["run_id"] = self.run_id
+                    self._run_meta["namespace"] = self.namespace
+            self._registered = True
             write_run_meta(run_dir, self._run_meta)
         else:
             saved = read_run_meta(run_dir)
@@ -179,14 +213,11 @@ class FlorContext:
             self.namespace = saved.get("namespace") if saved \
                 else (self.run_id if store_root else None)
             self.parent_run = parent_run or saved.get("parent_run")
+            self.registry = RunRegistry(self.store_root)
+            self._registered = False
         self.store = CheckpointStore(self.store_root, run_id=self.namespace)
-        self.registry = RunRegistry(self.store_root)
-        self._registered = False
         if mode == "record":
-            self.registry.register(self.run_id, parent=self.parent_run,
-                                   run_dir=os.path.abspath(run_dir),
-                                   namespace=self.namespace)
-            self._registered = True
+            self._snapshot_source()
         self.warmstart_stats: dict[str, dict] = {}
         if adaptive and mode == "record":
             # a resumed run (or any run sharing this store namespace) already
@@ -224,6 +255,10 @@ class FlorContext:
         self.loop_depth = 0
         self.scope_stack: list = []
         self.block_executed: dict[str, bool] = {}
+        # record-side per-(block, epoch) execution profile: the replay
+        # planner's exec-cost estimates come from here (store meta
+        # "block_profile"), so cost-balanced partitioning sees real skew
+        self._block_profile: dict[str, dict[int, dict]] = {}
         self._hparams: dict = {}
         self._arg_overrides = _parse_arg_overrides(
             os.environ.get("FLOR_ARGS", ""))
@@ -232,6 +267,26 @@ class FlorContext:
         # block id so M_i lands on the right block
         self._key_to_block: dict[str, str] = {}
         self.restore_stats: list[dict] = []
+
+    def _snapshot_source(self):
+        """Keep a copy of the driving script in store meta ("source") for
+        `--probe auto` source-diff detection (paper section 3.2). A resumed
+        run keeps the ORIGINAL recorded copy — the diff base must be what
+        the run actually executed first. The script tier overwrites this
+        with the exact user script it instruments."""
+        try:
+            import __main__
+            path = getattr(__main__, "__file__", None)
+            if not path or not os.path.isfile(path) \
+                    or os.path.getsize(path) > (1 << 20):
+                return
+            if self.store.get_meta("source"):
+                return
+            with open(path) as f:
+                self.store.put_meta("source", {"path": os.path.abspath(path),
+                                               "src": f.read()})
+        except Exception:
+            pass                 # snapshotting is best-effort, never fatal
 
     def _calibrate_store(self) -> float:
         """One ~8MB probe write measures real serialize+compress+write
@@ -261,6 +316,21 @@ class FlorContext:
     def advance_block(self, block_id: str):
         self._intra_epoch_counts[block_id] = \
             self._intra_epoch_counts.get(block_id, 0) + 1
+
+    def note_block_profile(self, block_id: str, seconds: float):
+        """Record that `block_id` EXECUTED in the current epoch for
+        `seconds` (record mode only) — the planner's per-segment exec-cost
+        ground truth."""
+        if self.mode != "record" or self.current_epoch is None:
+            return
+        try:
+            epoch = int(self.current_epoch)
+        except (TypeError, ValueError):
+            return
+        cell = self._block_profile.setdefault(block_id, {}) \
+            .setdefault(epoch, {"n": 0, "s": 0.0})
+        cell["n"] += 1
+        cell["s"] += float(seconds)
 
     # ----------------------------------------------------- materialization
     def _on_materialized(self, stat: dict):
@@ -421,6 +491,15 @@ class FlorContext:
             self.registry.finalize(self.run_id, final_keys=final_keys,
                                    status=status)
             self._registered = False
+        if self.mode == "record" and self._block_profile:
+            # merge over any previous profile so a resumed run keeps the
+            # epochs it recorded before the restart
+            prev = (self.store.get_meta("block_profile") or {}).get("blocks",
+                                                                    {})
+            for bid, per_epoch in self._block_profile.items():
+                cur = prev.setdefault(bid, {})
+                cur.update({str(e): v for e, v in per_epoch.items()})
+            self.store.put_meta("block_profile", {"blocks": prev})
         self.store.put_meta(f"controller_{self.mode}_p{self.pid}",
                             self.controller.snapshot())
         self.log.close()

@@ -42,13 +42,21 @@ def _close(a, b, rtol=1e-4, atol=1e-6):
     return a == b
 
 
-def deferred_check(record_log_path: str, replay_log_paths: list[str],
+def deferred_check(record_log_path: str, replay_log_paths: list,
                    replayed_epochs: list[int] | None = None,
                    rtol: float = 1e-4) -> CheckResult:
+    """`replay_log_paths` entries may be file paths OR already-loaded row
+    dicts — the planned-replay driver feeds the MERGED per-segment rows
+    (core/query.merge_replay_logs) instead of raw per-worker files, so
+    straggler duplicates and init-phase re-logs never skew occurrence
+    counting."""
     rec = _index(FingerprintLog.read(record_log_path))
     rep_records = []
     for p in replay_log_paths:
-        rep_records.extend(FingerprintLog.read(p))
+        if isinstance(p, str):
+            rep_records.extend(FingerprintLog.read(p))
+        else:
+            rep_records.append(p)
     rep = _index(rep_records)
 
     res = CheckResult(ok=True)

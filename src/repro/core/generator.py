@@ -69,15 +69,23 @@ def sampling_generator(iterator: Iterable, sample: Sequence[int]):
         covered = i
 
 
-def epoch_iter(ctx, iterator: Iterable):
+def epoch_iter(ctx, iterator: Iterable, name: Optional[str] = None):
     """MAIN-loop epoch iteration against an explicit context: record-side
-    run metadata, replay-side partitioning + strong/weak init phases. Both
-    the legacy ``generator()`` shim and the session-surface ``flor.loop``
-    outer iterator drive this."""
+    run metadata, replay-side work assignment + strong/weak init phases.
+    Both the legacy ``generator()`` shim and the session-surface
+    ``flor.loop`` outer iterator drive this.
+
+    Replay iterates one of two assignments:
+      * planned segments (``ctx.segments``, from ``repro.replay``'s
+        ReplayPlan/scheduler): an explicit ordered visit list
+        ``[(epoch, "init"|"exec"), ...]`` — the query-driven path;
+      * the legacy contiguous ``pid``/``nworkers`` split (deprecation shim).
+    """
     items = list(iterator)
 
     if ctx.mode == "record":
         ctx.store.put_meta("run", {"num_epochs": len(items),
+                                   "main_loop": name,
                                    "epochs": [int(e) if isinstance(e, (int,))
                                               else None for e in items]})
         for e in items:
@@ -85,7 +93,28 @@ def epoch_iter(ctx, iterator: Iterable):
             yield e
         return
 
-    # ---- replay ----
+    # ---- replay: planned segments ----
+    if ctx.segments is not None:
+        index = {}
+        for i, e in enumerate(items):
+            try:
+                index[e] = i
+            except TypeError:
+                pass
+        for epoch, phase in ctx.segments:
+            item = items[index[epoch]] if epoch in index else epoch
+            ctx.replay_phase = "exec" if phase == "exec" else "init"
+            ctx.begin_epoch(item)
+            yield item
+        ctx.replay_phase = "exec"
+        return
+
+    # ---- replay: legacy contiguous split ----
+    if ctx.nworkers > 1:
+        from repro.core.context import _deprecated
+        _deprecated("the contiguous pid/nworkers replay split is deprecated;"
+                    " build a ReplayPlan (repro.replay.build_plan) and pass "
+                    "ReplaySpec(segments=...)")
     init_all, work = partition(items, ctx.nworkers, ctx.pid)
     if ctx.init_mode == "weak" and init_all:
         anchor = _latest_ckpt_epoch(ctx, init_all)

@@ -63,23 +63,54 @@ class RecordSpec:
 
 @dataclass(frozen=True)
 class ReplaySpec:
-    """Replay-side knobs: worker identity, init mode, probed blocks."""
+    """Replay-side knobs: work assignment, init mode, probed blocks.
+
+    Two assignment forms:
+      * ``segments=`` — an explicit ordered visit list from the replay
+        planner (``repro.replay``): ``[(epoch, "init"|"exec"), ...]``, or
+        bare epochs (treated as exec visits). ``plan=`` accepts a
+        ``ReplayPlan`` directly and derives the full single-worker visit
+        list (and the probed set, unless given).
+      * ``pid``/``nworkers`` — the legacy contiguous split, kept as a
+        deprecation shim (the generator warns when ``nworkers > 1``).
+    """
     pid: int = 0
     nworkers: int = 1
     init_mode: str = "strong"          # strong | weak
     probed: frozenset = frozenset()    # block names to re-execute ('*' = all)
+    segments: Optional[tuple] = None   # planned visits [(epoch, phase), ...]
+    plan: Optional[Any] = None         # a ReplayPlan (repro.replay.plan)
 
     def __post_init__(self):
         if self.init_mode not in VALID_INIT_MODES:
             raise ValueError(f"init_mode must be one of {VALID_INIT_MODES}, "
                              f"got {self.init_mode!r}")
-        if not 0 <= self.pid < self.nworkers:
+        if self.plan is not None:
+            if self.segments is None:
+                object.__setattr__(self, "segments",
+                                   tuple(self.plan.visits_for()))
+            if not self.probed:
+                object.__setattr__(self, "probed",
+                                   frozenset(self.plan.probed))
+        if self.segments is not None:
+            norm = []
+            for s in self.segments:
+                e, ph = s if isinstance(s, (tuple, list)) else (s, "exec")
+                if ph not in ("init", "exec"):
+                    raise ValueError(f"segment phase must be 'init' or "
+                                     f"'exec', got {ph!r}")
+                norm.append((int(e), ph))
+            object.__setattr__(self, "segments", tuple(norm))
+            if self.pid < 0:
+                raise ValueError(f"pid must be >= 0, got {self.pid}")
+        elif not 0 <= self.pid < self.nworkers:
             raise ValueError(f"pid {self.pid} outside [0, {self.nworkers})")
         object.__setattr__(self, "probed", frozenset(self.probed))
 
     def to_kwargs(self) -> dict:
         return {"pid": self.pid, "nworkers": self.nworkers,
-                "init_mode": self.init_mode, "probed": set(self.probed)}
+                "init_mode": self.init_mode, "probed": set(self.probed),
+                "segments": self.segments}
 
 
 @dataclass(frozen=True)
@@ -317,7 +348,7 @@ def _materialize(iterable):
 def _outer_loop(ctx: FlorContext, name: str, iterable: Iterable):
     ctx.loop_depth += 1
     try:
-        for e in epoch_iter(ctx, iterable):
+        for e in epoch_iter(ctx, iterable, name=name):
             yield e
     finally:
         ctx.loop_depth -= 1
@@ -362,7 +393,9 @@ def _probe_loop(ctx: FlorContext, name: str, iterable):
             yield item
     finally:
         ctx.loop_depth -= 1
-        ctx.controller.observe_execution(name, time.perf_counter() - t0)
+        elapsed = time.perf_counter() - t0
+        ctx.controller.observe_execution(name, elapsed)
+        ctx.note_block_profile(name, elapsed)
         ctx.advance_block(name)
 
 

@@ -95,6 +95,7 @@ class _SkipBlockAPI:
             state = jax.block_until_ready(state)
             ctx.controller.observe_execution(block_id, elapsed)
             if ctx.mode == "record":
+                ctx.note_block_profile(block_id, elapsed)
                 est = tree_bytes(state)
                 if ctx.controller.should_materialize(block_id, est_bytes=est):
                     ctx.submit_checkpoint(block_id, key, state,

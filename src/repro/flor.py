@@ -13,9 +13,15 @@ Record:
 
 Replay (hindsight logging): the same script with
     flor.Session(run_dir, mode="replay",
-                 replay=flor.ReplaySpec(pid=PID, nworkers=G,
-                                        init_mode="strong", probed={"train"}))
-plus any ``flor.log(...)`` probes you wished you had. The OUTER loop drives
+                 replay=flor.ReplaySpec(probed={"train"}))
+plus any ``flor.log(...)`` probes you wished you had. Parallel replay is
+PLANNED (repro.replay): ``flor.build_plan(run_dir, probed=...)`` (or
+``probed="auto"`` to source-diff the recorded script copy) selects which
+epochs re-execute and estimates their cost; a cost-balanced scheduler
+assigns per-worker visit lists (``ReplaySpec(segments=...)``, or
+``ReplaySpec(plan=plan)`` for one worker). The legacy
+``ReplaySpec(pid=, nworkers=)`` contiguous split is a deprecation shim.
+The OUTER loop drives
 epoch bookkeeping and the replay init/exec phases; each INNER loop is a
 SkipBlock: skipped epochs yield nothing and the ``checkpointing`` scope is
 physically restored from the Loop End Checkpoint, probed epochs re-execute
@@ -69,11 +75,13 @@ from repro.core.generator import (generator, partition,      # noqa: F401
 from repro.core.instrument import (   # noqa: F401
     exec_instrumented, instrument_source)
 from repro.core.probes import detect_probes                  # noqa: F401
-from repro.core.query import log_records, pivot              # noqa: F401
+from repro.core.query import (log_records, merge_replay_logs,  # noqa: F401
+                              pivot)
 from repro.core.session import (      # noqa: F401
     CheckpointScope, LineageSpec, RecordSpec, ReplaySpec, Session, arg,
     checkpointing, executed, loop)
 from repro.core.skipblock import skipblock                   # noqa: F401
+from repro.replay import ReplayPlan, build_plan              # noqa: F401
 
 
 def log(key: str, value):

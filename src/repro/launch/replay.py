@@ -1,15 +1,25 @@
-"""Parallel replay launcher (paper section 5.4 + Fig. 8).
-
-Spawns G coordination-free worker processes, each replaying its contiguous
-share of the main loop from restored state, re-executing only probed blocks.
+"""Parallel replay launcher — a thin driver over the replay planner and
+cost-balanced scheduler (paper section 5.4 + Fig. 8; repro.replay).
 
     PYTHONPATH=src python -m repro.launch.replay --run-dir /tmp/run1 \
         --arch florbench-100m --smoke --epochs 4 --steps-per-epoch 8 \
-        --nworkers 4 --probe train --init-mode strong
+        --nworkers 4 --probe train --init-mode strong --check
 
-Elasticity: G is chosen HERE, at replay time, independent of record — the
-paper's point about scale-out on cheap spot capacity. Workers never
-communicate; stragglers only delay their own partition.
+Flow: PLAN (probe set x checkpoint-manifest metadata -> per-epoch segments
+with resume-cost estimates) -> SCHEDULE (LPT cost-balanced shares, dynamic
+work-queue over worker processes with failure/straggler re-queue) -> MERGE
+(per-segment log merge) -> deferred correctness CHECK.
+
+``--probe auto`` is the paper's section-3.2 source-diff tier: record stored
+a copy of the driving script; the current file (or ``--current-src``) is
+diffed against it, added lines map to their innermost enclosing loop, and
+non-additive edits are surfaced as a HARD WARNING (replay assumes only log
+statements were added).
+
+Elasticity is unchanged: G is chosen HERE, at replay time, independent of
+record. Workers never communicate; the work queue just stops handing a
+straggler's epochs to anyone else. ``--no-plan`` keeps the legacy
+contiguous fan-out (deprecated).
 """
 from __future__ import annotations
 
@@ -18,6 +28,22 @@ import os
 import subprocess
 import sys
 import time
+
+
+def _parse_segments(spec: str) -> list:
+    """'0:init,1:exec,...' -> [(0, 'init'), (1, 'exec'), ...]."""
+    out = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        e, ph = part.split(":", 1)
+        out.append((int(e), ph))
+    return out
+
+
+def _fmt_segments(visits: list) -> str:
+    return ",".join(f"{e}:{ph}" for e, ph in visits)
 
 
 def worker_main(args):
@@ -31,12 +57,15 @@ def worker_main(args):
     cfg = C.get_smoke(args.arch) if args.smoke else C.get(args.arch)
     init_state, train_step = build_train_step(cfg)
     ts = jax.jit(train_step)
-    probed = frozenset(args.probe.split(",")) if args.probe else frozenset()
+    probed = frozenset(p for p in args.probe.split(",") if p) \
+        if args.probe and args.probe != "auto" else frozenset()
+    segments = _parse_segments(args.segments) if args.segments else None
     with flor.Session(args.run_dir, mode="replay",
                       replay=flor.ReplaySpec(pid=args.pid,
                                              nworkers=args.nworkers,
                                              init_mode=args.init_mode,
-                                             probed=probed)) as sess:
+                                             probed=probed,
+                                             segments=segments)) as sess:
         state = jax.jit(init_state)(jax.random.PRNGKey(args.seed))
         if sess.parent_run:
             # derived run (lineage): record started from the ancestor's
@@ -65,17 +94,80 @@ def _print_store_summary(run_dir: str):
     single-pass memoized via CheckpointStore.stats() (also used by the
     `runs` CLI), lineage-aware: a derived run's chains may resolve through
     its ancestor runs' manifests in a shared store."""
-    from repro.checkpoint import CheckpointStore
-    from repro.checkpoint.lineage import read_run_meta
-    meta = read_run_meta(run_dir)
-    root = meta.get("store_root") or os.path.join(run_dir, "store")
-    store = CheckpointStore(root, run_id=meta.get("namespace"))
+    from repro.replay import open_run_store
+    store, meta = open_run_store(run_dir)
     st = store.stats(keys=store.list_keys())
     print(f"store: {st['full_manifests']} full + {st['delta_manifests']} "
           f"delta manifests, max resolve chain {st['max_chain_depth']}, "
           f"{st['stored_bytes'] / 2**20:.1f} MiB chunks"
-          + (f" (shared store {root}, run {meta.get('run_id')})"
+          + (f" (shared store {store.root}, run {meta.get('run_id')})"
              if meta.get("store_root") else ""))
+
+
+def _worker_cmd(args, pid: int, segments: str = "") -> list[str]:
+    cmd = [sys.executable, "-m", "repro.launch.replay",
+           "--run-dir", args.run_dir, "--arch", args.arch,
+           "--epochs", str(args.epochs),
+           "--steps-per-epoch", str(args.steps_per_epoch),
+           "--batch", str(args.batch), "--seq", str(args.seq),
+           "--nworkers", str(args.nworkers), "--pid", str(pid),
+           "--probe", "" if args.probe == "auto" else args.probe,
+           "--init-mode", args.init_mode, "--seed", str(args.seed)]
+    if segments:
+        cmd += ["--segments", segments]
+    if args.smoke:
+        cmd.append("--smoke")
+    return cmd
+
+
+def _legacy_fanout(args) -> None:
+    """The pre-planner contiguous fan-out, kept as a deprecation shim
+    (``--no-plan``)."""
+    t0 = time.time()
+    procs = [subprocess.Popen(_worker_cmd(args, pid), env=os.environ.copy())
+             for pid in range(args.nworkers)]
+    rcodes = [p.wait() for p in procs]
+    print(f"parallel replay (legacy contiguous): {args.nworkers} workers, "
+          f"wall {time.time() - t0:.2f}s, rc={rcodes}")
+    _print_store_summary(args.run_dir)
+    if any(rcodes):
+        sys.exit(1)
+    if args.check:
+        import repro.flor as flor
+        rec, reps = flor.run_logs(args.run_dir)
+        _report_check(flor.deferred_check(rec, reps))
+
+
+def _report_check(res) -> None:
+    print(f"deferred check: ok={res.ok} compared={res.compared} "
+          f"hindsight={res.hindsight_only} anomalies={len(res.anomalies)}")
+    if not res.ok:
+        for a in res.anomalies[:10]:
+            print("  anomaly:", a)
+        sys.exit(2)
+
+
+def _report_auto_probes(args):
+    """Run --probe auto detection once for user-facing output, HARD-WARNING
+    on suspicious non-additive source edits (the plan re-derives the same
+    probe set internally)."""
+    from repro.replay import detect_probes_for_run
+    report = detect_probes_for_run(args.run_dir,
+                                   current_src=args.current_src or None)
+    if report.suspicious:
+        print("=" * 70, file=sys.stderr)
+        print(f"WARNING: {len(report.suspicious)} NON-ADDITIVE source "
+              f"edit(s) between record and replay — hindsight replay "
+              f"assumes only log statements were ADDED; changed or deleted "
+              f"lines can invalidate the recorded checkpoints:",
+              file=sys.stderr)
+        for s in report.suspicious[:5]:
+            print(f"  [{s['tag']}] {s['old']!r} -> {s['new']!r}",
+                  file=sys.stderr)
+        print("=" * 70, file=sys.stderr)
+    print(f"probe auto: {len(report.added_lines)} added line(s) -> "
+          f"inner blocks {sorted(report.probed_blocks) or '-'} "
+          f"outer loops {sorted(report.probed_outer) or '-'}")
 
 
 def main():
@@ -90,10 +182,33 @@ def main():
     ap.add_argument("--nworkers", type=int, default=1)
     ap.add_argument("--pid", type=int, default=None,
                     help="run as ONE worker (internal)")
+    ap.add_argument("--segments", default=None,
+                    help="planned visit list '0:init,1:exec,...' (internal)")
     ap.add_argument("--probe", default="",
-                    help="comma-separated probed block ids ('train' or '*')")
-    ap.add_argument("--init-mode", choices=("strong", "weak"), default="strong")
+                    help="comma-separated probed block ids ('train', '*'), "
+                         "or 'auto' for source-diff detection")
+    ap.add_argument("--current-src", default="",
+                    help="with --probe auto: the edited script to diff "
+                         "against the recorded copy (default: the recorded "
+                         "path on disk)")
+    ap.add_argument("--init-mode", choices=("strong", "weak"),
+                    default="strong")
+    ap.add_argument("--partition", choices=("balanced", "contiguous"),
+                    default="balanced",
+                    help="work partitioning: LPT over segment cost "
+                         "estimates (default) or the legacy contiguous "
+                         "split")
+    ap.add_argument("--tasks-per-worker", type=int, default=1,
+                    help="split work finer than one share per worker so "
+                         "the dynamic queue can rebalance")
+    ap.add_argument("--straggler-factor", type=float, default=0.0,
+                    help="speculatively re-issue a task running this many "
+                         "times longer than expected (0 = off)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan-only", action="store_true",
+                    help="print the plan and assignments, run nothing")
+    ap.add_argument("--no-plan", action="store_true",
+                    help="legacy contiguous fan-out (deprecated)")
     ap.add_argument("--check", action="store_true",
                     help="run the deferred correctness check after replay")
     args = ap.parse_args()
@@ -101,39 +216,125 @@ def main():
     if args.pid is not None:
         worker_main(args)
         return
+    if args.no_plan:
+        if args.probe == "auto":
+            # the legacy fan-out has no planner to consume the detection:
+            # silently degrading to "no probes" would report a vacuously
+            # passing check
+            ap.error("--probe auto requires the planner; drop --no-plan")
+        _legacy_fanout(args)
+        return
+
+    from repro.core.query import merge_replay_logs
+    from repro.replay import (DynamicExecutor, Task, TaskFailure,
+                              balanced_shares, build_plan, contiguous_shares,
+                              share_cost)
+
+    # ---- plan ----
+    if args.probe == "auto":
+        _report_auto_probes(args)
+        plan = build_plan(args.run_dir, probed="auto",
+                          init_mode=args.init_mode,
+                          current_src=args.current_src or None)
+    else:
+        plan = build_plan(args.run_dir,
+                          probed={p for p in args.probe.split(",") if p},
+                          init_mode=args.init_mode)
+    print(plan.summary())
+
+    # ---- schedule ----
+    work = plan.work_segments()
+    nshares = max(1, args.nworkers * max(1, args.tasks_per_worker))
+    split = balanced_shares if args.partition == "balanced" \
+        else contiguous_shares
+    shares = [sh for sh in split(work, nshares) if sh]
+    tasks = []
+    for tid, sh in enumerate(shares):
+        tasks.append(Task(task_id=tid, visits=plan.visits_for(sh),
+                          epochs=[s.epoch for s in sh],
+                          est_cost_s=share_cost(plan, sh)))
+    for t in tasks:
+        print(f"  task {t.task_id}: epochs {t.epochs} "
+              f"({len(t.visits)} visits, est {t.est_cost_s:.2f}s)")
+    assignments = {str(t.task_id): {"epochs": t.epochs, "visits": t.visits,
+                                    "est_cost_s": t.est_cost_s}
+                   for t in tasks}
+    plan.save(assignments=assignments)
+    if args.plan_only:
+        return
+
+    # ---- execute: dynamic work-queue over worker processes ----
+    inner_probes = ",".join(sorted(plan.probed))
+    # per-(task, attempt) log identity: stride by the task count so retry
+    # pids can never collide with first-attempt pids of other tasks
+    pid_stride = len(tasks)
+
+    def run_task(task, attempt, cancelled):
+        pid = task.task_id + (attempt - 1) * pid_stride
+        wargs = argparse.Namespace(**vars(args))
+        wargs.probe = inner_probes
+        cmd = _worker_cmd(wargs, pid, _fmt_segments(task.visits))
+        proc = subprocess.Popen(cmd, env=os.environ.copy())
+        while proc.poll() is None:
+            if cancelled.is_set():
+                proc.terminate()
+                proc.wait()
+                return None
+            time.sleep(0.05)
+        if proc.returncode != 0:
+            raise RuntimeError(f"worker task {task.task_id} attempt "
+                               f"{attempt} exited rc={proc.returncode}")
+        return pid
+
+    merged_epochs: set = set()
+
+    def on_complete(task, attempt, pid):
+        merged_epochs.update(task.epochs)
+        print(f"  task {task.task_id} done (attempt {attempt}): "
+              f"{len(merged_epochs)}/{len(work)} work epochs merged",
+              flush=True)
 
     t0 = time.time()
-    procs = []
-    for pid in range(args.nworkers):
-        cmd = [sys.executable, "-m", "repro.launch.replay",
-               "--run-dir", args.run_dir, "--arch", args.arch,
-               "--epochs", str(args.epochs),
-               "--steps-per-epoch", str(args.steps_per_epoch),
-               "--batch", str(args.batch), "--seq", str(args.seq),
-               "--nworkers", str(args.nworkers), "--pid", str(pid),
-               "--probe", args.probe, "--init-mode", args.init_mode,
-               "--seed", str(args.seed)]
-        if args.smoke:
-            cmd.append("--smoke")
-        procs.append(subprocess.Popen(cmd, env=os.environ.copy()))
-    rcodes = [p.wait() for p in procs]
-    wall = time.time() - t0
-    print(f"parallel replay: {args.nworkers} workers, wall {wall:.2f}s, "
-          f"rc={rcodes}")
-    _print_store_summary(args.run_dir)
-    if any(rcodes):
+    ex = DynamicExecutor(tasks, run_task, args.nworkers,
+                         straggler_factor=args.straggler_factor,
+                         on_complete=on_complete)
+    try:
+        done = ex.run()
+    except TaskFailure as e:
+        print(f"parallel replay FAILED: {e}")
         sys.exit(1)
+    wall = time.time() - t0
+    print(f"parallel replay (planned, {args.partition}): "
+          f"{args.nworkers} workers / {len(tasks)} tasks, "
+          f"wall {wall:.2f}s")
+    _print_store_summary(args.run_dir)
+
+    # ---- merge per plan segment ----
+    # owner log = the pid run_task RETURNED for the winning attempt
+    owners = [(f"replay_p{done[task.task_id][1]}", task.epochs)
+              for task in tasks if task.task_id in done]
+    # drop superseded attempt logs (failed first tries, cancelled straggler
+    # duplicates): the query surface globs every replay_*.jsonl, and a
+    # partial log from a dead attempt would pollute runs logs/pivot and any
+    # later raw-file deferred check
+    keep = {f"replay_p{done[t.task_id][1]}.jsonl"
+            for t in tasks if t.task_id in done}
+    for t in tasks:
+        for attempt in range(1, ex.max_attempts + 1):
+            fn = f"replay_p{t.task_id + (attempt - 1) * pid_stride}.jsonl"
+            if fn not in keep:
+                try:
+                    os.remove(os.path.join(args.run_dir, "logs", fn))
+                except OSError:
+                    pass
+    merged = merge_replay_logs(args.run_dir, owners, out_path=True)
+    print(f"merged {len(merged)} log rows from {len(owners)} task log(s) "
+          f"-> logs/merged_replay.jsonl")
 
     if args.check:
         import repro.flor as flor
-        rec, reps = flor.run_logs(args.run_dir)
-        res = flor.deferred_check(rec, reps)
-        print(f"deferred check: ok={res.ok} compared={res.compared} "
-              f"hindsight={res.hindsight_only} anomalies={len(res.anomalies)}")
-        if not res.ok:
-            for a in res.anomalies[:10]:
-                print("  anomaly:", a)
-            sys.exit(2)
+        rec, _ = flor.run_logs(args.run_dir)
+        _report_check(flor.deferred_check(rec, merged))
 
 
 if __name__ == "__main__":

@@ -4,6 +4,8 @@
     PYTHONPATH=src python -m repro.launch.runs show RUN --store-root STORE
     PYTHONPATH=src python -m repro.launch.runs gc   --store-root STORE
     PYTHONPATH=src python -m repro.launch.runs rm RUN --store-root STORE [--gc]
+    PYTHONPATH=src python -m repro.launch.runs diff RUN_A RUN_B \
+        --store-root STORE
     PYTHONPATH=src python -m repro.launch.runs logs --store-root STORE \
         [--run RUN] [--key loss] [--no-replay]
     PYTHONPATH=src python -m repro.launch.runs pivot --store-root STORE \
@@ -122,6 +124,39 @@ def cmd_rm(store: CheckpointStore, registry: RunRegistry, args) -> int:
     return 0
 
 
+def cmd_diff(store: CheckpointStore, registry: RunRegistry, args) -> int:
+    """Chunk-level diff of two runs' manifest CLOSURES (each run's own
+    manifests plus every ancestor manifest its delta chains resolve
+    through): what lineage sharing actually saves on disk."""
+    recs = []
+    for rid in (args.run_a, args.run_b):
+        rec = registry.get(rid)
+        if rec is None:
+            print(f"unknown run {rid!r} "
+                  f"(known: {[r['run_id'] for r in registry.list_runs()]})")
+            return 1
+        recs.append(rec)
+    closures = []
+    for rec in recs:
+        ns = rec.get("namespace")
+        keys = [f"{ns or ''}::{k}" for k in store.list_keys(run=ns)]
+        closures.append(store.closure_chunks(keys))
+    ca, cb = closures
+    shared, only_a, only_b = ca & cb, ca - cb, cb - ca
+    rows = [("shared", shared), (f"only {args.run_a}", only_a),
+            (f"only {args.run_b}", only_b)]
+    print(f"{'SET':<28} {'CHUNKS':>8} {'MiB':>10}")
+    for label, chunks in rows:
+        print(f"{label:<28} {len(chunks):>8} "
+              f"{store.chunk_bytes(chunks) / 2**20:>10.2f}")
+    union = len(ca | cb)
+    if union:
+        print(f"dedup: {len(shared)}/{union} chunks shared "
+              f"({100.0 * len(shared) / union:.1f}% of the union — bytes "
+              f"one copy serves both runs)")
+    return 0
+
+
 def cmd_logs(store: CheckpointStore, registry: RunRegistry, args) -> int:
     rows = log_records(args.store_root, run=args.run, key=args.key,
                        include_replay=not args.no_replay)
@@ -187,6 +222,11 @@ def main(argv=None) -> int:
                       help="unregister even with registered descendants")
     p_rm.add_argument("--gc", action="store_true",
                       help="run gc immediately after unregistering")
+    p_diff = sub.add_parser("diff", parents=[common],
+                            help="chunks shared vs unique between two "
+                                 "runs' manifest closures")
+    p_diff.add_argument("run_a")
+    p_diff.add_argument("run_b")
     p_logs = sub.add_parser("logs", parents=[common],
                             help="every log row across the lineage")
     p_logs.add_argument("--run", default=None, help="restrict to one run id")
@@ -206,8 +246,8 @@ def main(argv=None) -> int:
     store = CheckpointStore(root)
     registry = RunRegistry(root)
     return {"list": cmd_list, "show": cmd_show, "gc": cmd_gc, "rm": cmd_rm,
-            "logs": cmd_logs, "pivot": cmd_pivot}[args.cmd](store, registry,
-                                                            args)
+            "diff": cmd_diff, "logs": cmd_logs,
+            "pivot": cmd_pivot}[args.cmd](store, registry, args)
 
 
 if __name__ == "__main__":

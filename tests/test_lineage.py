@@ -446,6 +446,25 @@ def test_gc_reclaims_aged_tmp_files_only(tmp_path):
 
 
 # ------------------------------------------------------------ stats --
+def test_store_stats_per_key_whole_store(tmp_path):
+    """stats(per_key=True) without keys= must cover every manifest under
+    its qualified name, not return an empty map."""
+    store = CheckpointStore(str(tmp_path / "s"))
+    pipe = CheckpointPipeline(store, chunk_words=256, full_every=4,
+                              async_stage=False)
+    t = _tree(1.0)
+    for i in range(3):
+        t = dict(t, head=np.asarray(t["head"]) + 1)
+        pipe.submit(f"ck{i}", t, scope="s")
+    pipe.close()
+    st = store.stats(per_key=True, include_chunks=False)
+    assert len(st["per_key"]) == 3
+    assert st["per_key"]["::ck2"]["depth"] == 2
+    # restricted form keys the map by the caller's input strings
+    st = store.stats(keys=["ck1"], per_key=True, include_chunks=False)
+    assert set(st["per_key"]) == {"ck1"} and st["per_key"]["ck1"]["depth"] == 1
+
+
 def test_store_stats_single_pass_chain_depth(tmp_path):
     store = CheckpointStore(str(tmp_path / "s"))
     pipe = CheckpointPipeline(store, chunk_words=256, full_every=4,
@@ -483,6 +502,147 @@ def test_runs_cli_list_show_rm_gc(tmp_path, capsys):
     assert runs_main(["list", "--store-root", str(tmp_path / "runB")]) == 0
     sb = CheckpointStore(root, run_id="B")
     assert _leaves_equal(final_b, sb.get_tree("train@0.0", like=final_b))
+
+
+def test_runs_cli_diff_chunks_shared_vs_unique(tmp_path, capsys):
+    """`runs diff A B`: a warm-started child shares its parent's frozen
+    chunks; the diff exposes exactly that."""
+    from repro.launch.runs import main as runs_main
+    root = str(tmp_path / "store")
+    _record_run(tmp_path / "runA", root, "A", 2, full_every=2)
+    _record_run(tmp_path / "runB", root, "B", 2, parent="A")
+    assert runs_main(["diff", "A", "B", "--store-root", root]) == 0
+    out = capsys.readouterr().out
+    assert "shared" in out and "only A" in out and "only B" in out
+    store = CheckpointStore(root)
+    ca = store.closure_chunks([f"A::{k}" for k in store.list_keys(run="A")])
+    cb = store.closure_chunks([f"B::{k}" for k in store.list_keys(run="B")])
+    # B warm-started from A: its closure resolves THROUGH A's chunks
+    assert ca & cb, "warm-started child must share parent chunks"
+    assert cb - ca, "child's own mutations must be unique"
+    assert runs_main(["diff", "A", "nope", "--store-root", root]) == 1
+
+
+# ------------------------------------------- registry concurrency ------
+def test_register_exclusive_detects_collision(tmp_path):
+    from repro.checkpoint import RunIdCollision
+    reg = RunRegistry(str(tmp_path / "store"))
+    reg.register("X", run_dir="/a", namespace="X", exclusive=True)
+    with pytest.raises(RunIdCollision):
+        reg.register("X", run_dir="/b", namespace="X", exclusive=True)
+    # same (run_dir, namespace) = crash-restart/resume, not a collision
+    reg.finalize("X", final_keys={"train": "k"})
+    rec = reg.register("X", run_dir="/a", namespace="X", exclusive=True)
+    assert rec["final_keys"] == {"train": "k"}   # resume keeps finals
+
+
+def test_exclusive_rerecord_sweeps_stale_registration(tmp_path):
+    """Regression: a re-record into the same (run_dir, namespace) under a
+    fresh GENERATED id (exclusive path) must still unregister the stale
+    record — a ghost entry would pin dead chunks through registry gc."""
+    reg = RunRegistry(str(tmp_path / "store"))
+    reg.register("R1", run_dir="/d", namespace=None, exclusive=True)
+    reg.register("R2", run_dir="/d", namespace=None, exclusive=True)
+    assert [r["run_id"] for r in reg.list_runs()] == ["R2"]
+
+
+def test_context_retries_generated_id_on_collision(tmp_path, monkeypatch):
+    """Two simultaneous recorders racing one generated id: the loser must
+    retry with a fresh id instead of clobbering the winner's entry."""
+    import repro.core.context as ctx_mod
+    root = str(tmp_path / "store")
+    reg = RunRegistry(root)
+    reg.register("dup-id", run_dir=str(tmp_path / "other"),
+                 namespace="dup-id", exclusive=True)
+    ids = iter(["dup-id", "dup-id", "fresh-id"])
+    monkeypatch.setattr(ctx_mod, "generate_run_id", lambda: next(ids))
+    ctx = FlorContext(str(tmp_path / "mine"), "record", adaptive=False,
+                      async_materialize=False, store_root=root)
+    assert ctx.run_id == "fresh-id"
+    assert ctx.namespace == "fresh-id"
+    assert read_run_meta(str(tmp_path / "mine"))["run_id"] == "fresh-id"
+    # the other recorder's entry survived untouched
+    other = reg.get("dup-id")
+    assert other["run_dir"] == str(tmp_path / "other")
+    ctx.finish()
+    assert reg.get("fresh-id")["status"] == "finished"
+
+
+def test_explicit_run_id_conflict_surfaces(tmp_path):
+    """Two recorders given the SAME explicit run id on a shared store: the
+    second must fail loudly instead of clobbering the first's record."""
+    from repro.checkpoint import RunIdCollision
+    root = str(tmp_path / "store")
+    ctx_a = FlorContext(str(tmp_path / "a"), "record", adaptive=False,
+                        async_materialize=False, store_root=root,
+                        run_id="ft1")
+    with pytest.raises(RunIdCollision):
+        FlorContext(str(tmp_path / "b"), "record", adaptive=False,
+                    async_materialize=False, store_root=root, run_id="ft1")
+    ctx_a.finish()
+    rec = RunRegistry(root).get("ft1")
+    assert rec["run_dir"] == str(tmp_path / "a")
+    assert rec["status"] == "finished"
+    # crash-restart/resume of the SAME (run_dir, namespace) still works
+    ctx_a2 = FlorContext(str(tmp_path / "a"), "record", adaptive=False,
+                         async_materialize=False, store_root=root,
+                         run_id="ft1")
+    ctx_a2.finish()
+
+
+def test_interleaved_writers_never_clobber(tmp_path):
+    """Regression: N threads registering + finalizing distinct runs against
+    one registry concurrently; every record must survive intact."""
+    import threading
+    reg = RunRegistry(str(tmp_path / "store"))
+    errors = []
+
+    def writer(n):
+        try:
+            for i in range(10):
+                rid = f"run-{n}-{i}"
+                reg.register(rid, run_dir=f"/d{n}/{i}", namespace=rid,
+                             exclusive=True)
+                reg.finalize(rid, final_keys={"train": f"k{i}"})
+        except Exception as e:            # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(n,)) for n in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    recs = reg.list_runs()
+    assert len(recs) == 40
+    assert all(r["status"] == "finished"
+               and r["final_keys"] == {"train": f"k{r['run_id'][-1]}"}
+               for r in recs)
+
+
+def test_exclusive_create_race_single_winner(tmp_path):
+    """The atomic create itself: many threads racing the SAME id — exactly
+    one _create_exclusive wins."""
+    reg = RunRegistry(str(tmp_path / "store"))
+    rec = {"run_id": "raced", "parent": None, "namespace": "raced",
+           "run_dir": "/r", "status": "running", "created_at": 0,
+           "finished_at": None, "final_keys": {}, "meta": {}}
+    import threading
+    wins = []
+    barrier = threading.Barrier(8)
+
+    def racer():
+        barrier.wait()
+        if reg._create_exclusive(dict(rec)):
+            wins.append(1)
+
+    threads = [threading.Thread(target=racer) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(wins) == 1
+    assert reg.get("raced")["run_id"] == "raced"
 
 
 # ------------------------------------------------------- property test --

@@ -1,0 +1,140 @@
+"""core/probes.py: source-diff probe detection (paper section 3.2) — the
+`--probe auto` tier. Added-line -> loop mapping across shifted line
+numbers, named flor loops, inner vs outer classification, suspicious
+non-additive edits, and the no-op fast path."""
+import textwrap
+
+from repro.core.probes import detect_probes, loop_spans
+
+ANON = textwrap.dedent("""\
+    import flor
+    state = 0
+    for epoch in range(8):
+        for step in range(4):
+            state = state + step
+        print(epoch)
+""")
+
+NAMED = textwrap.dedent("""\
+    import repro.flor as flor
+    with flor.Session(run_dir) as sess:
+        with sess.checkpointing(state=state) as ckpt:
+            for epoch in sess.loop("epochs", range(8)):
+                for s in sess.loop("train", range(4)):
+                    ckpt.state = step(ckpt.state)
+                flor.log("loss", 1.0)
+""")
+
+
+def _insert(src: str, after_contains: str, line: str) -> str:
+    lines = src.splitlines(keepends=True)
+    i = next(n for n, ln in enumerate(lines) if after_contains in ln)
+    indent = lines[i][: len(lines[i]) - len(lines[i].lstrip())]
+    return "".join(lines[: i + 1] + [indent + line + "\n"] + lines[i + 1:])
+
+
+# --------------------------------------------------------------- fast path --
+def test_noop_diff_fast_path():
+    rep = detect_probes(ANON, ANON)
+    assert rep.empty and not rep.added_lines and not rep.suspicious
+
+
+def test_unparseable_identical_sources_never_parse():
+    # the no-op fast path must not require valid Python
+    garbage = "for for for ((("
+    rep = detect_probes(garbage, garbage)
+    assert rep.empty
+
+
+# ----------------------------------------------------------- line mapping --
+def test_added_line_maps_to_innermost_loop():
+    probed = _insert(ANON, "state = state + step",
+                     "flor.log('probe', state)")
+    rep = detect_probes(ANON, probed)
+    # innermost loop is the step loop at OLD line 4
+    assert rep.probed_blocks == {"L4"}
+    assert not rep.probed_outer
+    assert not rep.suspicious
+
+
+def test_mapping_survives_shifted_line_numbers():
+    """Lines added ABOVE the loop shift every lineno in the new source; the
+    block id must still name the loop's line in the RECORDED source."""
+    shifted = "import os\nimport sys\n\n" + _insert(
+        ANON, "state = state + step", "flor.log('probe', state)")
+    rep = detect_probes(ANON, shifted)
+    assert rep.probed_blocks == {"L4"}       # old lineno, not the new one
+
+
+def test_outer_loop_probe_classified_outer():
+    probed = _insert(ANON, "print(epoch)", "flor.log('per_epoch', state)")
+    rep = detect_probes(ANON, probed)
+    assert rep.probed_outer == {"L3"}
+    assert not rep.probed_blocks
+
+
+def test_named_flor_loops_probe_by_name():
+    probed = _insert(NAMED, "ckpt.state = step(ckpt.state)",
+                     "flor.log('grad', 1.0)")
+    rep = detect_probes(NAMED, probed)
+    assert rep.probed_blocks == {"train"}
+    # outer probe in the epochs loop -> named outer
+    probed = _insert(NAMED, 'flor.log("loss", 1.0)',
+                     "flor.log('embed', 2.0)")
+    rep = detect_probes(NAMED, probed)
+    assert rep.probed_outer == {"epochs"}
+    assert not rep.probed_blocks
+
+
+def test_named_mapping_survives_shift():
+    shifted = "import json\n" + _insert(
+        NAMED, "ckpt.state = step(ckpt.state)", "flor.log('grad', 1.0)")
+    rep = detect_probes(NAMED, shifted)
+    assert rep.probed_blocks == {"train"}
+
+
+def test_line_outside_any_loop_is_ignored():
+    probed = ANON + "flor.log('final', state)\n"
+    rep = detect_probes(ANON, probed)
+    assert rep.empty and len(rep.added_lines) == 1
+
+
+# ------------------------------------------------------------- suspicious --
+def test_replace_and_delete_are_suspicious():
+    changed = ANON.replace("state = state + step", "state = state * step")
+    rep = detect_probes(ANON, changed)
+    assert rep.empty
+    assert len(rep.suspicious) == 1 and rep.suspicious[0]["tag"] == "replace"
+
+    deleted = ANON.replace("    print(epoch)\n", "")
+    rep = detect_probes(ANON, deleted)
+    assert rep.empty
+    assert any(s["tag"] == "delete" for s in rep.suspicious)
+
+
+def test_suspicious_and_added_coexist():
+    edited = _insert(ANON.replace("print(epoch)", "print('e', epoch)"),
+                     "state = state + step", "flor.log('p', state)")
+    rep = detect_probes(ANON, edited)
+    assert rep.probed_blocks == {"L4"}
+    assert rep.suspicious
+
+
+# ------------------------------------------------------------- loop spans --
+def test_loop_spans_names_and_depth():
+    spans = loop_spans(NAMED)
+    by_name = {s.name: s for s in spans}
+    assert by_name["epochs"].depth == 0
+    assert by_name["train"].depth == 1
+
+
+def test_loop_depth_resets_inside_functions():
+    src = textwrap.dedent("""\
+        def helper():
+            for i in range(3):
+                pass
+        for epoch in range(8):
+            helper()
+    """)
+    spans = loop_spans(src)
+    assert all(s.depth == 0 for s in spans)

@@ -1,0 +1,343 @@
+"""The replay planner + cost-balanced scheduler subsystem (repro.replay):
+plan construction from probe set x manifest metadata, planned-segment
+iteration through the session surface, LPT vs contiguous partitioning,
+per-segment log merge, and the dynamic work-queue executor."""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.flor as flor
+from repro.core.query import merge_replay_logs
+from repro.replay import (DynamicExecutor, ReplayPlan, Segment, Task,
+                          TaskFailure, balanced_shares, build_plan,
+                          contiguous_shares, share_cost)
+
+EPOCHS = 6
+VAL_EPOCHS = [1, 3, 5]         # "val" runs every 2nd epoch only
+
+
+def _body(sess, execd=None, probe=False):
+    """Two-block training loop: 'train' every epoch, 'val' on odd epochs.
+    `probe=True` adds the HINDSIGHT log statement inside the val block (the
+    log line the record run wishes it had); `execd` collects per-epoch
+    executed() flags."""
+    state = {"x": jnp.zeros((8,), jnp.float32)}
+    with sess.checkpointing(state=state) as ckpt:
+        for e in sess.loop("epochs", range(EPOCHS)):
+            for _ in sess.loop("train", range(2)):
+                ckpt.state = {"x": ckpt.state["x"] + (e + 1)}
+            if execd is not None:
+                execd.setdefault(e, {})["train"] = sess.executed("train")
+            if e in VAL_EPOCHS:
+                for _ in sess.loop("val", range(1)):
+                    v = float(ckpt.state["x"][0]) * 10
+                    if probe:
+                        flor.log("val_metric", v)
+                if execd is not None:
+                    execd[e]["val"] = sess.executed("val")
+            if sess.executed("train"):
+                flor.log("loss", float(ckpt.state["x"][0]))
+    return ckpt.state
+
+
+@pytest.fixture()
+def recorded(tmp_path):
+    run = str(tmp_path / "run")
+    with flor.Session(run, record=flor.RecordSpec(adaptive=False)) as sess:
+        final = _body(sess)
+    return run, final
+
+
+# ------------------------------------------------------------------- plan --
+def test_plan_selects_only_probed_block_epochs(recorded):
+    run, _ = recorded
+    plan = build_plan(run, probed={"val"})
+    assert [s.epoch for s in plan.exec_segments()] == VAL_EPOCHS
+    assert plan.work_segments() == plan.exec_segments()
+    assert not plan.outer_probe
+    for s in plan.segments:
+        if s.epoch in VAL_EPOCHS:
+            assert s.action == "exec" and s.exec_blocks == ("val",)
+        else:
+            assert s.action == "restore" and not s.exec_blocks
+        assert s.has_ckpt
+    # delta chains make resume cost non-uniform; the estimates must see it
+    depths = [s.chain_depth for s in plan.segments]
+    assert depths == sorted(depths) and depths[-1] > depths[0]
+    costs = [s.restore_cost_s for s in plan.segments]
+    assert costs[-1] > costs[0] > 0
+
+
+def test_plan_outer_probe_visits_every_epoch(recorded):
+    run, _ = recorded
+    plan = build_plan(run, probed=set())
+    assert plan.outer_probe
+    assert [s.epoch for s in plan.work_segments()] == list(range(EPOCHS))
+    assert plan.visits_for() == [(e, "exec") for e in range(EPOCHS)]
+    # a probe the record run never saw falls back to the full restore
+    # sweep — LOUDLY (a typo silently re-executing nothing would look like
+    # a vacuously passing replay)
+    with pytest.warns(UserWarning, match="no_such_block"):
+        plan = build_plan(run, probed={"no_such_block"})
+    assert plan.outer_probe
+    assert plan.probe_source["unknown"] == ["no_such_block"]
+
+
+def test_plan_weak_init_jumps_to_anchor(recorded):
+    run, _ = recorded
+    plan = build_plan(run, probed={"val"}, init_mode="weak")
+    share = [plan.segment(5)]
+    # every epoch has a checkpoint, so weak init restores ONLY epoch 4
+    assert plan.visits_for(share) == [(4, "init"), (5, "exec")]
+    strong = build_plan(run, probed={"val"})
+    assert strong.visits_for(share) == \
+        [(e, "init") for e in range(5)] + [(5, "exec")]
+
+
+def test_plan_save_load_roundtrip(recorded):
+    run, _ = recorded
+    plan = build_plan(run, probed={"val"})
+    plan.save(assignments={"0": {"epochs": [1]}})
+    loaded = ReplayPlan.load(run)
+    assert loaded.probed == plan.probed
+    assert loaded.segments == plan.segments
+    assert loaded.visits_for() == plan.visits_for()
+
+
+def test_probe_auto_from_stored_source(recorded, tmp_path):
+    """The --probe auto tier end-to-end against store meta: diff recorded
+    vs edited source, plan from the detected names."""
+    from repro.replay import open_run_store
+    run, _ = recorded
+    store, _meta = open_run_store(run)
+    src = (
+        'for e in sess.loop("epochs", range(6)):\n'
+        '    for s in sess.loop("train", range(2)):\n'
+        '        state = step(state)\n'
+        '    for s in sess.loop("val", range(1)):\n'
+        '        check(state)\n'
+    )
+    store.put_meta("source", {"path": "train.py", "src": src})
+    edited = tmp_path / "edited.py"
+    edited.write_text(src.replace("        check(state)\n",
+                                  "        check(state)\n"
+                                  "        flor.log('v', state)\n"))
+    plan = build_plan(run, probed="auto", current_src=str(edited))
+    assert plan.probed == frozenset({"val"})
+    assert not plan.outer_probe
+    assert plan.probe_source["tier"] == "source-diff"
+    assert [s.epoch for s in plan.exec_segments()] == VAL_EPOCHS
+
+
+def test_plan_without_profile_or_ckpt_assumes_block_runs(recorded):
+    """Regression: a record run whose block profile was lost (crash before
+    finish) under SPARSE checkpointing must not silently drop probed
+    epochs — no-evidence epochs conservatively re-execute every block."""
+    import os
+    import shutil
+    from repro.replay import open_run_store
+    run, _ = recorded
+    store, _meta = open_run_store(run)
+    # simulate the lost profile + an adaptive record that skipped epoch 2's
+    # checkpoints entirely
+    os.remove(store._meta_path("block_profile"))
+    for k in list(store.list_keys()):
+        if "_at_2." in k:
+            store.delete_manifest(k)
+    plan = build_plan(run, probed={"train"})
+    seg = plan.segment(2)
+    assert seg.action == "exec"
+    assert set(seg.exec_blocks) >= {"train"}
+    assert not seg.has_ckpt
+    assert 2 in [s.epoch for s in plan.work_segments()]
+    shutil.rmtree(run, ignore_errors=True)
+
+
+# -------------------------------------------------------- planned replay --
+def test_planned_replay_restores_without_executing_skipped_epochs(recorded):
+    """The acceptance property: with a probe on ONE inner block, only the
+    epochs that RUN that block re-execute; every other epoch restores
+    physically without executing anything."""
+    run, final = recorded
+    plan = build_plan(run, probed={"val"})
+    execd = {}
+    with flor.Session(run, mode="replay",
+                      replay=flor.ReplaySpec(plan=plan)) as sess:
+        out = _body(sess, execd, probe=True)
+    np.testing.assert_array_equal(np.asarray(out["x"]),
+                                  np.asarray(final["x"]))
+    for e in range(EPOCHS):
+        assert execd[e]["train"] is False, \
+            f"epoch {e}: train must restore, not execute"
+        if e in VAL_EPOCHS:
+            assert execd[e]["val"] is True
+    rec, reps = flor.run_logs(run)
+    res = flor.deferred_check(rec, reps)
+    assert res.ok, res.anomalies
+    assert res.hindsight_only == len(VAL_EPOCHS)   # the new probe's rows
+
+
+def test_two_worker_merge_bit_identical_to_single_worker(recorded):
+    run, final = recorded
+    plan = build_plan(run, probed={"val"})
+    work = plan.work_segments()
+
+    # single-worker baseline (pid 9 -> its own log file)
+    with flor.Session(run, mode="replay",
+                      replay=flor.ReplaySpec(pid=9, segments=plan.visits_for(),
+                                             probed=plan.probed)) as sess:
+        _body(sess, probe=True)
+    merged_single = merge_replay_logs(
+        run, [("replay_p9", [s.epoch for s in work])])
+    assert merged_single                       # val_metric rows exist
+
+    for split in (balanced_shares, contiguous_shares):
+        shares = [sh for sh in split(work, 2) if sh]
+        assert len(shares) == 2
+        assert sorted(s.epoch for sh in shares for s in sh) == VAL_EPOCHS
+        owners = []
+        last = None
+        for pid, sh in enumerate(shares):
+            spec = flor.ReplaySpec(pid=pid, segments=plan.visits_for(sh),
+                                   probed=plan.probed)
+            with flor.Session(run, mode="replay", replay=spec) as sess:
+                last = _body(sess, probe=True)
+            owners.append((f"replay_p{pid}", [s.epoch for s in sh]))
+        merged = merge_replay_logs(run, owners, out_path=True)
+        assert merged == merged_single
+        rec, _ = flor.run_logs(run)
+        res = flor.deferred_check(rec, merged)
+        assert res.ok, res.anomalies
+    # the worker owning the LAST epoch ends at the recorded final state
+    np.testing.assert_array_equal(np.asarray(last["x"]),
+                                  np.asarray(final["x"]))
+
+
+def test_replayspec_segment_forms():
+    spec = flor.ReplaySpec(segments=[1, (3, "exec"), (0, "init")])
+    assert spec.segments == ((1, "exec"), (3, "exec"), (0, "init"))
+    with pytest.raises(ValueError):
+        flor.ReplaySpec(segments=[(0, "restore")])
+    # pid/nworkers validation still applies to the legacy contiguous form
+    with pytest.raises(ValueError):
+        flor.ReplaySpec(pid=2, nworkers=2)
+    # ... but a planned worker's pid is just a log id
+    assert flor.ReplaySpec(pid=7, segments=[(0, "exec")]).pid == 7
+
+
+# -------------------------------------------------------------- scheduler --
+def _segs(costs):
+    return [Segment(epoch=i, action="exec", exec_cost_s=c)
+            for i, c in enumerate(costs)]
+
+
+def test_lpt_beats_contiguous_on_skew():
+    segs = _segs([1, 1, 1, 1, 1, 1, 8, 8])
+    cont = contiguous_shares(segs, 2)
+    bal = balanced_shares(segs, 2)
+    cont_wall = max(sum(s.cost for s in sh) for sh in cont)
+    bal_wall = max(sum(s.cost for s in sh) for sh in bal)
+    assert cont_wall == 18 and bal_wall == 11
+    # shares stay in epoch order and partition the work exactly
+    for shares in (cont, bal):
+        assert sorted(s.epoch for sh in shares for s in sh) == list(range(8))
+        for sh in shares:
+            assert [s.epoch for s in sh] == sorted(s.epoch for s in sh)
+
+
+def test_share_cost_accounts_init_restores(recorded):
+    run, _ = recorded
+    plan = build_plan(run, probed={"val"})
+    lone = [plan.segment(5)]
+    # strong init pays 5 restores before the exec visit
+    assert share_cost(plan, lone) > plan.segment(5).cost
+    weak = build_plan(run, probed={"val"}, init_mode="weak")
+    assert share_cost(weak, [weak.segment(5)]) < share_cost(plan, lone)
+
+
+def test_dynamic_executor_no_false_failure_under_contention():
+    """Regression: an idle worker racing another worker's dequeue must not
+    mistake the in-flight task for an exhausted one (pop and claim are
+    atomic under the give-up check's lock)."""
+    def run_task(task, attempt, cancelled):
+        time.sleep(0.01 * (task.task_id % 3))
+        return task.task_id
+
+    tasks = [Task(task_id=i, visits=[], epochs=[i]) for i in range(12)]
+    for _ in range(5):          # hammer the window a few times
+        done = DynamicExecutor(tasks, run_task, nworkers=6).run()
+        assert sorted(done) == list(range(12))
+        assert all(done[t][0] == 1 for t in done)
+
+
+def test_dynamic_executor_requeues_failures():
+    attempts = []
+
+    def run_task(task, attempt, cancelled):
+        attempts.append((task.task_id, attempt))
+        if task.task_id == 1 and attempt == 1:
+            raise RuntimeError("flaky worker")
+        return f"ok-{task.task_id}"
+
+    tasks = [Task(task_id=i, visits=[], epochs=[i]) for i in range(3)]
+    done = DynamicExecutor(tasks, run_task, nworkers=2).run()
+    assert {tid: r for tid, (_a, r) in done.items()} == \
+        {0: "ok-0", 1: "ok-1", 2: "ok-2"}
+    assert done[1][0] == 2                     # second attempt won
+    assert (1, 1) in attempts and (1, 2) in attempts
+
+
+def test_dynamic_executor_permanent_failure_raises():
+    def run_task(task, attempt, cancelled):
+        raise RuntimeError("always broken")
+
+    tasks = [Task(task_id=0, visits=[], epochs=[0])]
+    ex = DynamicExecutor(tasks, run_task, nworkers=1, max_attempts=2)
+    with pytest.raises(TaskFailure) as ei:
+        ex.run()
+    assert 0 in ei.value.errors and len(ei.value.errors[0]) == 2
+
+
+def test_dynamic_executor_straggler_speculation():
+    """A hung task is speculatively re-issued to an idle worker; the
+    duplicate finishes first and wins, and the straggler is cancelled."""
+    release = threading.Event()
+
+    def run_task(task, attempt, cancelled):
+        if task.task_id == 0 and attempt == 1:
+            # straggler: hang until cancelled (or a generous timeout)
+            cancelled.wait(timeout=20.0)
+            release.set()
+            return "straggler"
+        return "fast"
+
+    tasks = [Task(task_id=0, visits=[], epochs=[0], est_cost_s=0.01)]
+    ex = DynamicExecutor(tasks, run_task, nworkers=2,
+                         straggler_factor=2.0, max_attempts=2)
+    t0 = time.monotonic()
+    done = ex.run()
+    assert done[0] == (2, "fast")
+    assert release.is_set()                    # straggler was cancelled
+    assert time.monotonic() - t0 < 15.0
+
+
+def test_merge_drops_non_owner_rows(tmp_path):
+    import json
+    import os
+    run = str(tmp_path)
+    os.makedirs(os.path.join(run, "logs"))
+    rows0 = [{"epoch": 0, "seq": 0, "key": "a", "value": 1},
+             {"epoch": 1, "seq": 1, "key": "a", "value": 99}]   # init re-log
+    rows1 = [{"epoch": 1, "seq": 0, "key": "a", "value": 2}]
+    for pid, rows in ((0, rows0), (1, rows1)):
+        with open(os.path.join(run, "logs", f"replay_p{pid}.jsonl"),
+                  "w") as f:
+            for r in rows:
+                f.write(json.dumps(r) + "\n")
+    merged = merge_replay_logs(run, [("replay_p0", [0]),
+                                     ("replay_p1", [1])])
+    assert merged == [{"epoch": 0, "seq": 0, "key": "a", "value": 1},
+                      {"epoch": 1, "seq": 1, "key": "a", "value": 2}]
