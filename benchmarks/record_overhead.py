@@ -1,15 +1,37 @@
-"""Paper Fig. 11: record overhead vs vanilla execution (target: ~1.47%)."""
+"""Paper Fig. 11 (record overhead vs vanilla, target ~1.47%) + the
+background-logging overhead model (paper task (i)).
+
+The logging section is the PR-5 acceptance gate: with ``async_log=True``
+``flor.log`` is a capture+enqueue, so the STEP-PATH time spent in logging
+must be at least 2x lower than the synchronous serialize+write path on a
+logging-heavy workload — while ``flor.log_records`` stays bit-identical
+between the two modes, and stays bit-identical after a torn-segment
+recovery (a background writer killed mid-write).
+
+Run standalone (``SMOKE=1 PYTHONPATH=src:. python -m
+benchmarks.record_overhead``) it executes the logging section with hard
+asserts — CI's record-overhead smoke step; SMOKE only shrinks sizes.
+"""
 from __future__ import annotations
 
+import json
+import os
 import shutil
 import time
 
 import jax
+import jax.numpy as jnp
 
 import repro.flor as flor
 from benchmarks.common import Rows, finetune_like, make_runner, train_like
 
 EPOCHS = 8
+
+SMOKE = bool(os.environ.get("SMOKE"))
+# logging-heavy config: per-step array probes make serialization the cost
+LOG_EPOCHS = 4 if SMOKE else 8
+LOG_STEPS = 20 if SMOKE else 60
+LOG_ELEMS = 16 * 1024 if SMOKE else 64 * 1024        # f32 per logged array
 
 
 def _vanilla(state, run_epoch):
@@ -21,16 +43,83 @@ def _vanilla(state, run_epoch):
 
 def _flor_record(state, run_epoch, run_dir, adaptive=True):
     shutil.rmtree(run_dir, ignore_errors=True)
-    flor.init(run_dir, mode="record", adaptive=adaptive)
-    t0 = time.perf_counter()
-    for e in flor.generator(range(EPOCHS)):
-        if flor.skipblock.step_into("train"):
-            state, m = run_epoch(state, e)
-            flor.log("loss", m["loss"])
-        state = flor.skipblock.end("train", state)
-    wall = time.perf_counter() - t0
-    flor.finish()
+    with flor.Session(run_dir, mode="record",
+                      record=flor.RecordSpec(adaptive=adaptive)) as sess:
+        t0 = time.perf_counter()
+        with sess.checkpointing(state=state) as ckpt:
+            for e in sess.loop("epochs", range(EPOCHS)):
+                for _ in sess.loop("train", range(1)):
+                    ckpt.state, m = run_epoch(ckpt.state, e)
+                flor.log("loss", m["loss"])
+        wall = time.perf_counter() - t0
     return wall
+
+
+# ------------------------------------------------- background logging -------
+def _logging_run(run_dir: str, async_log: bool) -> float:
+    """A logging-heavy record run; returns the STEP-PATH seconds spent
+    inside flor.log (the overhead the paper's task (i) bounds). Identical
+    values are logged in both modes; spill is disabled so both serialize
+    the full arrays."""
+    shutil.rmtree(run_dir, ignore_errors=True)
+    base = jnp.arange(LOG_ELEMS, dtype=jnp.float32)
+    jax.block_until_ready(base)
+    t_log = 0.0
+    with flor.Session(run_dir, mode="record",
+                      record=flor.RecordSpec(adaptive=False,
+                                             async_log=async_log,
+                                             log_spill_bytes=0)) as sess:
+        for e in sess.loop("epochs", range(LOG_EPOCHS)):
+            for s in range(LOG_STEPS):
+                v = base + jnp.float32(e * LOG_STEPS + s)
+                jax.block_until_ready(v)              # value ready pre-clock
+                t0 = time.perf_counter()
+                flor.log("hist", v)
+                flor.log("step_scalar", e * LOG_STEPS + s)
+                t_log += time.perf_counter() - t0
+    return t_log
+
+
+def _payload(run_dir: str):
+    rows = flor.FingerprintLog.read(
+        os.path.join(run_dir, "logs", "record.jsonl"))
+    return [(r["epoch"], r["seq"], r["key"], json.dumps(r["value"]))
+            for r in rows]
+
+
+def _tear_last_segment(run_dir: str):
+    from repro.logging import list_segments
+    segs = list_segments(os.path.join(run_dir, "logs", "record.jsonl"))
+    with open(segs[-1][1], "a") as f:
+        f.write('{"epoch": 0, "seq": 424242, "key": "torn", "val')
+
+
+def run_logging(rows: Rows, tmp="/tmp/bench_record_overhead"):
+    """Async vs sync flor.log on the step path + bit-identity asserts."""
+    run_async = f"{tmp}/logging_async"
+    run_sync = f"{tmp}/logging_sync"
+    t_async = min(_logging_run(run_async, async_log=True) for _ in range(2))
+    t_sync = min(_logging_run(run_sync, async_log=False) for _ in range(2))
+    n = LOG_EPOCHS * LOG_STEPS
+    rows.add("record_overhead(logging)", "sync_steppath_ms_per_step",
+             round(t_sync / n * 1e3, 4))
+    rows.add("record_overhead(logging)", "async_steppath_ms_per_step",
+             round(t_async / n * 1e3, 4))
+    speedup = t_sync / max(t_async, 1e-9)
+    rows.add("record_overhead(logging)", "steppath_speedup",
+             round(speedup, 2), "acceptance: >= 2x")
+    assert t_async <= 0.5 * t_sync, \
+        f"async logging step-path time {t_async:.4f}s not <= 0.5x " \
+        f"sync {t_sync:.4f}s"
+    pa, ps = _payload(run_async), _payload(run_sync)
+    assert pa == ps, "log_records diverge between async and sync modes"
+    # torn-segment recovery: kill-mid-write leaves a half line; the reader
+    # must still serve the identical rows
+    _tear_last_segment(run_async)
+    assert _payload(run_async) == ps, \
+        "log_records changed across torn-segment recovery"
+    rows.add("record_overhead(logging)", "bit_identical", 1,
+             "async == sync == torn-recovered")
 
 
 def run(rows: Rows, tmp="/tmp/bench_record_overhead"):
@@ -45,7 +134,12 @@ def run(rows: Rows, tmp="/tmp/bench_record_overhead"):
         rows.add("record_overhead(fig11)", f"{name}_flor_s", round(tf, 3))
         rows.add("record_overhead(fig11)", f"{name}_overhead_pct",
                  round(ovh, 2), "paper avg 1.47%")
+    run_logging(rows, tmp=tmp)
 
 
 if __name__ == "__main__":
-    run(Rows())
+    rows = Rows()
+    if SMOKE:
+        run_logging(rows)          # CI smoke: logging acceptance gate only
+    else:
+        run(rows)

@@ -33,6 +33,10 @@ ap.add_argument("--no-adaptive", action="store_true",
                 help="checkpoint every epoch regardless of the eps budget "
                      "(useful on slow disks / CI to guarantee physical "
                      "replay restores)")
+ap.add_argument("--sync-log", action="store_true",
+                help="legacy synchronous flor.log (serialize + write on the "
+                     "step path); default is the background log stage — see "
+                     "docs/logging.md")
 args = ap.parse_args()
 
 cfg = C.get("florbench-100m") if args.full else C.get_smoke("florbench-100m")
@@ -41,7 +45,8 @@ batch_size, seq = (8, 512) if args.full else (4, 128)
 t0 = time.time()
 with flor.Session(args.run_dir, mode="record",
                   record=flor.RecordSpec(
-                      adaptive=not args.no_adaptive)) as sess:
+                      adaptive=not args.no_adaptive,
+                      async_log=not args.sync_log)) as sess:
     # hyperparameters recorded for replay (override: FLOR_ARGS="peak_lr=3e-4")
     epochs = flor.arg("epochs", args.epochs)
     steps = flor.arg("steps_per_epoch", args.steps_per_epoch)

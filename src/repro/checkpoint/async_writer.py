@@ -1,23 +1,32 @@
-"""Background materialization (paper section 5.1, adapted to JAX).
+"""Background work stages (paper section 5.1, adapted to JAX) — the FIFO
+job-stage substrate behind BOTH checkpoints and logs.
 
 The paper forks a child process to snapshot mutable PyTorch tensors with
 copy-on-write. JAX arrays are immutable, so a "snapshot" is a reference —
-submit() returns after capturing references; a writer thread then performs
-the heavy half of materialization. A bounded queue applies backpressure so
-record can never run unboundedly ahead of the disk.
+the training thread captures references and returns; a daemon worker thread
+then performs the heavy half of the work. A bounded queue applies
+backpressure so record can never run unboundedly ahead of the disk.
 
-AsyncWriter is a generic STAGE: the unit of work is a job callable
-``fn(store) -> stat dict`` executed in FIFO order on the writer thread.
+Two layers live here:
 
-* ``submit(key, tree, meta)`` — the classic whole-tree path: the job does
-  device->host transfer of every leaf (jax.device_get releases the GIL
-  during the DMA), chunking, hashing, compression and I/O.
-* ``submit_job(key, fn)`` — the delta pipeline's path: the pipeline has
-  already gathered only the CHANGED blocks to host; the job just hashes,
-  compresses, writes, and emits the manifest.
+* :class:`AsyncStage` — the generic single-worker FIFO stage: a bounded
+  queue, a daemon thread draining it through a ``process(item)`` callable,
+  error capture surfaced on the next ``put``/``drain``, and
+  ``drain``/``close`` lifecycle. The background LOG writer
+  (``repro.logging.stream``) runs its serialize+spill+segment-write work on
+  this same stage type — the step path only enqueues.
+* :class:`AsyncWriter` — the checkpoint materialization stage built on it.
+  The unit of work is a job callable ``fn(store) -> stat dict``:
 
-Materialization wall time per job is reported to a callback — that is the
-M_i the adaptive controller (core/adaptive.py) consumes.
+  - ``submit(key, tree, meta)`` — the classic whole-tree path: the job does
+    device->host transfer of every leaf (jax.device_get releases the GIL
+    during the DMA), chunking, hashing, compression and I/O.
+  - ``submit_job(key, fn)`` — the delta pipeline's path: the pipeline has
+    already gathered only the CHANGED blocks to host; the job just hashes,
+    compresses, writes, and emits the manifest.
+
+  Materialization wall time per job is reported to a callback — that is the
+  M_i the adaptive controller (core/adaptive.py) consumes.
 """
 from __future__ import annotations
 
@@ -26,48 +35,92 @@ import threading
 import time
 from typing import Callable, Optional
 
+_STOP = object()
 
-class AsyncWriter:
-    def __init__(self, store, max_queue: int = 2,
-                 on_materialized: Optional[Callable] = None):
-        self.store = store
+
+class AsyncStage:
+    """A bounded FIFO queue drained by one daemon worker thread.
+
+    ``put`` blocks when the queue is full (backpressure) unless
+    ``block=False``, in which case it returns False and the caller decides
+    what to skip. A processing exception is captured and re-raised on the
+    NEXT ``put``/``drain``/``close`` — same contract the checkpoint writer
+    has always had: background failures can't be silent, but they surface
+    on the submitting thread, not inside the worker."""
+
+    def __init__(self, process: Callable, max_queue: int = 2):
+        self._process = process
         self._q: queue.Queue = queue.Queue(maxsize=max_queue)
-        self._on_mat = on_materialized
         self._err: Optional[BaseException] = None
-        self._stats: list[dict] = []
+        self._closed = False
         self._t = threading.Thread(target=self._worker, daemon=True)
         self._t.start()
 
     def _worker(self):
         while True:
             item = self._q.get()
-            if item is None:
-                return
-            key, fn = item
             try:
-                t0 = time.perf_counter()
-                stat = fn(self.store) or {}
-                stat.setdefault("key", key)
-                stat["materialize_s"] = time.perf_counter() - t0
-                self._stats.append(stat)
-                if self._on_mat:
-                    self._on_mat(stat)
-            except BaseException as e:   # surfaced on next submit/drain
+                if item is _STOP:
+                    return
+                self._process(item)
+            except BaseException as e:   # surfaced on next put/drain
                 self._err = e
             finally:
                 self._q.task_done()
+
+    def put(self, item, block: bool = True) -> bool:
+        """Enqueue one work item. Returns False when the queue is full and
+        ``block=False`` (bounded overhead: the caller may drop the item)."""
+        if self._err:
+            raise self._err
+        try:
+            self._q.put(item, block=block)
+            return True
+        except queue.Full:
+            return False
+
+    def drain(self):
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self):
+        if self._closed:
+            return
+        self._closed = True
+        self._q.join()
+        self._q.put(_STOP)
+        self._t.join()
+        if self._err:
+            raise self._err
+
+
+class AsyncWriter:
+    """Checkpoint materialization stage: FIFO jobs ``fn(store)`` executed on
+    the writer thread, per-job wall time reported to ``on_materialized``."""
+
+    def __init__(self, store, max_queue: int = 2,
+                 on_materialized: Optional[Callable] = None):
+        self.store = store
+        self._on_mat = on_materialized
+        self._stats: list[dict] = []
+        self._stage = AsyncStage(self._run, max_queue=max_queue)
+
+    def _run(self, item):
+        key, fn = item
+        t0 = time.perf_counter()
+        stat = fn(self.store) or {}
+        stat.setdefault("key", key)
+        stat["materialize_s"] = time.perf_counter() - t0
+        self._stats.append(stat)
+        if self._on_mat:
+            self._on_mat(stat)
 
     def submit_job(self, key: str, fn: Callable, block: bool = True) -> bool:
         """Enqueue a materialization job. Returns False if the queue is full
         and block=False (caller may skip this checkpoint — bounded
         overhead)."""
-        if self._err:
-            raise self._err
-        try:
-            self._q.put((key, fn), block=block)
-            return True
-        except queue.Full:
-            return False
+        return self._stage.put((key, fn), block=block)
 
     def submit(self, key: str, tree, meta: Optional[dict] = None,
                block: bool = True) -> bool:
@@ -76,14 +129,10 @@ class AsyncWriter:
         return self.submit_job(key, _full_tree_job(key, tree, meta), block)
 
     def drain(self):
-        self._q.join()
-        if self._err:
-            raise self._err
+        self._stage.drain()
 
     def close(self):
-        self.drain()
-        self._q.put(None)
-        self._t.join()
+        self._stage.close()
 
     @property
     def stats(self):

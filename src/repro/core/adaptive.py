@@ -12,6 +12,13 @@ invariant (Eq. 3: record+replay never slower than two vanilla runs, for any
 parallelism G >= 2). The restore/materialize ratio c starts at the paper's
 naive 1.0 and is refined online from observed restores (paper: measured
 average c = 1.38 across workloads).
+
+Logging shares the budget: epsilon bounds TOTAL record overhead, and the
+background log writer (repro.logging) reports its serialize+spill+write
+wall time here via ``observe_logging``. The epsilon the Joint Invariant
+tests against is the RESIDUAL after observed logging cost — a
+logging-heavy run materializes fewer checkpoints rather than silently
+blowing the user's overhead bound.
 """
 from __future__ import annotations
 
@@ -50,9 +57,32 @@ class AdaptiveController:
         # checkpoint blow the eps budget on short-epoch workloads)
         self.write_bps = write_bps
         self.blocks: dict[str, BlockStats] = {}
+        # observed background-logging cost (repro.logging reports every
+        # flush): draws down the same epsilon budget as materialization
+        self.log_s = 0.0
+        self.log_bytes = 0
 
     def _b(self, block_id: str) -> BlockStats:
         return self.blocks.setdefault(block_id, BlockStats())
+
+    # ----------------------------------------------------------- logging --
+    def observe_logging(self, seconds: float, nbytes: int = 0):
+        """Account one log serialize/spill/write batch (thread-safe enough:
+        float += races only smudge an EMA-free accumulator by one sample)."""
+        self.log_s += float(seconds)
+        self.log_bytes += int(nbytes)
+
+    def _total_compute_s(self) -> float:
+        return sum(b.n * b.C.value for b in self.blocks.values())
+
+    def effective_epsilon(self) -> float:
+        """The overhead budget LEFT for checkpoint materialization once
+        observed logging cost is charged against epsilon (never negative —
+        at/over budget, checkpointing pauses until compute catches up)."""
+        total = self._total_compute_s()
+        if not total or not self.log_s:
+            return self.epsilon
+        return max(self.epsilon - self.log_s / total, 0.0)
 
     # ------------------------------------------------------------ record --
     def observe_execution(self, block_id: str, compute_s: float):
@@ -78,7 +108,7 @@ class AdaptiveController:
             M = est_bytes * frac / self.write_bps
         k_eff = b.k + b.pending
         thr = (b.n / (k_eff + 1)) * min(1.0 / (1.0 + self.c.value),
-                                        self.epsilon)
+                                        self.effective_epsilon())
         return (M / C) < thr
 
     def observe_materialization(self, block_id: str, materialize_s: float):
@@ -116,6 +146,9 @@ class AdaptiveController:
     def snapshot(self) -> dict:
         return {
             "epsilon": self.epsilon,
+            "epsilon_effective": self.effective_epsilon(),
+            "log_s": self.log_s,
+            "log_bytes": self.log_bytes,
             "c": self.c.value,
             "write_bps": self.write_bps,
             "blocks": {

@@ -3,7 +3,9 @@
 Mirrors the paper's parameterized-branching state machine (section 4.2):
 mode in {record, replay}; replay phase in {init, exec}; plus the probed-block
 set, the adaptive controller, the checkpoint store/async writer, and the
-fingerprint log.
+fingerprint log (background by default — `repro.logging`; ``flor.log`` on
+the step path is an enqueue, and observed logging cost draws down the same
+epsilon budget that gates checkpoint materialization).
 
 Run lineage: `store_root=` shares one content-addressed store across runs
 (per-run manifest namespaces, global chunk dedup); `parent_run=` declares
@@ -14,7 +16,6 @@ without arguments; run records live in the `RunRegistry` beside the store.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 import warnings
@@ -25,6 +26,12 @@ from repro.checkpoint import (CheckpointPipeline, CheckpointStore,
 from repro.checkpoint.lineage import (generate_run_id, read_run_meta,
                                       write_run_meta)
 from repro.core.adaptive import AdaptiveController
+# Re-exported here for backward compatibility: FingerprintLog lived in this
+# module before the background logging subsystem (PR 5) made it a package.
+from repro.logging import (DEFAULT_QUEUE_DEPTH, DEFAULT_SPILL_BYTES,  # noqa: F401
+                           FingerprintLog, FlorLogValueWarning, jsonable)
+
+_jsonable = jsonable                     # legacy private name, kept importable
 
 # Contexts form a STACK: `flor.Session` pushes on enter and pops on exit, so
 # nested and sequential sessions compose without a single mutable global.
@@ -46,74 +53,6 @@ def _deprecated(msg: str):
     warnings.warn(msg, FlorDeprecationWarning, stacklevel=3)
 
 
-class FingerprintLog:
-    """Append-only metric log; record/replay logs are diffed by the deferred
-    correctness check (paper section 5.2.2).
-
-    ``fresh=True`` truncates (each replay ATTEMPT rotates its log — stale
-    lines from a previous attempt with the same pid would corrupt the
-    deferred diff); ``fresh=False`` appends and continues ``seq`` from the
-    existing tail, so a resumed record run never emits duplicate seqs."""
-
-    def __init__(self, path: str, fresh: bool = False):
-        self.path = path
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        self._f = open(path, "w" if fresh else "a", buffering=1)
-        self._seq = 0 if fresh else self._tail_seq(path)
-
-    @staticmethod
-    def _tail_seq(path: str) -> int:
-        """1 + the last valid seq already in the file (0 for a new file)."""
-        try:
-            last = -1
-            with open(path) as f:
-                for line in f:
-                    line = line.strip()
-                    if line:
-                        try:
-                            last = max(last, int(json.loads(line)["seq"]))
-                        except (ValueError, KeyError, json.JSONDecodeError):
-                            continue
-            return last + 1
-        except OSError:
-            return 0
-
-    def log(self, epoch, key: str, value):
-        rec = {"epoch": int(epoch) if epoch is not None else None,
-               "seq": self._seq, "key": key, "value": _jsonable(value)}
-        self._f.write(json.dumps(rec) + "\n")
-        self._seq += 1
-
-    def close(self):
-        self._f.close()
-
-    @staticmethod
-    def read(path: str) -> list[dict]:
-        out = []
-        if not os.path.exists(path):
-            return out
-        with open(path) as f:
-            for line in f:
-                line = line.strip()
-                if line:
-                    out.append(json.loads(line))
-        return out
-
-
-def _jsonable(v):
-    try:
-        import numpy as np
-        if hasattr(v, "item") and getattr(v, "ndim", 1) == 0:
-            return float(v.item()) if hasattr(v, "dtype") else v
-        if isinstance(v, (np.ndarray,)):
-            return v.tolist()
-    except Exception:
-        pass
-    if isinstance(v, (int, float, str, bool, type(None), list, dict)):
-        return v
-    return repr(v)
-
-
 class FlorContext:
     def __init__(self, run_dir: str, mode: str = "record", *,
                  epsilon: float = 1.0 / 15, adaptive: bool = True,
@@ -122,7 +61,10 @@ class FlorContext:
                  segments: Optional[list] = None,
                  async_materialize: bool = True,
                  full_manifest_every: int = 8, store_root: Optional[str] = None,
-                 parent_run: Optional[str] = None, run_id: Optional[str] = None):
+                 parent_run: Optional[str] = None, run_id: Optional[str] = None,
+                 async_log: bool = True,
+                 log_queue_depth: int = DEFAULT_QUEUE_DEPTH,
+                 log_spill_bytes: int = DEFAULT_SPILL_BYTES):
         assert mode in ("record", "replay")
         self.run_dir = run_dir
         self.mode = mode
@@ -243,10 +185,16 @@ class FlorContext:
         self.writer = self.pipeline.writer if self.pipeline else None
         suffix = "record" if mode == "record" else f"replay_p{pid}"
         # record resumes (seq continues from the tail); each replay attempt
-        # rotates its per-pid log so stale lines never pollute deferred_check
-        self.log = FingerprintLog(os.path.join(run_dir, "logs",
-                                               f"{suffix}.jsonl"),
-                                  fresh=(mode == "replay"))
+        # rotates its per-pid log so stale lines never pollute deferred_check.
+        # async_log (default) puts serialization + I/O on a background stage
+        # writing crash-safe segments; the observed logging overhead feeds
+        # the controller so it shares the epsilon budget with checkpoints.
+        self.log = FingerprintLog(
+            os.path.join(run_dir, "logs", f"{suffix}.jsonl"),
+            fresh=(mode == "replay"), async_log=async_log,
+            queue_depth=log_queue_depth, spill_bytes=log_spill_bytes,
+            store=self.store, stream=suffix,
+            on_overhead=self.controller.observe_logging)
         self._block_keys_meta: dict[str, dict] = {}
         # ---- session-surface state (flor.loop / flor.checkpointing /
         # flor.arg): nesting depth of active flor.loop iterators (0 = the
@@ -433,7 +381,7 @@ class FlorContext:
             val = default
             if name in self._arg_overrides:
                 val = _coerce(self._arg_overrides[name], default)
-            self._hparams[name] = _jsonable(val)
+            self._hparams[name] = jsonable(val, name)
             self.store.put_meta("hparams", {"args": self._hparams})
             return val
         recorded = (self.store.get_meta("hparams") or {}).get("args", {})
@@ -479,6 +427,16 @@ class FlorContext:
 
     # ------------------------------------------------------------ finish --
     def finish(self, status: str = "finished"):
+        # close the log FIRST: it drains the background stage (rows become
+        # durable) and its final overhead totals land in the controller
+        # snapshot persisted below. A deferred background-log error must
+        # NOT abort finalization — the pipeline still drains, the registry
+        # still records the run, and the error re-raises at the end.
+        log_err: Optional[BaseException] = None
+        try:
+            self.log.close()
+        except BaseException as e:
+            log_err = e
         final_keys: dict[str, str] = {}
         if self.pipeline is not None:
             final_keys = {s: k for s, k in self.pipeline._last_key.items()
@@ -502,7 +460,8 @@ class FlorContext:
             self.store.put_meta("block_profile", {"blocks": prev})
         self.store.put_meta(f"controller_{self.mode}_p{self.pid}",
                             self.controller.snapshot())
-        self.log.close()
+        if log_err is not None:
+            raise log_err
 
 
 def _parse_arg_overrides(spec: str) -> dict[str, str]:

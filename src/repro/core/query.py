@@ -57,7 +57,10 @@ def _registered_runs(path: str) -> list[dict]:
 
 def _run_log_files(run_dir: Optional[str],
                    include_replay: bool) -> list[tuple[str, str]]:
-    """[(source, path)] of the fingerprint logs a run dir holds."""
+    """[(source, path)] of the fingerprint log STREAMS a run dir holds. A
+    stream path may be a flat file or a background-writer segment dir at
+    the same name (repro.logging) — ``FingerprintLog.read`` dispatches, so
+    this listing treats them uniformly."""
     if not run_dir:
         return []
     d = os.path.join(run_dir, "logs")

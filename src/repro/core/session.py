@@ -38,24 +38,48 @@ from repro.core.context import (FlorContext, FlorDeprecationWarning,  # noqa: F4
                                 get_context, pop_context, push_context)
 from repro.core.generator import epoch_iter
 from repro.core.skipblock import skipblock
+from repro.logging import DEFAULT_QUEUE_DEPTH, DEFAULT_SPILL_BYTES
 
 VALID_INIT_MODES = ("strong", "weak")
+
+
+def _check_log_knobs(queue_depth: int, spill_bytes: int):
+    """Shared RecordSpec/ReplaySpec validation of the logging knobs."""
+    if queue_depth < 1:
+        raise ValueError(f"log_queue_depth must be >= 1, got {queue_depth}")
+    if spill_bytes < 0:
+        raise ValueError("log_spill_bytes must be >= 0 (0 disables), "
+                         f"got {spill_bytes}")
 
 
 # ------------------------------------------------------------- typed specs --
 @dataclass(frozen=True)
 class RecordSpec:
-    """Record-side knobs (subsumes the old kwargs bag's record half)."""
+    """Record-side knobs (subsumes the old kwargs bag's record half).
+
+    ``epsilon`` budgets TOTAL record overhead — checkpoint materialization
+    AND observed background-logging cost share it (docs/logging.md). The
+    ``log_*`` knobs configure the background logging subsystem
+    (``repro.logging``): ``async_log=False`` reverts ``flor.log`` to the
+    synchronous flat-file path; ``log_queue_depth`` bounds how far the
+    training thread can run ahead of the log writer before enqueues apply
+    backpressure; a logged array larger than ``log_spill_bytes`` host bytes
+    is spilled to the checkpoint store and logged as a ``{"ref": ...}``
+    pointer row (0 disables spilling)."""
     epsilon: float = 1.0 / 15          # record-overhead budget (Eq. 1)
     adaptive: bool = True              # adaptive checkpointing (section 5.3)
-    async_materialize: bool = True     # background write stage
+    async_materialize: bool = True     # background checkpoint write stage
     full_manifest_every: int = 8       # delta-chain length bound
+    async_log: bool = True             # background flor.log (repro.logging)
+    log_queue_depth: int = DEFAULT_QUEUE_DEPTH    # bounded queue (backpressure)
+    log_spill_bytes: int = DEFAULT_SPILL_BYTES    # spill threshold (0 = off)
 
     def __post_init__(self):
         if not 0 < self.epsilon <= 1:
             raise ValueError(f"epsilon must be in (0, 1], got {self.epsilon}")
         if self.full_manifest_every < 1:
             raise ValueError("full_manifest_every must be >= 1")
+        _check_log_knobs(self.log_queue_depth, self.log_spill_bytes)
 
     def to_kwargs(self) -> dict:
         return {f.name: getattr(self, f.name) for f in fields(self)}
@@ -73,15 +97,22 @@ class ReplaySpec:
         list (and the probed set, unless given).
       * ``pid``/``nworkers`` — the legacy contiguous split, kept as a
         deprecation shim (the generator warns when ``nworkers > 1``).
-    """
+
+    The ``log_*`` knobs mirror :class:`RecordSpec`'s: hindsight probes
+    logged during replay go through the same background subsystem (each
+    replay attempt rotates its per-pid stream)."""
     pid: int = 0
     nworkers: int = 1
     init_mode: str = "strong"          # strong | weak
     probed: frozenset = frozenset()    # block names to re-execute ('*' = all)
     segments: Optional[tuple] = None   # planned visits [(epoch, phase), ...]
     plan: Optional[Any] = None         # a ReplayPlan (repro.replay.plan)
+    async_log: bool = True             # background flor.log (repro.logging)
+    log_queue_depth: int = DEFAULT_QUEUE_DEPTH
+    log_spill_bytes: int = DEFAULT_SPILL_BYTES
 
     def __post_init__(self):
+        _check_log_knobs(self.log_queue_depth, self.log_spill_bytes)
         if self.init_mode not in VALID_INIT_MODES:
             raise ValueError(f"init_mode must be one of {VALID_INIT_MODES}, "
                              f"got {self.init_mode!r}")
@@ -110,7 +141,9 @@ class ReplaySpec:
     def to_kwargs(self) -> dict:
         return {"pid": self.pid, "nworkers": self.nworkers,
                 "init_mode": self.init_mode, "probed": set(self.probed),
-                "segments": self.segments}
+                "segments": self.segments, "async_log": self.async_log,
+                "log_queue_depth": self.log_queue_depth,
+                "log_spill_bytes": self.log_spill_bytes}
 
 
 @dataclass(frozen=True)
@@ -218,37 +251,70 @@ class Session:
     # ------------------------------------------------- explicit surface --
     @property
     def run_id(self):
+        """This run's registry id (record: generated or explicit; replay:
+        read back from ``flor.run.json``)."""
         return self.ctx.run_id
 
     @property
     def parent_run(self):
+        """Ancestor run id of the lineage edge, or None (same value on
+        record and replay — replay reads the recorded binding)."""
         return self.ctx.parent_run
 
     @property
     def store_root(self):
+        """The checkpoint store this session reads/writes (shared root or
+        the private ``<run_dir>/store``)."""
         return self.ctx.store_root
 
     @property
     def current_epoch(self):
+        """Epoch of the outer loop's current iteration (None outside it).
+        On replay this follows the planned visit order, not 0..N."""
         return self.ctx.current_epoch
 
     def log(self, key: str, value):
+        """Log a metric/probe value into THIS session's fingerprint log.
+        Record: the row becomes part of the fingerprint replay must
+        reproduce. Replay: rows land in the attempt's own per-pid stream and
+        are diffed (or, for hindsight-only keys, admitted) by
+        ``flor.deferred_check``. Non-blocking by default: the value is
+        captured and enqueued; serialization and I/O happen on the
+        background log stage (``RecordSpec/ReplaySpec(async_log=)``)."""
         ctx = self.ctx
         ctx.log.log(ctx.current_epoch, key, value)
 
     def arg(self, name: str, default=None):
+        """Replay-stable hyperparameter. Record: resolve (``FLOR_ARGS=``
+        overrides the default), persist to store meta, return. Replay:
+        return the RECORDED value, coerced to the default's type."""
         return self.ctx.hparam(name, default)
 
     def loop(self, name: str, iterable):
+        """Named Flor loop bound to THIS session (see module-level
+        :func:`loop`). Record: iterate + bookkeep (outer) / checkpoint via
+        the enclosing scope (inner). Replay: the outer loop walks the
+        planned init/exec visits; inner loops skip-and-restore or
+        re-execute per the probed set."""
         return loop(name, iterable, ctx=self.ctx)
 
     def checkpointing(self, **slots) -> "checkpointing":
+        """Declare WHAT gets checkpointed for the loops in the scope.
+        Record: the slots are the Loop End Checkpoint payload. Replay: a
+        skipped block physically restores INTO these slots."""
         return checkpointing(_ctx=self.ctx, **slots)
 
     def executed(self, name: str) -> bool:
+        """Whether block `name`'s latest occurrence actually ran. Record:
+        always True after the loop. Replay: False when it was skipped and
+        physically restored — guard post-loop logging with this."""
         return self.ctx.block_executed.get(name, False)
 
     def warm_start(self, block_id: str = "train", like=None):
+        """Restore the parent run's final checkpoint for `block_id`.
+        Record: also seeds the delta pipeline (first checkpoint becomes a
+        cross-run delta). Replay: restore only, through the parent run's
+        chunks."""
         return self.ctx.warm_start(block_id, like=like)
 
 
@@ -302,7 +368,10 @@ class checkpointing:
     """``with flor.checkpointing(state=..., opt=...) as ckpt:`` — declare the
     checkpointed state for the `flor.loop` blocks inside the scope, instead
     of threading it through `skipblock.end`. Scopes nest; a loop binds to
-    the INNERMOST active scope."""
+    the INNERMOST active scope. Record: the slots are each block's Loop End
+    Checkpoint payload. Replay: a skipped block physically restores the
+    recorded payload INTO the slots; an executed block leaves what the
+    re-execution computed."""
 
     def __init__(self, _ctx: Optional[FlorContext] = None, **slots):
         self._ctx = _ctx

@@ -29,12 +29,20 @@ logically. ``flor.arg`` returns the RECORDED value, so hyperparameters can
 never drift between record and replay. Guard post-loop logging that needs
 real execution with ``flor.executed("train")``.
 
+``flor.log`` itself is OFF the step path: by default it captures the value
+and enqueues; a background stage (``repro.logging``) pays the device->host
+copy, serialization, large-value spill, and crash-safe segment I/O, and its
+observed cost draws down the same epsilon overhead budget as checkpoint
+materialization (docs/logging.md).
+
 Sessions are explicit and STACKED — they nest and sequence with no hidden
 global. Typed specs subsume the old kwargs bag:
 
     flor.RecordSpec(epsilon=, adaptive=, async_materialize=,
-                    full_manifest_every=)
-    flor.ReplaySpec(pid=, nworkers=, init_mode=, probed=)
+                    full_manifest_every=, async_log=, log_queue_depth=,
+                    log_spill_bytes=)
+    flor.ReplaySpec(pid=, nworkers=, init_mode=, probed=,
+                    async_log=, log_queue_depth=, log_spill_bytes=)
     flor.LineageSpec(store_root=, run_id=, parent_run=)
 
 Run lineage (multi-run shared store): point several runs at one store and
@@ -69,6 +77,7 @@ from repro.core.changeset import (    # noqa: F401
     analyze_loop, augment_changeset, outer_assignments, register_augmenter)
 from repro.core.context import (      # noqa: F401
     FlorContext, FlorDeprecationWarning, finish, get_context, init)
+from repro.logging import FingerprintLog, FlorLogValueWarning  # noqa: F401
 from repro.core.fingerprint import deferred_check, run_logs  # noqa: F401
 from repro.core.generator import (generator, partition,      # noqa: F401
                                   sampling_generator)
@@ -85,7 +94,18 @@ from repro.replay import ReplayPlan, build_plan              # noqa: F401
 
 
 def log(key: str, value):
-    """Log a metric / probe value (goes into the fingerprint log)."""
+    """Log a metric / probe value into the fingerprint log.
+
+    Record: the row is part of the fingerprint replay must reproduce; the
+    call is a non-blocking enqueue by default — device->host copies, JSON
+    serialization, large-value spill, and segment I/O run on a background
+    stage whose observed cost shares the epsilon overhead budget with
+    checkpoints (``RecordSpec(async_log=, log_queue_depth=,
+    log_spill_bytes=)``; see docs/logging.md). Replay: identical
+    mechanics into the attempt's per-pid stream; keys the record run also
+    logged are diffed by ``deferred_check``, new keys are hindsight
+    probes. Values that cannot be JSON-lowered degrade to ``repr`` with a
+    one-time ``FlorLogValueWarning`` per key."""
     ctx = get_context()
     ctx.log.log(ctx.current_epoch, key, value)
 
@@ -112,4 +132,7 @@ def augment(namespace_subset: dict, namespace: dict) -> dict:
 
 
 def current_epoch():
+    """Epoch of the active outer loop's current iteration (None outside
+    one). Record: 0..N-1 in order; replay: follows the planned visit
+    order."""
     return get_context().current_epoch

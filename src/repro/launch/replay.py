@@ -316,17 +316,16 @@ def main():
     # drop superseded attempt logs (failed first tries, cancelled straggler
     # duplicates): the query surface globs every replay_*.jsonl, and a
     # partial log from a dead attempt would pollute runs logs/pivot and any
-    # later raw-file deferred check
+    # later raw-file deferred check. remove_stream handles both layouts
+    # (flat file, or the background writer's segment dir at the same path)
+    from repro.logging import remove_stream
     keep = {f"replay_p{done[t.task_id][1]}.jsonl"
             for t in tasks if t.task_id in done}
     for t in tasks:
         for attempt in range(1, ex.max_attempts + 1):
             fn = f"replay_p{t.task_id + (attempt - 1) * pid_stride}.jsonl"
             if fn not in keep:
-                try:
-                    os.remove(os.path.join(args.run_dir, "logs", fn))
-                except OSError:
-                    pass
+                remove_stream(os.path.join(args.run_dir, "logs", fn))
     merged = merge_replay_logs(args.run_dir, owners, out_path=True)
     print(f"merged {len(merged)} log rows from {len(owners)} task log(s) "
           f"-> logs/merged_replay.jsonl")

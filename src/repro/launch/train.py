@@ -41,6 +41,14 @@ def main():
     ap.add_argument("--no-adaptive", action="store_true")
     ap.add_argument("--no-flor", action="store_true",
                     help="vanilla baseline (no record) for overhead benchs")
+    ap.add_argument("--sync-log", action="store_true",
+                    help="legacy synchronous flor.log (serialize + write on "
+                         "the step path) instead of the background log "
+                         "stage; for overhead comparisons")
+    ap.add_argument("--log-spill-bytes", type=int, default=1 << 20,
+                    help="spill logged arrays larger than this many host "
+                         "bytes to the checkpoint store, logging a ref row "
+                         "(0 disables)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", default=None,
                     help="e.g. 1x1; data x model over local devices")
@@ -87,7 +95,9 @@ def main():
         with flor.Session(
                 args.run_dir, mode="record",
                 record=flor.RecordSpec(epsilon=args.epsilon,
-                                       adaptive=not args.no_adaptive),
+                                       adaptive=not args.no_adaptive,
+                                       async_log=not args.sync_log,
+                                       log_spill_bytes=args.log_spill_bytes),
                 lineage=flor.LineageSpec(store_root=args.store_root,
                                          run_id=args.run_id,
                                          parent_run=args.parent_run)) as sess:

@@ -1,0 +1,581 @@
+"""Background logging subsystem (repro.logging): async/sync bit-identity,
+crash-safe segments (torn tails, seq resume), flat<->segment layout
+transitions, large-value spill refs, FlorLogValueWarning, the bounded
+tail-seq fix, replay-merge fidelity over segmented worker logs, and the
+shared epsilon budget between logging and checkpointing."""
+import json
+import os
+import shutil
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.flor as flor
+from repro.checkpoint import CheckpointStore
+from repro.core.adaptive import AdaptiveController
+from repro.core.context import FingerprintLog
+from repro.core.query import merge_replay_logs
+from repro.logging import (FlorLogValueWarning, SegmentSink, jsonable,
+                           list_segments, read_stream, remove_stream,
+                           reset_warned_keys, segment_path, tail_seq)
+
+
+def _rows(path):
+    return FingerprintLog.read(path)
+
+
+def _payload(rows):
+    """Rows minus nothing — the exact (epoch, seq, key, value) contract."""
+    return [(r["epoch"], r["seq"], r["key"], json.dumps(r["value"],
+                                                        sort_keys=True))
+            for r in rows]
+
+
+MIXED = [0, 1.5, "s", True, None, [1, [2, 3]], {"a": 1, "b": [2]},
+         np.float64(3.25), np.arange(4.0)]
+
+
+def _log_mixed(log, jnp=None):
+    vals = list(MIXED)
+    if jnp is not None:
+        vals += [jnp.float32(7.5), jnp.arange(6.0)]
+    for i, v in enumerate(vals):
+        log.log(i % 3, f"k{i}", v)
+    return len(vals)
+
+
+# --------------------------------------------------- mode bit-identity ------
+def test_async_rows_bit_identical_to_sync(tmp_path):
+    import jax.numpy as jnp
+    ps = str(tmp_path / "sync.jsonl")
+    pa = str(tmp_path / "async.jsonl")
+    ls = FingerprintLog(ps, async_log=False)
+    la = FingerprintLog(pa, async_log=True)
+    n = _log_mixed(ls, jnp)
+    _log_mixed(la, jnp)
+    ls.close()
+    la.close()
+    assert os.path.isfile(ps) and os.path.isdir(pa)   # two layouts...
+    rs, ra = _rows(ps), _rows(pa)
+    assert len(rs) == n
+    assert _payload(rs) == _payload(ra)               # ...same rows, exactly
+
+
+def test_async_value_snapshot_semantics(tmp_path):
+    """Values mutated AFTER flor.log must not change what was logged —
+    numpy arrays are memcpy'd and containers frozen at enqueue."""
+    p = str(tmp_path / "log.jsonl")
+    log = FingerprintLog(p, async_log=True)
+    arr = np.arange(3.0)
+    box = {"x": [1, 2]}
+    log.log(0, "arr", arr)
+    log.log(0, "box", box)
+    arr[:] = -1.0
+    box["x"].append(99)
+    log.close()
+    vals = {r["key"]: r["value"] for r in _rows(p)}
+    assert vals["arr"] == [0.0, 1.0, 2.0]
+    assert vals["box"] == {"x": [1, 2]}
+
+
+# ------------------------------------------------------- segment layout -----
+def test_segments_roll_and_seal(tmp_path):
+    p = str(tmp_path / "log.jsonl")
+    log = FingerprintLog(p, async_log=True, roll_bytes=200)
+    for i in range(30):
+        log.log(0, "k", i)
+    log.close()
+    segs = list_segments(p)
+    assert len(segs) > 1                              # rolled
+    for _n, seg in segs:
+        with open(seg) as f:
+            last = [ln for ln in f.read().splitlines() if ln.strip()][-1]
+        assert "__seal__" in json.loads(last)         # all sealed on close
+    assert [r["value"] for r in _rows(p)] == list(range(30))
+    assert [r["seq"] for r in _rows(p)] == list(range(30))
+
+
+def test_reader_skips_seal_and_merges_in_order(tmp_path):
+    d = str(tmp_path / "stream")
+    sink = SegmentSink(d, roll_bytes=80)
+    for i in range(10):
+        sink.append(json.dumps({"epoch": 0, "seq": i, "key": "k",
+                                "value": i}) + "\n", i)
+    sink.close()
+    rows = read_stream(d)
+    assert [r["seq"] for r in rows] == list(range(10))
+
+
+# ----------------------------------------------------------- crash safety ---
+def _tear(path):
+    """Append a torn half-line, as a writer killed mid-write leaves it."""
+    with open(path, "a") as f:
+        f.write('{"epoch": 9, "seq": 99999, "key": "torn", "val')
+
+
+def test_torn_tail_skipped_and_seq_resumes(tmp_path):
+    p = str(tmp_path / "log.jsonl")
+    log = FingerprintLog(p, async_log=True)
+    for i in range(5):
+        log.log(0, "k", i)
+    # simulate SIGKILL: rows drained to disk but no clean close/seal
+    log.drain()
+    last_seg = list_segments(p)[-1][1]
+    _tear(last_seg)
+    before = _payload(_rows(p))
+    assert len(before) == 5                           # torn tail invisible
+    assert tail_seq(p) == 5                           # resume point correct
+    log2 = FingerprintLog(p, async_log=True)          # crash-restart resume
+    log2.log(1, "k", 5)
+    log2.close()
+    rows = _rows(p)
+    assert _payload(rows[:5]) == before               # old rows untouched
+    assert rows[-1]["seq"] == 5                       # no duplicate seq
+    # the resumed writer started a FRESH segment (never appends to a
+    # possibly-torn one)
+    assert len(list_segments(p)) >= 2
+
+
+def test_wholly_torn_trailing_segment_steps_back(tmp_path):
+    p = str(tmp_path / "log.jsonl")
+    log = FingerprintLog(p, async_log=True, roll_bytes=60)
+    for i in range(6):
+        log.log(0, "k", i)
+    log.close()
+    # a crashed successor segment whose every line tore
+    n = list_segments(p)[-1][0] + 1
+    with open(segment_path(p, n), "w") as f:
+        f.write('{"epoch": 0, "seq": 6, "key": "k", "va')
+    assert len(_rows(p)) == 6
+    assert tail_seq(p) == 6                           # steps back past it
+
+
+def test_mid_file_corruption_raises_not_skips(tmp_path):
+    """A torn TAIL is recoverable; garbage in the MIDDLE of a log is real
+    corruption and must raise — silently dropping rows would let the
+    deferred check pass on rows it never compared."""
+    p = str(tmp_path / "record.jsonl")
+    good = [json.dumps({"epoch": 0, "seq": i, "key": "k", "value": i})
+            for i in range(3)]
+    with open(p, "w") as f:
+        f.write(good[0] + "\n@@corrupt@@\n" + good[1] + "\n")
+    with pytest.raises(ValueError, match="corrupt log line"):
+        FingerprintLog.read(p)
+    with open(p, "w") as f:                           # torn tail: fine
+        f.write("\n".join(good) + "\n" + '{"torn": ')
+    assert len(FingerprintLog.read(p)) == 3
+
+
+def test_unsealed_segment_reads_fine(tmp_path):
+    d = str(tmp_path / "stream")
+    sink = SegmentSink(d)
+    sink.append(json.dumps({"epoch": 0, "seq": 0, "key": "k",
+                            "value": 1}) + "\n", 0)
+    # no close(): segment has no footer — exactly the post-kill state
+    assert [r["value"] for r in read_stream(d)] == [1]
+    assert tail_seq(d) == 1
+
+
+# ------------------------------------------------- replay merge fidelity ----
+def test_replay_merge_bit_identical_across_torn_recovery(tmp_path):
+    run = str(tmp_path / "run")
+    logs = os.path.join(run, "logs")
+
+    def worker(pid, epochs, async_log):
+        lg = FingerprintLog(os.path.join(logs, f"replay_p{pid}.jsonl"),
+                            fresh=True, async_log=async_log)
+        for e in epochs:
+            for s in range(3):
+                lg.log(e, "probe", e * 10 + s)
+            lg.log(e, "loss", float(e))
+        lg.drain() if async_log else None
+        return lg
+
+    # single-worker reference (sync flat log)
+    ref = worker(9, [0, 1, 2, 3], async_log=False)
+    ref.close()
+    expected = merge_replay_logs(run, [("replay_p9", [0, 1, 2, 3])],
+                                 out_path=None)
+    # two segmented workers; p1 killed mid-write after its rows drained
+    w0 = worker(0, [0, 2], async_log=True)
+    w0.close()
+    w1 = worker(1, [1, 3], async_log=True)
+    w1.drain()
+    _tear(list_segments(os.path.join(logs, "replay_p1.jsonl"))[-1][1])
+    merged = merge_replay_logs(run, [("replay_p0", [0, 2]),
+                                     ("replay_p1", [1, 3])], out_path=True)
+    assert merged == expected                         # bit-identical
+    # and the merged flat artifact round-trips through the same reader
+    assert FingerprintLog.read(os.path.join(logs, "merged_replay.jsonl")) \
+        == expected
+
+
+# -------------------------------------------------- layout transitions ------
+def test_flat_run_resumes_into_segments(tmp_path):
+    p = str(tmp_path / "record.jsonl")
+    sync = FingerprintLog(p, async_log=False)
+    sync.log(0, "a", 1)
+    sync.log(0, "b", 2)
+    sync.close()
+    resumed = FingerprintLog(p, async_log=True)       # async resume of a
+    resumed.log(1, "a", 3)                            # sync-era run dir
+    resumed.close()
+    assert os.path.isdir(p)                           # migrated in place
+    rows = _rows(p)
+    assert [r["seq"] for r in rows] == [0, 1, 2]
+    assert [r["value"] for r in rows] == [1, 2, 3]
+
+
+def test_interrupted_migration_recovers(tmp_path):
+    """A crash BETWEEN the two migration renames leaves rows in the
+    .migrate leftover; the next open must adopt them, not strand them."""
+    p = str(tmp_path / "record.jsonl")
+    sync = FingerprintLog(p, async_log=False)
+    sync.log(0, "a", 1)
+    sync.close()
+    os.replace(p, p + ".migrate")                     # first rename, then die
+    resumed = FingerprintLog(p, async_log=True)
+    resumed.log(1, "a", 2)
+    resumed.close()
+    rows = _rows(p)
+    assert [r["value"] for r in rows] == [1, 2]
+    assert [r["seq"] for r in rows] == [0, 1]         # seq saw the old rows
+    assert not os.path.exists(p + ".migrate")
+
+
+def test_sync_reopen_of_segmented_stream_stays_segmented(tmp_path):
+    p = str(tmp_path / "record.jsonl")
+    a = FingerprintLog(p, async_log=True)
+    a.log(0, "k", 1)
+    a.close()
+    s = FingerprintLog(p, async_log=False)            # layout is a property
+    s.log(1, "k", 2)                                  # of the run dir, not
+    s.close()                                         # the reopening process
+    assert os.path.isdir(p)
+    assert [r["value"] for r in _rows(p)] == [1, 2]
+    assert [r["seq"] for r in _rows(p)] == [0, 1]
+
+
+def test_fresh_rotates_either_layout(tmp_path):
+    p = str(tmp_path / "replay_p0.jsonl")
+    a = FingerprintLog(p, async_log=True)
+    a.log(0, "k", "old")
+    a.close()
+    b = FingerprintLog(p, fresh=True, async_log=True)
+    b.log(0, "k", "new")
+    b.close()
+    rows = _rows(p)
+    assert len(rows) == 1 and rows[0]["value"] == "new"
+    assert rows[0]["seq"] == 0
+    remove_stream(p)
+    assert not os.path.exists(p)
+
+
+# ------------------------------------------------------- value handling -----
+def test_warn_once_per_key_names_type(tmp_path):
+    class Gizmo:
+        def __repr__(self):
+            return "<gizmo>"
+
+    reset_warned_keys()
+    p = str(tmp_path / "log.jsonl")
+    log = FingerprintLog(p, async_log=False)
+    with pytest.warns(FlorLogValueWarning, match="Gizmo") as rec:
+        log.log(0, "widget", Gizmo())
+        log.log(0, "widget", Gizmo())                 # same key: no 2nd warn
+    assert len([w for w in rec if w.category is FlorLogValueWarning]) == 1
+    with pytest.warns(FlorLogValueWarning, match="other"):
+        log.log(0, "other", Gizmo())                  # new key warns again
+    log.close()
+    assert [r["value"] for r in _rows(p)] == ["<gizmo>"] * 3
+
+
+def test_jsonable_known_types_do_not_warn():
+    reset_warned_keys()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", FlorLogValueWarning)
+        for v in MIXED:
+            jsonable(v, "k")
+
+
+@pytest.mark.parametrize("async_log", [False, True])
+def test_large_value_spills_to_store_ref(tmp_path, async_log):
+    store = CheckpointStore(str(tmp_path / "store"))
+    p = str(tmp_path / ("a.jsonl" if async_log else "s.jsonl"))
+    log = FingerprintLog(p, async_log=async_log, spill_bytes=256,
+                         store=store, stream="record")
+    big = np.arange(1024, dtype=np.float64)           # 8 KiB > threshold
+    small = np.arange(4, dtype=np.float64)
+    log.log(0, "big", big)
+    log.log(0, "small", small)
+    log.close()
+    rows = {r["key"]: r["value"] for r in _rows(p)}
+    assert rows["small"] == small.tolist()            # under threshold: inline
+    ref = rows["big"]
+    assert ref["ref"] == "logref__record__00000000"   # deterministic key
+    assert ref["shape"] == [1024] and ref["nbytes"] == 8192
+    (_path, arr), = store.get_tree(ref["ref"]).items()
+    assert np.array_equal(np.asarray(arr).reshape(-1), big)
+
+
+def test_spill_rows_diff_by_digest_in_deferred_check(tmp_path):
+    """Record and replay spill under different stream names — the deferred
+    check must compare spilled rows by content digest, so a faithful
+    replay passes and a divergent one is an anomaly."""
+    from repro.core.fingerprint import deferred_check
+    store = CheckpointStore(str(tmp_path / "store"))
+    big = np.arange(512, dtype=np.float64)
+    logs = {}
+    for stream, vals in (("record", [big]),
+                         ("replay_ok", [big.copy()]),
+                         ("replay_bad", [big + 1.0])):
+        p = str(tmp_path / f"{stream}.jsonl")
+        lg = FingerprintLog(p, async_log=True, spill_bytes=64,
+                            store=store, stream=stream)
+        for v in vals:
+            lg.log(0, "hist", v)
+        lg.close()
+        logs[stream] = p
+    ok = deferred_check(logs["record"], [logs["replay_ok"]])
+    assert ok.ok and ok.compared == 1
+    bad = deferred_check(logs["record"], [logs["replay_bad"]])
+    assert not bad.ok and bad.anomalies[0]["key"] == "hist"
+
+
+def test_spill_ref_identical_across_modes(tmp_path):
+    big = np.arange(512, dtype=np.float64)
+    vals = []
+    for mode, name in ((False, "s"), (True, "a")):
+        store = CheckpointStore(str(tmp_path / f"store_{name}"))
+        p = str(tmp_path / f"{name}.jsonl")
+        log = FingerprintLog(p, async_log=mode, spill_bytes=64,
+                             store=store, stream="record")
+        log.log(0, "big", big)
+        log.close()
+        vals.append(_payload(_rows(p)))
+    assert vals[0] == vals[1]
+
+
+# ----------------------------------------------------- bounded tail seq -----
+def test_flat_tail_seq_bounded_window(tmp_path, monkeypatch):
+    from repro.logging import segment as seg_mod
+    p = str(tmp_path / "record.jsonl")
+    log = FingerprintLog(p, async_log=False)
+    for i in range(300):
+        log.log(0, "k", "x" * 40)
+    log.close()
+    reads = []
+    orig = seg_mod._flat_tail_seq
+
+    real_open = open
+
+    def counting_open(path, mode="r", *a, **kw):
+        f = real_open(path, mode, *a, **kw)
+        if path == p and "r" in mode:
+            reads.append(f)
+        return f
+
+    monkeypatch.setattr("builtins.open", counting_open)
+    assert seg_mod.tail_seq(p) == 300
+    monkeypatch.undo()
+    # bounded: one tail window was enough — no full-file line parse
+    assert len(reads) == 1
+    # resume through the public surface agrees
+    log2 = FingerprintLog(p, async_log=False)
+    log2.log(1, "k", "y")
+    log2.close()
+    assert _rows(p)[-1]["seq"] == 300
+
+
+def test_flat_tail_seq_widens_past_garbage_tail(tmp_path):
+    p = str(tmp_path / "record.jsonl")
+    with open(p, "w") as f:
+        f.write(json.dumps({"epoch": 0, "seq": 7, "key": "k",
+                            "value": 0}) + "\n")
+        f.write("not json\n" * 8000)                  # > one tail window
+    assert tail_seq(p) == 8
+
+
+# ------------------------------------------------ shared epsilon budget -----
+def test_logging_cost_draws_down_epsilon():
+    ctl = AdaptiveController(epsilon=0.1)
+    for _ in range(10):
+        ctl.observe_execution("train", 1.0)           # 10 s of compute
+    assert ctl.effective_epsilon() == pytest.approx(0.1)
+    ctl.observe_logging(0.25, 1000)                   # 2.5% overhead logged
+    assert ctl.effective_epsilon() == pytest.approx(0.075)
+    ctl.observe_logging(1.0, 4000)                    # blow the budget
+    assert ctl.effective_epsilon() == 0.0
+    snap = ctl.snapshot()
+    assert snap["log_s"] == pytest.approx(1.25)
+    assert snap["log_bytes"] == 5000
+    assert snap["epsilon_effective"] == 0.0
+
+
+def test_heavy_logging_suppresses_materialization():
+    ctl = AdaptiveController(epsilon=0.1)
+    ctl.observe_execution("train", 1.0)
+    ctl.observe_materialization("train", 0.01)        # cheap ckpt: M/C small
+    ctl.observe_execution("train", 1.0)
+    assert ctl.should_materialize("train")
+    ctl.observe_logging(10.0)                         # logging ate the budget
+    assert not ctl.should_materialize("train")
+
+
+# --------------------------------------------------- session integration ----
+def _state(x=0.0):
+    return {"w": np.arange(6.0) + x, "b": np.zeros(3) + x}
+
+
+def _step(s):
+    return {k: v + 1.0 for k, v in s.items()}
+
+
+def _record(run, async_log, epochs=3, steps=2):
+    with flor.Session(run, mode="record",
+                      record=flor.RecordSpec(
+                          adaptive=False, async_log=async_log)) as sess:
+        with sess.checkpointing(state=_state()) as ckpt:
+            for e in sess.loop("epochs", range(epochs)):
+                for _ in sess.loop("train", range(steps)):
+                    ckpt.state = _step(ckpt.state)
+                sess.log("loss", float(ckpt.state["w"][0]))
+                sess.log("w0", ckpt.state["w"])
+
+
+def test_session_log_records_identical_between_modes(tmp_path):
+    ra, rs = str(tmp_path / "a"), str(tmp_path / "s")
+    _record(ra, async_log=True)
+    _record(rs, async_log=False)
+    pa = os.path.join(ra, "logs", "record.jsonl")
+    ps = os.path.join(rs, "logs", "record.jsonl")
+    assert os.path.isdir(pa) and os.path.isfile(ps)
+    strip = lambda rows: [(r["epoch"], r["seq"], r["key"],
+                           json.dumps(r["value"])) for r in rows]
+    assert strip(flor.FingerprintLog.read(pa)) \
+        == strip(flor.FingerprintLog.read(ps))
+    # the cross-run query surface sees both the same way
+    ka = [(r["key"], r["epoch"]) for r in flor.log_records(ra)]
+    ks = [(r["key"], r["epoch"]) for r in flor.log_records(rs)]
+    assert ka == ks
+
+
+def test_session_replay_after_torn_record_tail(tmp_path):
+    run = str(tmp_path / "run")
+    _record(run, async_log=True)
+    _tear(list_segments(os.path.join(run, "logs", "record.jsonl"))[-1][1])
+    with flor.Session(run, mode="replay",
+                      replay=flor.ReplaySpec(probed={"train"})) as sess:
+        with sess.checkpointing(state=_state()) as ckpt:
+            for e in sess.loop("epochs", range(3)):
+                for _ in sess.loop("train", range(2)):
+                    ckpt.state = _step(ckpt.state)
+                sess.log("loss", float(ckpt.state["w"][0]))
+                sess.log("w0", ckpt.state["w"])
+    rec, reps = flor.run_logs(run)
+    res = flor.deferred_check(rec, reps)
+    assert res.ok, res.anomalies
+    assert res.compared == 6                          # 3 epochs x 2 keys
+
+
+def test_controller_snapshot_persists_logging_stats(tmp_path):
+    run = str(tmp_path / "run")
+    _record(run, async_log=True)
+    store = CheckpointStore(os.path.join(run, "store"))
+    snap = store.get_meta("controller_record_p0")
+    assert snap is not None and "log_s" in snap and "log_bytes" in snap
+    assert snap["log_bytes"] > 0                      # bytes were accounted
+
+
+def test_container_with_array_leaves_serializes_in_both_modes(tmp_path):
+    """json.dumps must not crash (deferred, at close) on containers whose
+    LEAVES are arrays/objects — they lower through json_default."""
+    class Odd:
+        def __repr__(self):
+            return "<odd>"
+
+    import jax.numpy as jnp
+    reset_warned_keys()
+    payloads = []
+    for mode, name in ((False, "s"), (True, "a")):
+        p = str(tmp_path / f"{name}.jsonl")
+        log = FingerprintLog(p, async_log=mode)
+        log.log(0, "metrics", {"grad": np.arange(3.0), "n": 2})
+        log.log(0, "jax_nested", {"w": jnp.arange(3.0)})
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", FlorLogValueWarning)
+            log.log(0, "nested_odd", [1, Odd()])
+        log.close()                                   # must not raise
+        payloads.append(_payload(_rows(p)))
+    assert payloads[0] == payloads[1]
+    vals = {r["key"]: r["value"] for r in _rows(str(tmp_path / "a.jsonl"))}
+    assert vals["metrics"] == {"grad": [0.0, 1.0, 2.0], "n": 2}
+    # a nested jax array lowers like a top-level one (numbers, not repr)
+    assert vals["jax_nested"] == {"w": [0.0, 1.0, 2.0]}
+    assert vals["nested_odd"] == [1, "<odd>"]
+
+
+def test_zero_dim_numpy_snapshot_at_enqueue(tmp_path):
+    p = str(tmp_path / "log.jsonl")
+    log = FingerprintLog(p, async_log=True)
+    acc = np.array(1.0)                               # 0-d, mutable
+    log.log(0, "acc", acc)
+    acc += 41.0
+    log.close()
+    assert _rows(p)[0]["value"] == 1.0                # value at log time
+
+
+def test_user_dicts_with_ref_key_still_compared_exactly(tmp_path):
+    from repro.core.fingerprint import deferred_check
+    rec = str(tmp_path / "record.jsonl")
+    rep = str(tmp_path / "replay_p0.jsonl")
+    for path, ref in ((rec, "model-a"), (rep, "model-b")):
+        lg = FingerprintLog(path, async_log=False)
+        lg.log(0, "cfg", {"ref": ref})                # user dict, not a spill
+        lg.close()
+    res = deferred_check(rec, [rep])
+    assert not res.ok and res.anomalies[0]["key"] == "cfg"
+
+
+def test_finish_finalizes_registry_despite_log_close_error(tmp_path):
+    run = str(tmp_path / "run")
+    with pytest.raises(RuntimeError, match="boom"):
+        with flor.Session(run, mode="record",
+                          record=flor.RecordSpec(adaptive=False)) as sess:
+            ctx = sess.ctx
+            orig_close = ctx.log.close
+
+            def exploding_close():
+                orig_close()
+                raise RuntimeError("boom")
+
+            ctx.log.close = exploding_close
+            sess.log("loss", 1.0)
+    # the run record must still have been finalized, not left 'running'
+    rec = ctx.registry.get(ctx.run_id)
+    assert rec is not None and rec["status"] in ("finished", "failed")
+
+
+def test_close_seals_good_rows_despite_stage_error(tmp_path):
+    p = str(tmp_path / "log.jsonl")
+    log = FingerprintLog(p, async_log=True)
+    log.log(0, "k", 1)
+    log.drain()
+    # poison the stage so close() raises AFTER the good row landed
+    log._stage._err = RuntimeError("disk on fire")
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        log.close()
+    # the durable prefix is sealed: tail_seq answers from the footer
+    with open(list_segments(p)[-1][1]) as f:
+        assert "__seal__" in f.read().splitlines()[-1]
+    assert [r["value"] for r in _rows(p)] == [1]
+
+
+def test_backpressure_queue_never_drops(tmp_path):
+    p = str(tmp_path / "log.jsonl")
+    log = FingerprintLog(p, async_log=True, queue_depth=2)
+    for i in range(500):                              # far beyond the queue
+        log.log(0, "k", i)
+    log.close()
+    assert [r["value"] for r in _rows(p)] == list(range(500))

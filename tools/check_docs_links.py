@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""Docs link checker: verify every relative markdown link resolves.
+
+    python tools/check_docs_links.py README.md docs
+
+Checks, for each ``[text](target)`` in the given files/dirs (recursing
+into ``*.md``):
+
+* relative file targets exist (resolved against the linking file's dir);
+* ``#anchor`` fragments — same-file or cross-file — match a heading in the
+  target file (GitHub slugification: lowercase, spaces to dashes,
+  punctuation dropped);
+* bare ``path:line`` code pointers in backticks are NOT links and are
+  ignored; external ``http(s)://`` and ``mailto:`` targets are skipped
+  (this is an offline checker).
+
+Exit code 1 with a per-link report when anything dangles — CI runs this
+over README.md and docs/ so a refactor can't silently orphan the docs.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    h = re.sub(r"`([^`]*)`", r"\1", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def headings_of(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        text = CODE_FENCE_RE.sub("", f.read())
+    return {github_slug(m.group(1)) for m in HEADING_RE.finditer(text)}
+
+
+def md_files(args: list[str]) -> list[str]:
+    out = []
+    for a in args:
+        if os.path.isdir(a):
+            for root, _dirs, files in os.walk(a):
+                out.extend(os.path.join(root, f) for f in sorted(files)
+                           if f.endswith(".md"))
+        else:
+            out.append(a)
+    return out
+
+
+def check_file(path: str) -> list[str]:
+    errors = []
+    with open(path, encoding="utf-8") as f:
+        text = CODE_FENCE_RE.sub(lambda m: "\n" * m.group(0).count("\n"),
+                                 f.read())
+    base = os.path.dirname(os.path.abspath(path))
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        frag = None
+        if "#" in target:
+            target, frag = target.split("#", 1)
+        dest = path if not target else os.path.normpath(
+            os.path.join(base, target))
+        if target and not os.path.exists(dest):
+            errors.append(f"{path}: broken link -> {m.group(1)}")
+            continue
+        if frag is not None and dest.endswith(".md"):
+            if github_slug(frag) not in headings_of(dest):
+                errors.append(f"{path}: dangling anchor -> {m.group(1)}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = md_files(argv or ["README.md", "docs"])
+    errors = []
+    for f in files:
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} file(s): "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
