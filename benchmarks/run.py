@@ -1,13 +1,61 @@
-"""Benchmark driver: one harness per paper table/figure. CSV to stdout."""
+"""Benchmark driver: one harness per paper table/figure.
+
+CSV to stdout, plus one ``BENCH_<module>.json`` artifact per harness at the
+repo root — machine-readable results (metric rows + wall time + error
+state) that CI and the acceptance gates consume, and that get committed so
+a PR's measured numbers review alongside its code.
+
+    python -m benchmarks.run                     # everything
+    python -m benchmarks.run --only delta_pipeline,record_overhead
+    python -m benchmarks.run --only delta_pipeline --strict   # CI: raise
+
+``--strict`` turns a harness exception into a non-zero exit (the default
+report-and-continue keeps one broken harness from hiding the others'
+numbers on a full local sweep).
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import time
 
 from benchmarks.common import Rows
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-def main() -> None:
+
+def _emit_json(name: str, rows: list, wall_s: float, error: str | None):
+    """Write one BENCH_<name>.json at the repo root: the module's metric
+    rows in emission order (values stay JSON-native — bools/ints/floats)."""
+    out = {
+        "bench": name,
+        "smoke": bool(os.environ.get("SMOKE")),
+        "wall_s": round(wall_s, 2),
+        "error": error,
+        "rows": [{"bench": b, "metric": m, "value": v, "note": n}
+                 for b, m, v, n in rows],
+    }
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    return path
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--only", default="",
+                    help="comma-separated harness names (module short "
+                         "names, e.g. delta_pipeline,lineage_warmstart)")
+    ap.add_argument("--strict", action="store_true",
+                    help="a harness exception fails the run (CI mode) "
+                         "instead of being reported as an ERROR row")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip the BENCH_*.json artifacts")
+    args = ap.parse_args(argv)
+
     import benchmarks.record_overhead as b_rec
     import benchmarks.adaptive_ckpt as b_ada
     import benchmarks.background_mat as b_bg
@@ -18,15 +66,40 @@ def main() -> None:
     import benchmarks.delta_pipeline as b_dp
     import benchmarks.lineage_warmstart as b_lw
 
+    mods = [b_bg, b_st, b_dp, b_lw, b_rl, b_ps, b_rec, b_ada, b_roof]
+    if args.only:
+        wanted = {w.strip() for w in args.only.split(",") if w.strip()}
+        known = {m.__name__.rsplit(".", 1)[-1] for m in mods}
+        unknown = wanted - known
+        if unknown:
+            sys.exit(f"unknown harness(es) {sorted(unknown)}; "
+                     f"known: {sorted(known)}")
+        mods = [m for m in mods if m.__name__.rsplit(".", 1)[-1] in wanted]
+
     rows = Rows()
     print("bench,metric,value,note")
-    for mod in (b_bg, b_st, b_dp, b_lw, b_rl, b_ps, b_rec, b_ada, b_roof):
+    failed = []
+    for mod in mods:
+        name = mod.__name__.rsplit(".", 1)[-1]
+        start = len(rows.rows)
         t0 = time.time()
+        error = None
         try:
             mod.run(rows)
-        except Exception as e:  # noqa: BLE001 — report and continue
-            rows.add(mod.__name__, "ERROR", f"{type(e).__name__}: {e}")
-        rows.add(mod.__name__, "bench_wall_s", round(time.time() - t0, 1))
+        except Exception as e:  # noqa: BLE001 — report; --strict re-raises
+            error = f"{type(e).__name__}: {e}"
+            rows.add(mod.__name__, "ERROR", error)
+            failed.append((name, e))
+        wall = time.time() - t0
+        rows.add(mod.__name__, "bench_wall_s", round(wall, 1))
+        if not args.no_json:
+            path = _emit_json(name, rows.rows[start:], wall, error)
+            print(f"# wrote {os.path.relpath(path, REPO_ROOT)}",
+                  file=sys.stderr)
+    if failed and args.strict:
+        for name, e in failed:
+            print(f"STRICT: harness {name} failed: {e}", file=sys.stderr)
+        raise failed[0][1]
 
 
 if __name__ == '__main__':

@@ -19,9 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.ops import (CHUNK_WORDS, changed_chunks,
+from repro.kernels.ops import (CHUNK_WORDS, fingerprint_and_changed,
                                fingerprint_leaf, gather_changed_blocks,
-                               native_bytes_per_word)
+                               gather_quantize_blocks, native_bytes_per_word)
 
 
 def blocks_to_native_bytes(blocks: np.ndarray, dtype) -> list[bytes]:
@@ -41,59 +41,127 @@ def blocks_to_native_bytes(blocks: np.ndarray, dtype) -> list[bytes]:
     return [rows[i].tobytes() for i in range(rows.shape[0])]
 
 
+def _grid_rows(nbytes: int, bpw: int, chunk_words: int) -> int:
+    """Rows of the [G, chunk_words] block view a leaf of `nbytes` produces
+    (mirrors kernels.ops._as_u32_blocks padding: G is TILE_G-aligned)."""
+    n = max(1, nbytes // bpw)
+    g = -(-n // chunk_words)
+    return -(-g // 8) * 8
+
+
 class DeltaTracker:
     def __init__(self, chunk_words: int = CHUNK_WORDS):
         self.chunk_words = chunk_words
         self._digests: dict[str, jnp.ndarray] = {}
 
-    def delta(self, path: str, leaf) -> dict:
-        """Returns {digest, mask (np bool [G]), changed_blocks (np [C, W]),
-        changed_idx, transferred_bytes, total_bytes}. Updates the stored
-        digest — call exactly once per MATERIALIZED checkpoint so the mask
-        always means "changed since the last stored checkpoint".
+    def delta_dispatch(self, path: str, leaf, *, quantize: bool = False) -> dict:
+        """Phase 1 of a delta: launch the device work (fused fingerprint +
+        changed-mask when a previous digest exists) WITHOUT any host sync,
+        and update the stored digest to the new device array. Returns an
+        opaque handle for :meth:`finalize`. The overlap-mode pipeline calls
+        this on the training thread (dispatch-only cost) and finalizes on
+        the writer thread; the synchronous path composes both in
+        :meth:`delta`.
 
-        Host traffic per call: the [G] change mask (one small device_get —
-        jnp.nonzero's implicit size sync cost more than the mask itself),
-        the [G,2] digest, and the changed rows. Rows past the leaf's real
-        byte length (block-padding to the kernel tile) are never gathered,
-        and a fully-unchanged leaf costs ONLY the fingerprint read — the
-        u32 block view is never materialized for it.
-        """
-        digest = fingerprint_leaf(leaf, self.chunk_words)
-        prev = self._digests.get(path)
-        g = int(digest.shape[0])
-        if prev is None or prev.shape != digest.shape:
-            mask = np.ones((g,), bool)                # first sight: all new
-        else:
-            mask = np.asarray(jax.device_get(
-                changed_chunks(digest, prev))).astype(bool)
-        self._digests[path] = digest
+        The handle retains references to `leaf` and the new digest — safe
+        for jax arrays because nothing in this codebase donates buffers, so
+        a deferred finalize gathers from the exact submitted state even if
+        the caller keeps training. Host numpy leaves are retained by
+        REFERENCE: a caller that mutates one in place between dispatch and
+        finalize would gather post-mutation bytes (functional updates, the
+        norm here, are unaffected)."""
         nbytes = int(leaf.nbytes) if hasattr(leaf, "nbytes") \
             else int(np.asarray(leaf).nbytes)
-        bpw = native_bytes_per_word(leaf.dtype)
+        dtype = leaf.dtype if hasattr(leaf, "dtype") \
+            else np.asarray(leaf).dtype
+        bpw = native_bytes_per_word(dtype)
+        prev = self._digests.get(path)
+        if prev is not None \
+                and int(prev.shape[0]) == _grid_rows(nbytes, bpw,
+                                                     self.chunk_words):
+            digest, mask = fingerprint_and_changed(leaf, prev,
+                                                   self.chunk_words)
+            first = False
+        else:
+            digest = fingerprint_leaf(leaf, self.chunk_words)
+            mask = None
+            first = True                              # first sight: all new
+        self._digests[path] = digest
+        return {"path": path, "leaf": leaf, "digest": digest, "mask": mask,
+                "first": first, "quantize": bool(quantize),
+                "nbytes": nbytes, "bpw": bpw}
+
+    def finalize(self, h: dict) -> dict:
+        """Phase 2: sync the change mask, gather the changed rows (plain u32
+        rows, or wire-format int8 q + scales when the handle was dispatched
+        with ``quantize=True``), and return the delta record. Touches no
+        tracker state, so it is safe to run on the writer thread while the
+        training thread keeps dispatching.
+
+        Returns {digest, mask (np bool [G]), changed_blocks (np [C, W] u32
+        or None), changed_q / changed_scales (quantized rows or None),
+        changed_idx, transferred_bytes, total_bytes}."""
+        digest = h["digest"]
+        g = int(digest.shape[0])
+        if h["first"]:
+            mask = np.ones((g,), bool)
+        else:
+            mask = np.asarray(jax.device_get(h["mask"])).astype(bool)
+        nbytes, bpw = h["nbytes"], h["bpw"]
         n_real = max(1, -(-nbytes // (self.chunk_words * bpw)))
         idx = np.flatnonzero(mask[:n_real])
+        changed = None
+        changed_q = changed_scales = None
+        transferred = 0
         if idx.size:
             # pad the gather width to the next power of two (capped at the
             # chunk count) so fluctuating change counts compile O(log G)
             # gather variants per leaf instead of one per novel count
             c = int(idx.size)
             cap = min(1 << (c - 1).bit_length(), n_real)
-            idx_pad = np.concatenate(
-                [idx, np.full(cap - c, idx[0], idx.dtype)])
-            rows = np.asarray(jax.device_get(gather_changed_blocks(
-                leaf, jnp.asarray(idx_pad, jnp.int32), self.chunk_words)))
-            changed = np.ascontiguousarray(rows[:c])
-        else:
+            idx_pad = jnp.asarray(np.concatenate(
+                [idx, np.full(cap - c, idx[0], idx.dtype)]), jnp.int32)
+            if h["quantize"]:
+                q, s = gather_quantize_blocks(h["leaf"], idx_pad,
+                                              self.chunk_words)
+                changed_q = np.ascontiguousarray(
+                    np.asarray(jax.device_get(q))[:c])
+                changed_scales = np.ascontiguousarray(
+                    np.asarray(jax.device_get(s))[:c])
+                transferred = int(changed_q.nbytes + changed_scales.nbytes)
+            else:
+                rows = np.asarray(jax.device_get(gather_changed_blocks(
+                    h["leaf"], idx_pad, self.chunk_words)))
+                changed = np.ascontiguousarray(rows[:c])
+                transferred = int(changed.nbytes)
+        elif not h["quantize"]:
             changed = np.zeros((0, self.chunk_words), np.uint32)
         return {
             "digest": np.asarray(jax.device_get(digest)),
             "mask": mask,
             "changed_blocks": changed,
+            "changed_q": changed_q,
+            "changed_scales": changed_scales,
             "changed_idx": idx,
-            "transferred_bytes": int(changed.nbytes),
+            "transferred_bytes": transferred,
             "total_bytes": int(g * self.chunk_words * 4),
         }
+
+    def delta(self, path: str, leaf, *, quantize: bool = False) -> dict:
+        """Synchronous delta: dispatch + finalize in one call (see the two
+        phases above). Updates the stored digest — call exactly once per
+        MATERIALIZED checkpoint so the mask always means "changed since the
+        last stored checkpoint".
+
+        Host traffic per call: the [G] change mask (one small device_get —
+        jnp.nonzero's implicit size sync cost more than the mask itself),
+        the [G,2] digest, and the changed rows. Rows past the leaf's real
+        byte length (block-padding to the kernel tile) are never gathered,
+        and a fully-unchanged leaf costs ONLY the fused fingerprint read —
+        the u32 block view is never materialized for it.
+        """
+        return self.finalize(self.delta_dispatch(path, leaf,
+                                                 quantize=quantize))
 
     def seed(self, path: str, leaf):
         """Rehydrate one leaf's device-side digests from restored bytes

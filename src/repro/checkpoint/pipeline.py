@@ -4,24 +4,32 @@ The paper's "lean checkpointing" thesis is that checkpoint cost should track
 what CHANGED, not model size. This layer wires the device-side Pallas
 fingerprint path end-to-end so the record path does, in order:
 
-1. **Fingerprint on device** — per leaf, `DeltaTracker` runs the Pallas
-   chunk-fingerprint kernel (one read of the leaf at HBM bandwidth) and
-   diffs against the digests of the last materialized checkpoint. Digests
+1. **Fingerprint + diff on device, fused** — per leaf, `DeltaTracker` runs
+   the fused Pallas fingerprint+changed kernel (one read of the leaf at HBM
+   bandwidth produces BOTH the new digests and the change mask). Digests
    never leave the device; only the [G] change mask and the changed rows do.
-2. **Transfer only changed chunks** — the u32 block rows whose digest moved
-   are gathered and DMA'd to host (`kernels.ops.gather_blocks`). On a
-   frozen-majority workload the device->host traffic drops by the frozen
-   fraction — `transferred_bytes` in the per-checkpoint stats is this real
-   DMA payload (native-byte accounting), the honest M_i input for the
-   adaptive controller's ε-overhead model.
+2. **Transfer only changed chunks, wire-format** — exact leaves gather the
+   changed u32 block rows; leaves matching the per-slot ``quantize_slots``
+   policy run the fused gather+quantize kernel instead, so the rows leave
+   the device already blockwise-int8 (q + scales — the q8 wire format, ~4x
+   smaller than f32). On a frozen-majority workload the device->host
+   traffic drops by the frozen fraction times the codec ratio —
+   `transferred_bytes` in the per-checkpoint stats is this real DMA payload
+   (wire-byte accounting), the honest M_i input for the adaptive
+   controller's ε-overhead model.
 3. **Write stage** (`AsyncWriter` job, FIFO on the writer thread) — hash the
-   changed chunks (blake2b-16), store them content-addressed, and emit a
-   **delta manifest**.
+   wire chunks (blake2b-16), store them content-addressed, and emit a
+   **delta manifest**. In **overlap mode** (``overlap=True``) steps 1-2 are
+   split: the training thread only DISPATCHES the fused fingerprint pass
+   (digest state updates to async device arrays; no host sync), and the
+   mask sync + gather + encode all run here on the writer thread — the
+   foreground stall shrinks to kernel-launch time, and the bounded queue
+   provides natural backpressure when the writer falls behind.
 
-Delta manifest format (store manifest v2)::
+Delta manifest format (store manifest v3)::
 
     {
-      "key": str, "version": 2,
+      "key": str, "version": 3,
       "kind": "full" | "delta",
       "parent": str | null,          # delta only: previous checkpoint key
       "treedef": str,
@@ -30,10 +38,21 @@ Delta manifest format (store manifest v2)::
       "leaves": [{
          "path": str, "dtype": str, "shape": [int], "nbytes": int,
          "n_chunks": int,
+         "leaf_enc": "q8",           # slot POLICY, only when lossy
          "chunks": [hash, ...],      # kind == "full": complete ordered list
+         "enc": ["raw"|"q8", ...],   # full only, parallel to chunks; only
+                                     # present when any chunk is non-raw
          "delta": {"<idx>": hash},   # kind == "delta": changed indices only
+         "denc": {"<idx>": "q8"},    # delta only: non-raw changed chunks
       }, ...],
     }
+
+v2 manifests (no per-chunk encodings — everything raw/exact) remain fully
+readable; `resolve_manifest` inherits encodings through the parent chain
+exactly like chunk hashes, and `get_tree` dequantizes q8 chunks
+transparently on restore. Exact slots restore bit-identical; q8 slots
+restore with per-element error bounded by half a quantization step
+(absmax_block / 254).
 
 A delta manifest inherits every unlisted chunk hash from its parent chain
 (`CheckpointStore.resolve_manifest`). Chains are bounded: a FULL manifest is
@@ -64,14 +83,16 @@ checkpoint/lineage.py for the registry that decides which runs are live).
 """
 from __future__ import annotations
 
+import fnmatch
 import time
-from typing import Any, Optional
+from typing import Any, Iterable, Optional
 
 import numpy as np
 
 from repro.checkpoint.async_writer import AsyncWriter
 from repro.checkpoint.delta import DeltaTracker, blocks_to_native_bytes
-from repro.kernels.ops import native_bytes_per_word
+from repro.kernels.ops import (Q8_BLOCK, native_bytes_per_word,
+                               q8_encode_chunk, quantizable_dtype)
 
 DEFAULT_FULL_EVERY = 8
 # storage/fingerprint granularity: 16384 u32 words = 64 KiB chunks for
@@ -85,11 +106,21 @@ class CheckpointPipeline:
     def __init__(self, store, *, chunk_words: int = PIPELINE_CHUNK_WORDS,
                  full_every: int = DEFAULT_FULL_EVERY,
                  async_stage: bool = True, max_queue: int = 2,
-                 on_materialized=None):
+                 on_materialized=None,
+                 quantize_slots: Optional[Iterable[str]] = None,
+                 overlap: bool = False):
         self.store = store
         self.chunk_words = chunk_words
         self.full_every = max(1, int(full_every))
         self.tracker = DeltaTracker(chunk_words)
+        # per-slot lossy policy: leaf paths matching any of these names /
+        # glob patterns are stored blockwise-int8 (q8 wire format) when the
+        # dtype supports it. Empty (the default) = every leaf exact, so the
+        # bit-identical restore invariant holds unless explicitly opted out.
+        self.quantize_slots = tuple(quantize_slots or ())
+        # overlap mode defers mask-sync + gather to the writer thread; it
+        # needs the async stage to exist (sync pipelines gain nothing)
+        self.overlap = bool(overlap) and async_stage
         self._on_mat = on_materialized
         self.writer = AsyncWriter(store, max_queue=max_queue,
                                   on_materialized=self._materialized) \
@@ -98,11 +129,26 @@ class CheckpointPipeline:
         self._sig: dict[str, dict[str, tuple]] = {}
         self._last_key: dict[str, Optional[str]] = {}
         self._since_full: dict[str, int] = {}
-        # writer-side per-scope state: path -> full ordered chunk-hash list.
-        # Only the writer thread (or the inline sync path) touches it; jobs
-        # run FIFO so it always reflects the previously written manifest.
+        # writer-side per-scope state: path -> full ordered chunk-hash list
+        # (and the parallel per-chunk encoding list). Only the writer thread
+        # (or the inline sync path) touches them; jobs run FIFO so they
+        # always reflect the previously written manifest.
         self._hashes: dict[str, dict[str, list]] = {}
+        self._encs: dict[str, dict[str, list]] = {}
         self._stats: list[dict] = []
+
+    def _slot_enc(self, pstr: str, dtype: str) -> str:
+        """Per-leaf encoding decision: "q8" when the leaf path matches a
+        quantize_slots entry (slot name or glob over the keystr path) AND
+        the dtype is one the fused quantize path supports; "raw" otherwise.
+        """
+        if not self.quantize_slots or not quantizable_dtype(dtype):
+            return "raw"
+        for pat in self.quantize_slots:
+            if f"['{pat}']" in pstr or f'["{pat}"]' in pstr \
+                    or f".{pat}" in pstr or fnmatch.fnmatch(pstr, pat):
+                return "q8"
+        return "raw"
 
     # -------------------------------------------------------------- record --
     def submit(self, key: str, tree: Any, meta: Optional[dict] = None,
@@ -131,12 +177,17 @@ class CheckpointPipeline:
             dtype = str(leaf.dtype)
             shape = list(getattr(leaf, "shape", ()))
             nbytes = _leaf_nbytes(leaf)
-            sig[pstr] = (dtype, tuple(shape))
+            enc = self._slot_enc(pstr, dtype)
+            # the encoding is part of the structure signature: flipping a
+            # slot's policy forces a FULL manifest (and a digest reset), so
+            # a chain never inherits chunks recorded under another encoding
+            # without declaring it per-chunk
+            sig[pstr] = (dtype, tuple(shape), enc)
             if nbytes == 0:
                 payload_leaves.append({
                     "path": pstr, "dtype": dtype, "shape": shape,
-                    "nbytes": 0, "n_chunks": 0, "changed_idx": [],
-                    "chunks": []})
+                    "nbytes": 0, "n_chunks": 0, "enc": "raw",
+                    "changed_idx": [], "chunks": []})
                 continue
             tpath = f"{scope}::{pstr}"
             old = prev_sig.get(pstr)
@@ -146,28 +197,27 @@ class CheckpointPipeline:
                 # slip through the digest comparison
                 self.tracker.forget(tpath)
             rollback.append((tpath, self.tracker._digests.get(tpath)))
-            d = self.tracker.delta(tpath, _fp_view(leaf))
-            bpw = native_bytes_per_word(dtype)
-            chunk_native = self.chunk_words * bpw
-            n_chunks = -(-nbytes // chunk_native)
-            native = blocks_to_native_bytes(d["changed_blocks"], dtype)
-            # tracker clamps changed_idx to the leaf's real chunk count, so
-            # every row lands in [0, n_chunks); only the last needs trimming
-            idx_keep: list[int] = []
-            chunks_keep: list[bytes] = []
-            for i, data in zip(d["changed_idx"].tolist(), native):
-                if i == n_chunks - 1:
-                    data = data[: nbytes - (n_chunks - 1) * chunk_native]
-                idx_keep.append(int(i))
-                chunks_keep.append(data)
-            transferred += sum(len(c) for c in chunks_keep)
+            n_chunks = -(-nbytes // (self.chunk_words
+                                     * native_bytes_per_word(dtype)))
+            lmeta = {"path": pstr, "dtype": dtype, "shape": shape,
+                     "nbytes": nbytes, "n_chunks": n_chunks, "enc": enc}
             logical += nbytes
-            changed_chunks_n += len(idx_keep)
             total_chunks_n += n_chunks
-            payload_leaves.append({
-                "path": pstr, "dtype": dtype, "shape": shape,
-                "nbytes": nbytes, "n_chunks": n_chunks,
-                "changed_idx": idx_keep, "chunks": chunks_keep})
+            if self.overlap:
+                # dispatch-only: the fused fingerprint+mask launches here;
+                # mask sync, gather and encode run on the writer thread
+                lmeta["handle"] = self.tracker.delta_dispatch(
+                    tpath, _fp_view(leaf), quantize=(enc == "q8"))
+            else:
+                d = self.tracker.delta(tpath, _fp_view(leaf),
+                                       quantize=(enc == "q8"))
+                idx_keep, chunks_keep, t_bytes = _encode_changed(
+                    d, lmeta, self.chunk_words)
+                lmeta["changed_idx"] = idx_keep
+                lmeta["chunks"] = chunks_keep
+                transferred += t_bytes
+                changed_chunks_n += len(idx_keep)
+            payload_leaves.append(lmeta)
         if set(prev_sig) - set(sig):           # leaf removed
             structure_changed = True
         last = self._last_key.get(scope)
@@ -179,13 +229,18 @@ class CheckpointPipeline:
             "kind": "full" if full else "delta",
             "parent": None if full else last,
             "treedef": str(treedef), "chunk_words": self.chunk_words,
-            "leaves": payload_leaves,
-            "transferred_bytes": transferred, "logical_bytes": logical,
-            "changed_chunks": changed_chunks_n,
+            "leaves": payload_leaves, "overlap": self.overlap,
+            # overlap mode: transferred/changed are only known once the
+            # writer thread finalizes the deferred gathers (None here; the
+            # materialized stat carries the measured values)
+            "transferred_bytes": None if self.overlap else transferred,
+            "logical_bytes": logical,
+            "changed_chunks": None if self.overlap else changed_chunks_n,
             "total_chunks": total_chunks_n,
-            # foreground stall on the training thread (fingerprint + mask
-            # sync + changed-row DMA): part of the real M_i — the epsilon
-            # overhead invariant is meaningless if this goes uncounted
+            # foreground stall on the training thread (fused fingerprint +
+            # mask sync + changed-row DMA — or dispatch-only in overlap
+            # mode): part of the real M_i — the epsilon overhead invariant
+            # is meaningless if this goes uncounted
             "submit_stall_s": time.perf_counter() - t_submit0,
         }
         ok = self._dispatch(payload, block=block)
@@ -203,9 +258,11 @@ class CheckpointPipeline:
         self._since_full[scope] = 0 if full else since + 1
         return {"key": key, "kind": payload["kind"],
                 "parent": payload["parent"],
-                "transferred_bytes": transferred, "logical_bytes": logical,
-                "changed_chunks": changed_chunks_n,
+                "transferred_bytes": payload["transferred_bytes"],
+                "logical_bytes": logical,
+                "changed_chunks": payload["changed_chunks"],
                 "total_chunks": total_chunks_n,
+                "overlap": self.overlap,
                 "submit_stall_s": payload["submit_stall_s"]}
 
     def _dispatch(self, payload: dict, block: bool) -> bool:
@@ -221,22 +278,49 @@ class CheckpointPipeline:
     def _make_job(self, payload: dict):
         def job(store):
             scope = payload["scope"]
+            if payload.get("overlap"):
+                # deferred half of the fused pass: sync masks, gather (and
+                # quantize) changed rows, encode wire payloads — all off the
+                # training thread
+                transferred = 0
+                changed_n = 0
+                for leaf in payload["leaves"]:
+                    h = leaf.pop("handle", None)
+                    if h is None:              # zero-byte leaf
+                        continue
+                    d = self.tracker.finalize(h)
+                    idx_keep, chunks_keep, t_bytes = _encode_changed(
+                        d, leaf, payload["chunk_words"])
+                    leaf["changed_idx"] = idx_keep
+                    leaf["chunks"] = chunks_keep
+                    transferred += t_bytes
+                    changed_n += len(idx_keep)
+                payload["transferred_bytes"] = transferred
+                payload["changed_chunks"] = changed_n
             hashes_map = self._hashes.setdefault(scope, {})
+            encs_map = self._encs.setdefault(scope, {})
             full = payload["kind"] == "full"
             new_bytes = 0
             new_chunks = 0
             manifest_leaves = []
             for leaf in payload["leaves"]:
                 path, n = leaf["path"], leaf["n_chunks"]
+                lenc = leaf.get("enc", "raw")
                 base = hashes_map.get(path)
                 if base is None or len(base) != n:
                     base = [None] * n
                 else:
                     base = list(base)
+                ebase = encs_map.get(path)
+                if ebase is None or len(ebase) != n:
+                    ebase = ["raw"] * n        # pre-v3 state: chunks are raw
+                else:
+                    ebase = list(ebase)
                 delta_hashes = {}
                 for i, data in zip(leaf["changed_idx"], leaf["chunks"]):
                     h, nb, new = store.put_chunk(data)
                     base[i] = h
+                    ebase[i] = lenc
                     delta_hashes[str(i)] = h
                     new_bytes += nb
                     new_chunks += int(new)
@@ -246,20 +330,31 @@ class CheckpointPipeline:
                         f"unchanged chunks have no known hash (manifest kind "
                         f"{payload['kind']!r})")
                 hashes_map[path] = base
+                encs_map[path] = ebase
                 mleaf = {"path": path, "dtype": leaf["dtype"],
                          "shape": leaf["shape"], "nbytes": leaf["nbytes"],
                          "n_chunks": n}
+                if lenc != "raw":
+                    # leaf-level POLICY (what this pipeline writes), distinct
+                    # from the per-chunk enc lists below: warm_start seeds
+                    # the structure signature from it
+                    mleaf["leaf_enc"] = lenc
                 if full:
                     mleaf["chunks"] = base
+                    if any(e != "raw" for e in ebase):
+                        mleaf["enc"] = ebase
                 else:
                     mleaf["delta"] = delta_hashes
+                    if lenc != "raw" and delta_hashes:
+                        mleaf["denc"] = {i: lenc for i in delta_hashes}
                 manifest_leaves.append(mleaf)
             if full:    # drop leaves that left the tree
                 current = {lf["path"] for lf in payload["leaves"]}
                 for stale in set(hashes_map) - current:
                     del hashes_map[stale]
+                    encs_map.pop(stale, None)
             store.put_manifest({
-                "key": payload["key"], "version": 2,
+                "key": payload["key"], "version": 3,
                 "kind": payload["kind"], "parent": payload["parent"],
                 "treedef": payload["treedef"],
                 "chunk_words": payload["chunk_words"],
@@ -272,6 +367,7 @@ class CheckpointPipeline:
                     "changed_chunks": payload["changed_chunks"],
                     "total_chunks": payload["total_chunks"],
                     "submit_stall_s": payload["submit_stall_s"],
+                    "overlap": payload.get("overlap", False),
                     "new_bytes": new_bytes, "new_chunks": new_chunks}
         return job
 
@@ -312,6 +408,7 @@ class CheckpointPipeline:
                 f" vs pipeline {self.chunk_words} — digests would never match")
         sig: dict[str, tuple] = {}
         hashes: dict[str, list] = {}
+        encs: dict[str, list] = {}
         seeded_bytes = 0
         for leaf in manifest["leaves"]:
             path = leaf["path"]
@@ -322,8 +419,10 @@ class CheckpointPipeline:
                     f"{path!r} — pass resolve_manifest() output")
             if path not in arrays_by_path:
                 raise ValueError(f"restored tree is missing leaf {path!r}")
-            sig[path] = (leaf["dtype"], tuple(leaf["shape"]))
+            sig[path] = (leaf["dtype"], tuple(leaf["shape"]),
+                         leaf.get("leaf_enc", "raw"))
             hashes[path] = list(chunks)
+            encs[path] = list(leaf.get("enc") or ["raw"] * len(chunks))
             nbytes = int(leaf.get("nbytes", 0))
             seeded_bytes += nbytes
             if nbytes > 0:
@@ -331,6 +430,7 @@ class CheckpointPipeline:
                                   _fp_view(arrays_by_path[path]))
         self._sig[scope] = sig
         self._hashes[scope] = hashes
+        self._encs[scope] = encs
         self._last_key[scope] = parent_key
         self._since_full[scope] = 0
         return {"scope": scope, "parent": parent_key,
@@ -359,10 +459,47 @@ class CheckpointPipeline:
         self._last_key.clear()
         self._since_full.clear()
         self._hashes.clear()
+        self._encs.clear()
 
     @property
     def stats(self) -> list[dict]:
         return list(self._stats)
+
+
+def _encode_changed(d: dict, lmeta: dict, chunk_words: int):
+    """Turn one finalized delta record into per-chunk wire payloads.
+
+    Raw leaves: gathered u32 rows back to native bytes, last chunk trimmed
+    to the leaf's real length. q8 leaves: each changed row is already int8 +
+    scales from the fused gather-quantize kernel — packed into the
+    self-describing q8 chunk format (per-chunk element count, so the last
+    chunk trims the same way). Returns (idx_keep, chunks_keep,
+    transferred_bytes)."""
+    nbytes, n_chunks = lmeta["nbytes"], lmeta["n_chunks"]
+    dtype = lmeta["dtype"]
+    idx_keep: list[int] = []
+    chunks_keep: list[bytes] = []
+    if lmeta["enc"] == "q8":
+        itemsize = 2 if dtype in ("bfloat16", "float16") else 4
+        total_elems = nbytes // itemsize
+        block = min(Q8_BLOCK, chunk_words)
+        for j, i in enumerate(d["changed_idx"].tolist()):
+            n_el = chunk_words if i < n_chunks - 1 \
+                else total_elems - (n_chunks - 1) * chunk_words
+            idx_keep.append(int(i))
+            chunks_keep.append(q8_encode_chunk(
+                d["changed_q"][j], d["changed_scales"][j], n_el, block))
+    else:
+        chunk_native = chunk_words * native_bytes_per_word(dtype)
+        native = blocks_to_native_bytes(d["changed_blocks"], dtype)
+        # tracker clamps changed_idx to the leaf's real chunk count, so
+        # every row lands in [0, n_chunks); only the last needs trimming
+        for i, data in zip(d["changed_idx"].tolist(), native):
+            if i == n_chunks - 1:
+                data = data[: nbytes - (n_chunks - 1) * chunk_native]
+            idx_keep.append(int(i))
+            chunks_keep.append(data)
+    return idx_keep, chunks_keep, sum(len(c) for c in chunks_keep)
 
 
 def _fp_view(leaf):

@@ -10,15 +10,21 @@ repeated epochs after convergence) share chunks with earlier checkpoints, so
 the marginal bytes of a checkpoint track what actually CHANGED — without any
 static analysis, because JAX state is explicit (DESIGN.md section 2).
 
-Two manifest generations coexist:
+Three manifest generations coexist:
 
 * v1 (``put_tree``) — full manifests; every leaf lists every chunk hash.
-* v2 (written by ``checkpoint/pipeline.py``) — ``kind`` is ``"full"`` or
-  ``"delta"``. A delta manifest names a ``parent`` key and stores only the
-  chunk hashes that changed since the parent; unchanged hashes are inherited
-  by walking the parent chain at read time (``resolve_manifest``). The
-  pipeline bounds chain length by writing a full manifest every K
-  checkpoints, so resolution never chases unbounded history.
+* v2 (older pipeline manifests) — ``kind`` is ``"full"`` or ``"delta"``. A
+  delta manifest names a ``parent`` key and stores only the chunk hashes
+  that changed since the parent; unchanged hashes are inherited by walking
+  the parent chain at read time (``resolve_manifest``). The pipeline bounds
+  chain length by writing a full manifest every K checkpoints, so
+  resolution never chases unbounded history.
+* v3 (written by ``checkpoint/pipeline.py``) — v2 plus per-chunk ENCODINGS:
+  a chunk body is either raw native bytes or a self-describing blockwise
+  int8 payload (``"q8"``, kernels/ops.py wire codec). Encodings resolve
+  through the parent chain exactly like hashes, and ``get_tree``
+  dequantizes transparently, so readers never care which generation wrote a
+  chunk.
 
 Multi-run sharing (run lineage). One store root may be SHARED by many runs:
 each run gets a manifest namespace (``run_id``), so checkpoint keys like
@@ -55,7 +61,7 @@ from repro.utils.codec import Compressor, pack_obj, unpack_obj
 
 CHUNK = 4 * 1024 * 1024
 
-MANIFEST_VERSION = 2
+MANIFEST_VERSION = 3
 
 _CURRENT_RUN = object()          # sentinel: list_keys() default namespace
 
@@ -238,7 +244,9 @@ class CheckpointStore:
         manifest = self.get_manifest(key)
         if manifest.get("version", 1) < 2 or manifest.get("kind", "full") == "full":
             return manifest
-        # delta: seed hole-filled lists from this manifest, then walk parents
+        # delta: seed hole-filled lists from this manifest, then walk
+        # parents. Per-chunk encodings (v3) resolve alongside the hashes: an
+        # enc slot is filled from whichever manifest supplied the chunk.
         leaves = []
         unresolved: dict[str, dict] = {}
         for leaf in manifest["leaves"]:
@@ -246,13 +254,19 @@ class CheckpointStore:
             if leaf.get("chunks"):
                 # already-complete list (e.g. a re-saved resolved manifest)
                 chunks = list(leaf["chunks"])
+                enc = list(leaf.get("enc") or ["raw"] * n)
             else:
                 chunks = [None] * n
+                enc = [None] * n
+                denc = leaf.get("denc") or {}
                 for i, h in (leaf.get("delta") or {}).items():
                     chunks[int(i)] = h
+                    enc[int(i)] = denc.get(i, "raw")
             out = dict(leaf)
             out.pop("delta", None)
+            out.pop("denc", None)
             out["chunks"] = chunks
+            out["_enc"] = enc
             leaves.append(out)
             if any(c is None for c in chunks):
                 unresolved[leaf["path"]] = out
@@ -281,14 +295,18 @@ class CheckpointStore:
                 if src is None:
                     continue
                 if "chunks" in src and src["chunks"] is not None:
+                    senc = src.get("enc")
                     for i, c in enumerate(out["chunks"]):
                         if c is None:
                             out["chunks"][i] = src["chunks"][i]
+                            out["_enc"][i] = senc[i] if senc else "raw"
                 else:
-                    for i, h in (src.get("delta") or {}).items():
-                        i = int(i)
+                    sdenc = src.get("denc") or {}
+                    for i_s, h in (src.get("delta") or {}).items():
+                        i = int(i_s)
                         if out["chunks"][i] is None:
                             out["chunks"][i] = h
+                            out["_enc"][i] = sdenc.get(i_s, "raw")
                 if all(c is not None for c in out["chunks"]):
                     del unresolved[path]
             parent = pm.get("parent") \
@@ -301,8 +319,17 @@ class CheckpointStore:
                 f"unresolvable delta manifest {key!r}: missing chunks "
                 f"{missing} (parent chain broken — was the store gc'd with "
                 f"an incomplete live set?)")
+        for out in leaves:
+            enc = ["raw" if e is None else e for e in out.pop("_enc")]
+            if any(e != "raw" for e in enc):
+                out["enc"] = enc
+            else:
+                out.pop("enc", None)
         resolved = dict(manifest)
         resolved["leaves"] = leaves
+        # parent hops this resolution actually walked — restore accounting
+        # feeds it to the learned cost model (calibration meta "hop_s")
+        resolved["hops"] = depth
         return resolved
 
     # ------------------------------------------------------------- trees --
@@ -359,8 +386,19 @@ class CheckpointStore:
             manifest = self.resolve_manifest(key)
         arrays = []
         for leaf in manifest["leaves"]:
-            raw = b"".join(self.get_chunk(h) for h in leaf["chunks"])
             dt = np_dtype(leaf["dtype"])
+            enc = leaf.get("enc")
+            if enc and any(e == "q8" for e in enc):
+                # quantized chunks dequantize transparently to native bytes
+                # (deferred import: the q8 codec lives with the kernels, and
+                # the store stays importable without pulling jax)
+                from repro.kernels.ops import q8_decode_chunk
+                raw = b"".join(
+                    q8_decode_chunk(self.get_chunk(h), dt) if e == "q8"
+                    else self.get_chunk(h)
+                    for h, e in zip(leaf["chunks"], enc))
+            else:
+                raw = b"".join(self.get_chunk(h) for h in leaf["chunks"])
             nbytes = int(leaf.get("nbytes",
                                   int(np.prod(leaf["shape"], dtype=np.int64))
                                   * dt.itemsize))

@@ -61,6 +61,11 @@ class AdaptiveController:
         # flush): draws down the same epsilon budget as materialization
         self.log_s = 0.0
         self.log_bytes = 0
+        # writer-thread time spent finalizing overlapped checkpoints (mask
+        # sync + gather + encode). NOT charged against epsilon — overlap mode
+        # exists precisely to move that work off the step path — but tracked
+        # so the snapshot shows where the machine's time went
+        self.bg_s = 0.0
 
     def _b(self, block_id: str) -> BlockStats:
         return self.blocks.setdefault(block_id, BlockStats())
@@ -129,6 +134,12 @@ class AdaptiveController:
     def note_submitted(self, block_id: str):
         self._b(block_id).pending += 1
 
+    def note_background(self, seconds: float):
+        """Account writer-thread work that overlap mode moved OFF the step
+        path (fused-pass finalize: mask sync + gather + encode). Kept out of
+        M_i / epsilon by design; visible in the snapshot."""
+        self.bg_s += float(seconds)
+
     # ------------------------------------------------------------ replay --
     def observe_restore(self, block_id: str, restore_s: float):
         b = self._b(block_id)
@@ -149,6 +160,7 @@ class AdaptiveController:
             "epsilon_effective": self.effective_epsilon(),
             "log_s": self.log_s,
             "log_bytes": self.log_bytes,
+            "bg_s": self.bg_s,
             "c": self.c.value,
             "write_bps": self.write_bps,
             "blocks": {

@@ -64,7 +64,8 @@ class FlorContext:
                  parent_run: Optional[str] = None, run_id: Optional[str] = None,
                  async_log: bool = True,
                  log_queue_depth: int = DEFAULT_QUEUE_DEPTH,
-                 log_spill_bytes: int = DEFAULT_SPILL_BYTES):
+                 log_spill_bytes: int = DEFAULT_SPILL_BYTES,
+                 ckpt_quantize_slots=(), ckpt_overlap: bool = False):
         assert mode in ("record", "replay")
         self.run_dir = run_dir
         self.mode = mode
@@ -169,16 +170,18 @@ class FlorContext:
             if calib and calib.get("write_bps"):
                 self.controller.write_bps = float(calib["write_bps"])
             else:
-                self.controller.write_bps = self._calibrate_store()
-                self.store.put_meta("store_calib",
-                                    {"write_bps": self.controller.write_bps,
-                                     "measured_at": time.time()})
+                calib = self._calibrate_store()
+                calib["measured_at"] = time.time()
+                self.store.put_meta("store_calib", calib)
+                self.controller.write_bps = calib["write_bps"]
         self.async_materialize = async_materialize
         # the delta-aware record flow; replay never submits checkpoints, so
         # it gets no pipeline (and no idle writer thread)
         self.pipeline = CheckpointPipeline(
             self.store, async_stage=async_materialize,
             full_every=full_manifest_every,
+            quantize_slots=ckpt_quantize_slots,
+            overlap=ckpt_overlap,
             on_materialized=self._on_materialized) \
             if mode == "record" else None
         # backward-compat handle (benchmarks call ctx.writer.drain())
@@ -236,20 +239,26 @@ class FlorContext:
         except Exception:
             pass                 # snapshotting is best-effort, never fatal
 
-    def _calibrate_store(self) -> float:
-        """One ~8MB probe write measures real serialize+compress+write
-        throughput, so the pre-measurement M estimate is honest. The probe is
-        UNIQUE random data (so its chunks cannot be shared with any real
-        checkpoint) and is deleted afterwards — calibration must not pollute
-        list_keys() or stored_bytes() accounting."""
+    def _calibrate_store(self) -> dict:
+        """One ~8MB probe measures real store throughput BOTH ways: the write
+        (serialize+compress+write — the pre-measurement M estimate) and a
+        read-back (read+decompress+deserialize — the replay planner's
+        restore-cost prior, refined later by observed restores in finish()).
+        The probe is UNIQUE random data (so its chunks cannot be shared with
+        any real checkpoint) and is deleted afterwards — calibration must not
+        pollute list_keys() or stored_bytes() accounting."""
         import numpy as np
         rng = np.random.default_rng()        # unseeded => unshared chunks
         probe = rng.standard_normal(1 << 21).astype(np.float32)   # 8 MB
         t0 = time.perf_counter()
         self.store.put_tree("__calib__", {"x": probe})
-        dt = max(time.perf_counter() - t0, 1e-4)
+        dt_w = max(time.perf_counter() - t0, 1e-4)
+        t0 = time.perf_counter()
+        self.store.get_tree("__calib__")
+        dt_r = max(time.perf_counter() - t0, 1e-4)
         self.store.delete_manifest("__calib__", delete_chunks=True)
-        return max(probe.nbytes / dt, 1e7)
+        return {"write_bps": max(probe.nbytes / dt_w, 1e7),
+                "read_bps": max(probe.nbytes / dt_r, 1e7)}
 
     # ------------------------------------------------------------ keys ----
     def begin_epoch(self, epoch: int):
@@ -283,7 +292,23 @@ class FlorContext:
     # ----------------------------------------------------- materialization
     def _on_materialized(self, stat: dict):
         block = self._key_to_block.pop(stat["key"], None)
-        if block is not None:
+        if block is None:
+            return
+        if stat.get("overlap"):
+            # overlap mode: the fused pass ran async with the step, and the
+            # mask sync + gather + encode + write all happened on the writer
+            # thread. Only the measured foreground stall (dispatch + any
+            # queue backpressure) is record overhead; the writer-thread time
+            # is accounted separately, and the transfer fraction — unknown
+            # at submit — lands here once measured
+            self.controller.observe_materialization(
+                block, stat.get("submit_stall_s", 0.0))
+            self.controller.note_background(stat["materialize_s"])
+            if stat.get("transferred_bytes") is not None:
+                self.controller.note_transfer(block,
+                                              stat["transferred_bytes"],
+                                              stat["logical_bytes"])
+        else:
             # M_i = foreground stall on the training thread (fingerprint +
             # changed-chunk DMA) + background write stage; counting only the
             # latter would let the eps-overhead invariant undercount record
@@ -298,7 +323,9 @@ class FlorContext:
         self._key_to_block[key] = block_id
         self.controller.note_submitted(block_id)
         stat = self.pipeline.submit(key, tree, meta, scope=block_id)
-        if stat is not None:
+        if stat is not None and stat["transferred_bytes"] is not None:
+            # overlap mode reports None here (the gather is deferred to the
+            # writer thread); the measured figure arrives in _on_materialized
             self.controller.note_transfer(block_id,
                                           stat["transferred_bytes"],
                                           stat["logical_bytes"])
@@ -392,11 +419,24 @@ class FlorContext:
     def restore_checkpoint(self, key: str, like=None):
         """Load a checkpoint (delta manifests resolve transparently) and
         account the restore for the controller's restore/materialize ratio
-        and replay diagnostics."""
+        and replay diagnostics. Each sample records the restored byte count
+        and the parent hops the resolution walked — finish() fits a learned
+        restore cost model (read_bps, hop_s) from them that the replay
+        planner consumes via store calibration meta."""
+        import numpy as np
+        from repro.checkpoint.store import np_dtype
         t0 = time.perf_counter()
-        tree = self.store.get_tree(key, like=like)
+        manifest = self.store.resolve_manifest(key)
+        tree = self.store.get_tree(key, like=like, manifest=manifest)
         dt = time.perf_counter() - t0
-        self.restore_stats.append({"key": key, "restore_s": dt})
+        nbytes = sum(
+            int(lf["nbytes"]) if lf.get("nbytes") is not None
+            else int(np.prod(lf["shape"], dtype=np.int64))
+            * np_dtype(lf["dtype"]).itemsize
+            for lf in manifest["leaves"])
+        self.restore_stats.append({"key": key, "restore_s": dt,
+                                   "bytes": nbytes,
+                                   "hops": int(manifest.get("hops") or 0)})
         return tree, dt
 
     # ---------------------------------------------------------------- gc --
@@ -460,8 +500,54 @@ class FlorContext:
             self.store.put_meta("block_profile", {"blocks": prev})
         self.store.put_meta(f"controller_{self.mode}_p{self.pid}",
                             self.controller.snapshot())
+        self._persist_restore_calib()
         if log_err is not None:
             raise log_err
+
+    def _persist_restore_calib(self):
+        """Fold observed restores into store calibration meta: a learned
+        (read_bps, hop_s) restore cost model the replay planner consumes
+        (plan.restore_cost). Measured restores supersede the probe read-back
+        — they go through the real chunk/decompress/delta-resolve path at
+        real checkpoint sizes — and hop_s is only fit when the samples
+        actually span different chain depths (a rank-deficient fit would
+        hallucinate a hop latency)."""
+        fit = _fit_restore_model(self.restore_stats)
+        if fit is None:
+            return
+        try:
+            calib = dict(self.store.get_meta("store_calib") or {})
+            calib.update(fit)
+            calib["restore_samples"] = len(self.restore_stats)
+            calib["restore_measured_at"] = time.time()
+            self.store.put_meta("store_calib", calib)
+        except OSError:
+            pass            # calibration is advisory, never fatal at finish
+
+
+def _fit_restore_model(stats: list) -> Optional[dict]:
+    """Least-squares (read_bps, hop_s) from restore samples of the form
+    {"restore_s", "bytes", "hops"}. Model: t = bytes/read_bps + hops*hop_s.
+    Returns {"read_bps"} alone when the samples don't constrain hop_s (all
+    the same chain depth, or the fit goes non-physical), None when there is
+    nothing usable to learn from."""
+    import numpy as np
+    rows = [s for s in stats
+            if s.get("bytes") and float(s.get("restore_s") or 0) > 0]
+    if not rows:
+        return None
+    b = np.array([float(s["bytes"]) for s in rows])
+    h = np.array([float(s.get("hops") or 0) for s in rows])
+    t = np.array([float(s["restore_s"]) for s in rows])
+    # effective end-to-end throughput: the always-valid fallback figure
+    eff_bps = float(np.clip(b.sum() / max(t.sum(), 1e-9), 1e6, 1e12))
+    if len(rows) >= 3 and np.unique(h).size >= 2:
+        coef, *_ = np.linalg.lstsq(np.stack([b, h], axis=1), t, rcond=None)
+        sec_per_byte, hop_s = float(coef[0]), float(coef[1])
+        if sec_per_byte > 0 and hop_s >= 0:
+            return {"read_bps": float(np.clip(1.0 / sec_per_byte, 1e6, 1e12)),
+                    "hop_s": hop_s}
+    return {"read_bps": eff_bps}
 
 
 def _parse_arg_overrides(spec: str) -> dict[str, str]:

@@ -51,6 +51,7 @@ def _registered_runs(path: str) -> list[dict]:
         runs = [{"run_id": meta.get("run_id")
                  or os.path.basename(os.path.abspath(path)),
                  "parent": meta.get("parent_run"),
+                 "namespace": meta.get("namespace"),
                  "run_dir": os.path.abspath(path)}]
     return runs
 
@@ -74,13 +75,51 @@ def _run_log_files(run_dir: Optional[str],
     return [(src, p) for src, p in out if os.path.exists(p)]
 
 
+def _is_spill_ref(value) -> bool:
+    """A large-value pointer row written by the background log's spill path
+    (repro.logging): {"ref": "logref__<stream>__<seq>", dtype, shape,
+    nbytes, digest}."""
+    return (isinstance(value, dict)
+            and str(value.get("ref", "")).startswith("logref__")
+            and "nbytes" in value)
+
+
+def _inline_spill(value: dict, rec: dict, path: str, cache: dict):
+    """Materialize one spilled value back from the checkpoint store (the
+    inverse of FingerprintLog._spill_value), JSON-lowered like a never-
+    spilled row would have been. Best-effort: a missing ref (gc'd store,
+    detached run dir) leaves the pointer row untouched."""
+    from repro.checkpoint.store import CheckpointStore
+    from repro.logging import jsonable
+    try:
+        root = resolve_store_root(rec.get("run_dir") or path)
+        store = cache.get(root)
+        if store is None:
+            store = cache[root] = CheckpointStore(root)
+        # spills live in the run's manifest namespace; "::" pins the flat
+        # namespace for legacy private stores
+        qual = f"{rec.get('namespace') or ''}::{value['ref']}"
+        arr = store.get_tree(qual)["['v']"]
+        return jsonable(arr, value["ref"])
+    except Exception:
+        return value
+
+
 def log_records(path: str, run: Optional[str] = None,
                 key: Optional[str] = None,
-                include_replay: bool = True) -> list[dict]:
+                include_replay: bool = True,
+                inline_spill_bytes: int = 0) -> list[dict]:
     """Every logged value across every run registered under `path`, as flat
     row dicts tagged with the run lineage. Filter with ``run=`` (a run id)
-    and ``key=`` (a log key)."""
+    and ``key=`` (a log key).
+
+    ``inline_spill_bytes`` re-inlines spilled large values: a pointer row
+    whose recorded ``nbytes`` is at or below the threshold is resolved from
+    the checkpoint store and returned as the actual value (as if it had
+    never spilled); larger spills keep their pointer dict. 0 (default)
+    leaves every pointer untouched."""
     rows = []
+    cache: dict = {}
     for rec in _registered_runs(path):
         rid = rec.get("run_id")
         if run is not None and rid != run:
@@ -89,13 +128,17 @@ def log_records(path: str, run: Optional[str] = None,
             for r in FingerprintLog.read(lp):
                 if key is not None and r.get("key") != key:
                     continue
+                value = r.get("value")
+                if inline_spill_bytes and _is_spill_ref(value) \
+                        and int(value["nbytes"]) <= inline_spill_bytes:
+                    value = _inline_spill(value, rec, path, cache)
                 rows.append({"run_id": rid,
                              "parent_run": rec.get("parent"),
                              "source": source,
                              "epoch": r.get("epoch"),
                              "seq": r.get("seq"),
                              "key": r.get("key"),
-                             "value": r.get("value")})
+                             "value": value})
     return rows
 
 
@@ -146,13 +189,17 @@ def merge_replay_logs(run_dir: str, owners: list,
 
 
 def pivot(path: str, *keys: str, run: Optional[str] = None,
-          include_replay: bool = True) -> list[dict]:
+          include_replay: bool = True,
+          inline_spill_bytes: int = 0) -> list[dict]:
     """One row per (run, epoch) with log keys as columns, across the whole
     lineage: ``[{run_id, parent_run, epoch, <key>: value, ...}, ...]``.
     With no explicit `keys`, every observed key becomes a column. The LAST
     logged occurrence in an epoch wins (replay attempts, logging after
-    record, override earlier values — hindsight refines the log)."""
-    rows = log_records(path, run=run, include_replay=include_replay)
+    record, override earlier values — hindsight refines the log).
+    ``inline_spill_bytes`` resolves small spilled values like
+    :func:`log_records` does."""
+    rows = log_records(path, run=run, include_replay=include_replay,
+                       inline_spill_bytes=inline_spill_bytes)
     want = list(keys)
     if not want:
         seen = []

@@ -65,7 +65,18 @@ class RecordSpec:
     training thread can run ahead of the log writer before enqueues apply
     backpressure; a logged array larger than ``log_spill_bytes`` host bytes
     is spilled to the checkpoint store and logged as a ``{"ref": ...}``
-    pointer row (0 disables spilling)."""
+    pointer row (0 disables spilling).
+
+    ``ckpt_quantize_slots`` opts named slots into the LOSSY fused q8
+    checkpoint path (blockwise int8 + scales leave the device wire-format;
+    per-element error bounded by half a quantization step). Entries match
+    leaf paths by slot name or glob — e.g. ``("mu", "nu")`` for Adam
+    moments. Everything else stays exact: the bit-identical restore
+    invariant holds by default. ``ckpt_overlap`` overlaps the fused
+    fingerprint pass with training: the step thread only dispatches kernels
+    and the mask sync + gather + encode move to the writer thread (the
+    adaptive controller then charges only the measured foreground stall
+    against epsilon)."""
     epsilon: float = 1.0 / 15          # record-overhead budget (Eq. 1)
     adaptive: bool = True              # adaptive checkpointing (section 5.3)
     async_materialize: bool = True     # background checkpoint write stage
@@ -73,6 +84,8 @@ class RecordSpec:
     async_log: bool = True             # background flor.log (repro.logging)
     log_queue_depth: int = DEFAULT_QUEUE_DEPTH    # bounded queue (backpressure)
     log_spill_bytes: int = DEFAULT_SPILL_BYTES    # spill threshold (0 = off)
+    ckpt_quantize_slots: tuple = ()    # slots stored lossy-q8 (fused path)
+    ckpt_overlap: bool = False         # overlap fused pass with the step
 
     def __post_init__(self):
         if not 0 < self.epsilon <= 1:
@@ -80,6 +93,16 @@ class RecordSpec:
         if self.full_manifest_every < 1:
             raise ValueError("full_manifest_every must be >= 1")
         _check_log_knobs(self.log_queue_depth, self.log_spill_bytes)
+        if isinstance(self.ckpt_quantize_slots, str):
+            raise ValueError(
+                "ckpt_quantize_slots must be a sequence of slot names / "
+                "globs, not a bare string (a string would match per-char)")
+        object.__setattr__(self, "ckpt_quantize_slots",
+                           tuple(self.ckpt_quantize_slots))
+        if self.ckpt_overlap and not self.async_materialize:
+            raise ValueError("ckpt_overlap requires async_materialize=True "
+                             "(the writer thread finalizes the deferred "
+                             "fused pass)")
 
     def to_kwargs(self) -> dict:
         return {f.name: getattr(self, f.name) for f in fields(self)}

@@ -49,6 +49,43 @@ def fingerprint_pallas(x_u32: jnp.ndarray, *, interpret: bool = True,
     )(x_u32)
 
 
+def _fp_changed_kernel(x_ref, prev_ref, digest_ref, mask_ref):
+    x = x_ref[...]                                   # [TILE_G, B] uint32
+    B = x.shape[-1]
+    pos = (jax.lax.broadcasted_iota(jnp.uint32, (1, B), 1) * FP_PRIME1)
+    v = (x ^ pos) * FP_PRIME2
+    d0 = jax.lax.reduce(v, np.uint32(0), jax.lax.bitwise_xor, (1,))
+    d1 = jnp.sum(v * FP_PRIME3, axis=1, dtype=jnp.uint32)
+    d = jnp.stack([d0, d1], axis=1)                  # [TILE_G, 2]
+    digest_ref[...] = d
+    mask_ref[...] = jnp.any(d != prev_ref[...], axis=1).astype(jnp.int32)
+
+
+def fingerprint_changed_pallas(x_u32: jnp.ndarray, prev: jnp.ndarray, *,
+                               interpret: bool = True,
+                               tile_g: int = TILE_G):
+    """Fused digest + compare: [G, B] uint32 x [G, 2] prev digests ->
+    ([G, 2] digests, [G] int32 changed mask) in ONE pass over the leaf.
+
+    The separate ``fingerprint_pallas`` + ``changed_mask_pallas`` pair costs
+    a second kernel launch and re-reads the [G, 2] digests from HBM; fusing
+    the compare into the fingerprint tile keeps both outputs in registers
+    while the leaf streams through VMEM once."""
+    G, B = x_u32.shape
+    assert G % tile_g == 0, (G, tile_g)
+    return pl.pallas_call(
+        _fp_changed_kernel,
+        grid=(G // tile_g,),
+        in_specs=[pl.BlockSpec((tile_g, B), lambda i: (i, 0)),
+                  pl.BlockSpec((tile_g, 2), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((tile_g, 2), lambda i: (i, 0)),
+                   pl.BlockSpec((tile_g,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((G, 2), jnp.uint32),
+                   jax.ShapeDtypeStruct((G,), jnp.int32)],
+        interpret=interpret,
+    )(x_u32, prev)
+
+
 def _changed_kernel(digest_ref, prev_ref, mask_ref):
     d = digest_ref[...]
     p = prev_ref[...]

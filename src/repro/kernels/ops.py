@@ -12,10 +12,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.chunk_delta import changed_mask_pallas, fingerprint_pallas
+from repro.kernels.chunk_delta import (changed_mask_pallas,
+                                       fingerprint_changed_pallas,
+                                       fingerprint_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.quantize import dequantize_pallas, quantize_pallas
-from repro.kernels.ref import changed_mask_ref, fingerprint_ref
+from repro.kernels.quantize import (Q8_BLOCK, dequantize_pallas,
+                                    gather_quantize_pallas, quantize_pallas)
+from repro.kernels.ref import (changed_mask_ref, fingerprint_changed_ref,
+                               fingerprint_ref, gather_quantize_ref)
 
 CHUNK_WORDS = 1024        # 4 KiB chunks (uint32 words)
 
@@ -69,6 +73,18 @@ def fingerprint_leaf(x, chunk_words: int = CHUNK_WORDS):
     return _fingerprint(_as_u32_blocks(x, chunk_words))
 
 
+@functools.partial(jax.jit, static_argnames=("chunk_words",))
+def fingerprint_and_changed(x, prev_digest, chunk_words: int = CHUNK_WORDS):
+    """Fused fingerprint + compare: one pass over the leaf yielding both the
+    new [G,2] digests and the int32 [G] changed mask. Use when a previous
+    digest exists; first-sight leaves go through ``fingerprint_leaf`` (there
+    is nothing to compare against)."""
+    blocks = _as_u32_blocks(x, chunk_words)
+    if _interpret():
+        return fingerprint_changed_ref(blocks, prev_digest)
+    return fingerprint_changed_pallas(blocks, prev_digest, interpret=False)
+
+
 @jax.jit
 def changed_chunks(digest, prev_digest):
     """bool-ish int32 [G] mask of chunks whose digest changed."""
@@ -86,6 +102,69 @@ def gather_changed_blocks(x, idx, chunk_words: int = CHUNK_WORDS):
     checkpoint, even when zero chunks changed; callers skip this entirely
     for frozen leaves (empty idx)."""
     return jnp.take(_as_u32_blocks(x, chunk_words), idx, axis=0)
+
+
+def quantizable_dtype(dtype) -> bool:
+    """True for dtypes the fused q8 path supports. Restricted to the float
+    dtypes whose `_as_u32_blocks` view carries exactly one element per u32
+    word — so the float chunk rows below align 1:1 with fingerprint chunks
+    and a changed-row index means the same thing in both views."""
+    name = dtype if isinstance(dtype, str) else str(np.dtype(dtype))
+    return name in ("float32", "bfloat16", "float16")
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_words", "block"))
+def gather_quantize_blocks(x, idx, chunk_words: int = CHUNK_WORDS,
+                           block: int = Q8_BLOCK):
+    """Fused gather + blockwise-int8 quantize of the CHANGED chunk rows of a
+    float leaf: (q int8 [C, W], scales f32 [C, W // block]). Rows are the
+    leaf's [G, chunk_words]-element f32 chunk view (same row indexing as the
+    fingerprint view for quantizable dtypes); only rows named by ``idx`` are
+    read — the wire-format payload leaves the device in one pass."""
+    block = min(block, chunk_words)            # small-chunk configs
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    g = -(-n // chunk_words)
+    g = -(-g // 8) * 8
+    flat = jnp.pad(flat, (0, g * chunk_words - n))
+    blocks = flat.reshape(g, chunk_words)
+    if _interpret():
+        return gather_quantize_ref(blocks, idx, block)
+    return gather_quantize_pallas(blocks, idx, block=block, interpret=False)
+
+
+# ------------------------------------------------------------- q8 wire codec
+# Self-describing quantized chunk payload (little-endian):
+#   [u32 n_elems][u32 block][f32 scales[ceil(n_elems/block)]][int8 q[n_elems]]
+# The store writes these bytes as the chunk body (enc="q8"); restore
+# dequantizes transparently via `q8_decode_chunk`.
+
+def q8_encode_chunk(q_row: np.ndarray, scales: np.ndarray, n_elems: int,
+                    block: int = Q8_BLOCK) -> bytes:
+    """Pack one quantized chunk row (int8 [W], f32 [W // block]) into the
+    q8 wire format, trimming to the chunk's real `n_elems` (the last chunk
+    of a leaf is usually partial)."""
+    n_sub = -(-n_elems // block)
+    head = np.uint32(n_elems).tobytes() + np.uint32(block).tobytes()
+    return (head
+            + np.ascontiguousarray(scales[:n_sub], np.float32).tobytes()
+            + np.ascontiguousarray(q_row[:n_elems], np.int8).tobytes())
+
+
+def q8_decode_chunk(payload: bytes, dtype) -> bytes:
+    """Dequantize one q8 chunk payload back to the leaf's native bytes."""
+    n = int(np.frombuffer(payload[:4], np.uint32)[0])
+    block = int(np.frombuffer(payload[4:8], np.uint32)[0])
+    n_sub = -(-n // block)
+    scales = np.frombuffer(payload[8:8 + 4 * n_sub], np.float32)
+    q = np.frombuffer(payload[8 + 4 * n_sub:8 + 4 * n_sub + n], np.int8)
+    pad = (-n) % block
+    qf = np.pad(q.astype(np.float32), (0, pad)).reshape(n_sub, block)
+    x = (qf * scales[:, None]).reshape(-1)[:n]
+    # bf16 is registered with numpy via ml_dtypes (a jax dependency), so a
+    # plain astype covers f32/bf16/f16 alike
+    out = x.astype(jnp.dtype(dtype) if isinstance(dtype, str) else dtype)
+    return np.ascontiguousarray(out).tobytes()
 
 
 @functools.partial(jax.jit, static_argnames=("block",))

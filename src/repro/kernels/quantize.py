@@ -1,16 +1,22 @@
-"""Pallas TPU kernel: blockwise int8 quantize/dequantize.
+"""Pallas TPU kernels: blockwise int8 quantize/dequantize (+ fused gather).
 
-Backs two subsystems: checkpoint compression (optimizer moments tolerate
-blockwise int8; error-bounded) and the cross-pod gradient-compression codec
-(parallel/compression.py). One VMEM pass: absmax reduce + scale + round.
+Backs three subsystems: checkpoint compression (optimizer moments tolerate
+blockwise int8; error-bounded), the cross-pod gradient-compression codec
+(parallel/compression.py), and the fused checkpoint fast path
+(``gather_quantize_pallas``: changed chunk rows leave the device already
+wire-format, via scalar-prefetch gather + quantize in one VMEM pass).
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 TILE_G = 8
+Q8_BLOCK = 256
 
 
 def _quant_kernel(x_ref, q_ref, scale_ref):
@@ -36,6 +42,48 @@ def quantize_pallas(x: jnp.ndarray, *, interpret: bool = True,
                    jax.ShapeDtypeStruct((G,), jnp.float32)],
         interpret=interpret,
     )(x)
+
+
+def _gather_quant_kernel(idx_ref, x_ref, q_ref, scale_ref, *, block: int):
+    del idx_ref  # consumed by the BlockSpec index_map, not the body
+    x = x_ref[...].astype(jnp.float32)               # [1, W] selected row
+    W = x.shape[-1]
+    sub = x.reshape(W // block, block)
+    scale = jnp.maximum(jnp.max(jnp.abs(sub), axis=1) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(sub / scale[:, None]), -127, 127)
+    q_ref[...] = q.reshape(1, W).astype(jnp.int8)
+    scale_ref[...] = scale.reshape(1, W // block).astype(jnp.float32)
+
+
+def gather_quantize_pallas(x: jnp.ndarray, idx: jnp.ndarray, *,
+                           block: int = Q8_BLOCK, interpret: bool = True):
+    """Fused gather + blockwise-int8 quantize over CHANGED chunk rows.
+
+    ``x`` is the [G, W] float chunk view of a leaf, ``idx`` the int32 [C]
+    changed-row indices. The grid runs one program per changed row; the row
+    index is scalar-prefetched so the BlockSpec index_map DMAs only the
+    selected rows into VMEM — frozen rows are never read. Each row is
+    quantized per ``block``-element sub-block (same codec layout as
+    parallel/compression.py). Returns (q int8 [C, W], scales f32
+    [C, W // block])."""
+    G, W = x.shape
+    C = int(idx.shape[0])
+    assert W % block == 0, (W, block)
+    n_sub = W // block
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(C,),
+        in_specs=[pl.BlockSpec((1, W), lambda i, idx_ref: (idx_ref[i], 0))],
+        out_specs=[pl.BlockSpec((1, W), lambda i, idx_ref: (i, 0)),
+                   pl.BlockSpec((1, n_sub), lambda i, idx_ref: (i, 0))],
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_quant_kernel, block=block),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((C, W), jnp.int8),
+                   jax.ShapeDtypeStruct((C, n_sub), jnp.float32)],
+        interpret=interpret,
+    )(idx, x)
 
 
 def _dequant_kernel(q_ref, scale_ref, x_ref):

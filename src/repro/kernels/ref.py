@@ -26,6 +26,21 @@ def changed_mask_ref(digest: jnp.ndarray, prev: jnp.ndarray) -> jnp.ndarray:
     return jnp.any(digest != prev, axis=1)
 
 
+def fingerprint_changed_ref(x_u32: jnp.ndarray, prev: jnp.ndarray):
+    """Fused-kernel oracle: ([G,2] digests, int32 [G] changed mask)."""
+    d = fingerprint_ref(x_u32)
+    return d, changed_mask_ref(d, prev).astype(jnp.int32)
+
+
+def gather_quantize_ref(x: jnp.ndarray, idx: jnp.ndarray, block: int = 256):
+    """Fused gather+quantize oracle over the [G, W] float chunk view:
+    returns (q int8 [C, W], scales f32 [C, W // block])."""
+    rows = jnp.take(x.astype(jnp.float32), idx, axis=0)
+    C, W = rows.shape
+    q, s = quantize_ref(rows.reshape(C * (W // block), block))
+    return q.reshape(C, W), s.reshape(C, W // block)
+
+
 def quantize_ref(x: jnp.ndarray):
     """Blockwise int8 quantization of [G, B] f32. Returns (q int8 [G,B],
     scale f32 [G])."""

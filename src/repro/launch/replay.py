@@ -201,9 +201,11 @@ def main():
     ap.add_argument("--tasks-per-worker", type=int, default=1,
                     help="split work finer than one share per worker so "
                          "the dynamic queue can rebalance")
-    ap.add_argument("--straggler-factor", type=float, default=0.0,
+    ap.add_argument("--straggler-factor", type=float, default=None,
                     help="speculatively re-issue a task running this many "
-                         "times longer than expected (0 = off)")
+                         "times longer than expected (0 = off; default: "
+                         "measured — on at 3x when every task has a real "
+                         "cost estimate from the record profile, else off)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--plan-only", action="store_true",
                     help="print the plan and assignments, run nothing")
@@ -228,7 +230,7 @@ def main():
     from repro.core.query import merge_replay_logs
     from repro.replay import (DynamicExecutor, Task, TaskFailure,
                               balanced_shares, build_plan, contiguous_shares,
-                              share_cost)
+                              measured_straggler_factor, share_cost)
 
     # ---- plan ----
     if args.probe == "auto":
@@ -294,9 +296,19 @@ def main():
               f"{len(merged_epochs)}/{len(work)} work epochs merged",
               flush=True)
 
+    # measured default: with real cost estimates on every task (record-side
+    # block profile + learned restore model), speculation turns ON at the
+    # scheduler's default horizon; an explicit --straggler-factor (incl. 0)
+    # always wins
+    straggler = args.straggler_factor if args.straggler_factor is not None \
+        else measured_straggler_factor(tasks)
+    if args.straggler_factor is None and straggler > 0:
+        print(f"  straggler speculation: on (measured estimates, "
+              f"{straggler:g}x horizon)")
+
     t0 = time.time()
     ex = DynamicExecutor(tasks, run_task, args.nworkers,
-                         straggler_factor=args.straggler_factor,
+                         straggler_factor=straggler,
                          on_complete=on_complete)
     try:
         done = ex.run()

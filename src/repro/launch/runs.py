@@ -159,7 +159,8 @@ def cmd_diff(store: CheckpointStore, registry: RunRegistry, args) -> int:
 
 def cmd_logs(store: CheckpointStore, registry: RunRegistry, args) -> int:
     rows = log_records(args.store_root, run=args.run, key=args.key,
-                       include_replay=not args.no_replay)
+                       include_replay=not args.no_replay,
+                       inline_spill_bytes=args.inline_spill_bytes)
     if not rows:
         print("no log records found")
         return 0
@@ -175,7 +176,8 @@ def cmd_logs(store: CheckpointStore, registry: RunRegistry, args) -> int:
 
 def cmd_pivot(store: CheckpointStore, registry: RunRegistry, args) -> int:
     rows = pivot(args.store_root, *args.keys, run=args.run,
-                 include_replay=not args.no_replay)
+                 include_replay=not args.no_replay,
+                 inline_spill_bytes=args.inline_spill_bytes)
     if not rows:
         print("no log records found")
         return 0
@@ -233,6 +235,9 @@ def main(argv=None) -> int:
     p_logs.add_argument("--key", default=None, help="restrict to one log key")
     p_logs.add_argument("--no-replay", action="store_true",
                         help="record logs only (skip hindsight replay logs)")
+    p_logs.add_argument("--inline-spill-bytes", type=int, default=0,
+                        help="resolve spilled values at/below this size "
+                             "back to the actual value (0 = keep pointers)")
     p_piv = sub.add_parser("pivot", parents=[common],
                            help="one row per (run, epoch), keys as columns")
     p_piv.add_argument("keys", nargs="*",
@@ -240,6 +245,9 @@ def main(argv=None) -> int:
     p_piv.add_argument("--run", default=None, help="restrict to one run id")
     p_piv.add_argument("--no-replay", action="store_true",
                        help="record logs only (skip hindsight replay logs)")
+    p_piv.add_argument("--inline-spill-bytes", type=int, default=0,
+                       help="resolve spilled values at/below this size "
+                            "back to the actual value (0 = keep pointers)")
     args = ap.parse_args(argv)
 
     root = resolve_store_root(args.store_root)

@@ -14,5 +14,5 @@ from repro.replay.plan import (  # noqa: F401
     ReplayPlan, ReplayPlanError, Segment, build_plan, detect_probes_for_run,
     open_run_store)
 from repro.replay.scheduler import (  # noqa: F401
-    DynamicExecutor, Task, TaskFailure, balanced_shares, contiguous_shares,
-    share_cost)
+    DEFAULT_STRAGGLER_FACTOR, DynamicExecutor, Task, TaskFailure,
+    balanced_shares, contiguous_shares, measured_straggler_factor, share_cost)

@@ -331,8 +331,16 @@ def build_plan(run_dir: str,
         if all_keys else {"per_key": {}}
     per_key = st.get("per_key", {})
     avg_chunk = NOMINAL_CHUNK_BYTES
+    # learned restore cost model: measured read throughput and per-hop
+    # latency (fit from observed restores in FlorContext.finish, seeded by
+    # the calibration probe's read-back). Older stores only recorded
+    # write_bps — use it as a same-medium proxy before falling back to the
+    # constants.
     calib = store.get_meta("store_calib") or {}
-    read_bps = float(calib.get("write_bps") or DEFAULT_READ_BPS)
+    read_bps = float(calib.get("read_bps") or calib.get("write_bps")
+                     or DEFAULT_READ_BPS)
+    hop_s = float(calib["hop_s"]) if calib.get("hop_s") is not None \
+        else RESTORE_HOP_S
 
     segments = []
     for e in epochs:
@@ -365,7 +373,7 @@ def build_plan(run_dir: str,
                 continue          # re-executing blocks don't restore
             info = per_key.get(k) or {}
             depth = max(depth, int(info.get("depth") or 0))
-            restore_cost += RESTORE_HOP_S * (1 + int(info.get("depth") or 0))
+            restore_cost += hop_s * (1 + int(info.get("depth") or 0))
             restore_cost += int(info.get("direct_chunks") or 0) \
                 * avg_chunk / read_bps
         segments.append(Segment(

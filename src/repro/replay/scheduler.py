@@ -29,6 +29,21 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 MIN_STRAGGLER_HORIZON_S = 1.0
+# default speculation horizon multiplier once tasks carry MEASURED cost
+# estimates (record-side block profile + learned restore model): a task
+# running 3x its estimate is a straggler worth duplicating. Launchers apply
+# this only when estimates are measured — with fallback-constant estimates
+# the horizon would be noise, so speculation stays off unless asked for.
+DEFAULT_STRAGGLER_FACTOR = 3.0
+
+
+def measured_straggler_factor(tasks: list) -> float:
+    """The measured-default speculation policy: DEFAULT_STRAGGLER_FACTOR
+    when every task has a positive cost estimate (the plan had real
+    profile/calibration data to set horizons from), else 0.0 (off)."""
+    if tasks and all(t.est_cost_s > 0 for t in tasks):
+        return DEFAULT_STRAGGLER_FACTOR
+    return 0.0
 
 
 # ------------------------------------------------------------ partitioning --

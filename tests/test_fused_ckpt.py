@@ -1,0 +1,388 @@
+"""Kernel-fused checkpoint fast path: fused fingerprint+mask vs composed
+oracles, gather+quantize wire format, q8 manifest round-trips across dtypes,
+overlap-mode deferred accounting, structure-change fallback, and the learned
+restore cost model feeding the replay planner."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointPipeline, CheckpointStore
+from repro.kernels import ref
+from repro.kernels.ops import (fingerprint_and_changed, fingerprint_leaf,
+                               gather_quantize_blocks, q8_decode_chunk,
+                               q8_encode_chunk, quantizable_dtype)
+
+
+@pytest.fixture()
+def store(tmp_path):
+    return CheckpointStore(str(tmp_path / "store"))
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    return all(str(np.asarray(x).dtype) == str(np.asarray(y).dtype)
+               and np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+# ------------------------------------------------------------ fused kernels
+def test_fused_fingerprint_changed_matches_composed():
+    """One fused pass == fingerprint then compare, digests and mask both."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (8 * 256,))
+    prev = fingerprint_leaf(x, 256)
+    x2 = x.at[100].set(x[100] + 1.0)
+    digest, mask = fingerprint_and_changed(x2, prev, 256)
+    np.testing.assert_array_equal(np.asarray(digest),
+                                  np.asarray(fingerprint_leaf(x2, 256)))
+    exp = np.any(np.asarray(digest) != np.asarray(prev), axis=1)
+    np.testing.assert_array_equal(np.asarray(mask).astype(bool), exp)
+    assert int(np.asarray(mask).sum()) == 1         # exactly one chunk moved
+
+
+def test_fused_unchanged_leaf_all_zero_mask():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4096,))
+    _, mask = fingerprint_and_changed(x, fingerprint_leaf(x, 512), 512)
+    assert int(np.asarray(mask).sum()) == 0
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_gather_quantize_wire_roundtrip(dtype):
+    """Fused gather+quantize rows encode/decode within the blockwise bound
+    for every quantizable dtype."""
+    x = (jax.random.normal(jax.random.PRNGKey(2), (4 * 512,)) * 3
+         ).astype(dtype)
+    idx = jnp.asarray([0, 2, 3], jnp.int32)
+    q, s = gather_quantize_blocks(x, idx, 512, 256)
+    host = np.asarray(x.astype(jnp.float32))
+    for j, i in enumerate([0, 2, 3]):
+        payload = q8_encode_chunk(np.asarray(q)[j], np.asarray(s)[j], 512,
+                                  256)
+        back = np.frombuffer(q8_decode_chunk(payload, str(np.asarray(x).dtype)),
+                             dtype=np.asarray(x).dtype)
+        chunk = host[i * 512:(i + 1) * 512]
+        amax = np.abs(chunk).max()
+        assert np.abs(back.astype(np.float32) - chunk).max() \
+            <= max(amax, 1e-12) / 126
+
+
+def test_quantizable_dtype_gate():
+    assert quantizable_dtype("float32") and quantizable_dtype("bfloat16") \
+        and quantizable_dtype("float16")
+    # int/8-byte dtypes pack multiple elements or raw words per u32 word —
+    # chunk rows would not align with fingerprint rows
+    assert not quantizable_dtype("int32")
+    assert not quantizable_dtype("float64")
+    assert not quantizable_dtype("uint8")
+
+
+# ------------------------------------------------------ pipeline q8 slots --
+def _tree(step, dtype=jnp.float32):
+    frozen = jax.random.normal(jax.random.PRNGKey(0), (64 * 256,))
+    return {"frozen": frozen,
+            "head": jnp.full((256,), step, jnp.float32),
+            "opt": {"mu": (jnp.arange(256, dtype=jnp.float32) * step / 99
+                           ).astype(dtype)}}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_q8_slot_roundtrip_over_delta_chain(store, dtype):
+    """Quantized slot restores within the q8 bound through full AND delta
+    manifests; exact slots stay bit-identical; per-chunk enc resolves
+    through the parent chain."""
+    pipe = CheckpointPipeline(store, chunk_words=256, full_every=3,
+                              async_stage=False, quantize_slots=("mu",))
+    trees = {}
+    for i in range(7):
+        trees[i] = _tree(float(i + 1), dtype)
+        pipe.submit(f"ck{i}", trees[i], scope="train")
+    pipe.close()
+    for i in range(7):
+        back = store.get_tree(f"ck{i}")
+        assert np.array_equal(np.asarray(back["['frozen']"]),
+                              np.asarray(trees[i]["frozen"]))
+        assert np.array_equal(np.asarray(back["['head']"]),
+                              np.asarray(trees[i]["head"]))
+        mu_true = np.asarray(trees[i]["opt"]["mu"].astype(jnp.float32))
+        mu_back = np.asarray(back["['opt']['mu']"]).astype(np.float32)
+        assert str(back["['opt']['mu']"].dtype) == str(np.asarray(
+            trees[i]["opt"]["mu"]).dtype)
+        amax = np.abs(mu_true).max()
+        assert np.abs(mu_back - mu_true).max() <= max(amax, 1e-12) / 126
+
+
+def test_q8_enc_survives_resolution_and_unchanged_chunks(store):
+    """A q8 chunk recorded in an ancestor manifest keeps its encoding when
+    inherited by a descendant delta (enc travels with the hash)."""
+    pipe = CheckpointPipeline(store, chunk_words=256, full_every=10,
+                              async_stage=False, quantize_slots=("mu",))
+    t0 = _tree(1.0)
+    pipe.submit("ck0", t0, scope="train")
+    # mu UNCHANGED in ck1: its chunks (and their q8 enc) must inherit
+    t1 = {"frozen": t0["frozen"],
+          "head": t0["head"] + 1.0, "opt": {"mu": t0["opt"]["mu"]}}
+    pipe.submit("ck1", t1, scope="train")
+    pipe.close()
+    resolved = store.resolve_manifest("ck1")
+    mu = next(lf for lf in resolved["leaves"]
+              if lf["path"] == "['opt']['mu']")
+    assert mu.get("leaf_enc") == "q8"
+    assert all(e == "q8" for e in mu["enc"])
+    back = store.get_tree("ck1")
+    mu_true = np.asarray(t1["opt"]["mu"])
+    assert np.abs(np.asarray(back["['opt']['mu']"]) - mu_true).max() \
+        <= max(np.abs(mu_true).max(), 1e-12) / 126
+
+
+def test_non_quantizable_dtype_slot_stays_raw(store):
+    """A quantize_slots match on an int leaf is ignored (exact path)."""
+    pipe = CheckpointPipeline(store, chunk_words=256, async_stage=False,
+                              quantize_slots=("counts",))
+    tree = {"counts": jnp.arange(1024, dtype=jnp.int32),
+            "w": jnp.ones((256,), jnp.float32)}
+    pipe.submit("ck0", tree, scope="train")
+    pipe.close()
+    back = store.get_tree("ck0", like=tree)
+    assert _leaves_equal(tree, back)
+    m = store.get_manifest("ck0")
+    assert all("leaf_enc" not in lf for lf in m["leaves"])
+
+
+def test_policy_flip_forces_full_manifest(store):
+    """Turning quantization on for an existing slot changes the structure
+    signature: next submit writes a FULL manifest (no silent mixed chain)."""
+    pipe = CheckpointPipeline(store, chunk_words=256, full_every=100,
+                              async_stage=False)
+    pipe.submit("ck0", _tree(1.0), scope="train")
+    pipe.submit("ck1", _tree(2.0), scope="train")
+    assert store.get_manifest("ck1")["kind"] == "delta"
+    pipe.close()
+    pipe2 = CheckpointPipeline(store, chunk_words=256, full_every=100,
+                               async_stage=False, quantize_slots=("mu",))
+    pipe2.warm_start("train", "ck1", store.resolve_manifest("ck1"),
+                     store.get_tree("ck1"))
+    t = _tree(3.0)
+    s = pipe2.submit("ck2", t, scope="train")
+    pipe2.close()
+    assert s["kind"] == "full"          # policy flip != silent inheritance
+    back = store.get_tree("ck2")
+    mu_true = np.asarray(t["opt"]["mu"])
+    assert np.abs(np.asarray(back["['opt']['mu']"]) - mu_true).max() \
+        <= max(np.abs(mu_true).max(), 1e-12) / 126
+
+
+def test_structure_change_fallback_with_quantized_slot(store):
+    """Reshaping a quantized slot mid-run falls back to a full manifest and
+    still restores correctly (tracker forgets the stale digests)."""
+    pipe = CheckpointPipeline(store, chunk_words=256, full_every=100,
+                              async_stage=False, quantize_slots=("mu",))
+    pipe.submit("ck0", _tree(1.0), scope="train")
+    pipe.submit("ck1", _tree(2.0), scope="train")
+    grown = _tree(3.0)
+    grown["opt"]["mu"] = jnp.arange(1024, dtype=jnp.float32) / 7
+    s = pipe.submit("ck2", grown, scope="train")
+    pipe.close()
+    assert s["kind"] == "full"
+    back = store.get_tree("ck2")
+    mu_true = np.asarray(grown["opt"]["mu"])
+    got = np.asarray(back["['opt']['mu']"])
+    assert got.shape == mu_true.shape
+    assert np.abs(got - mu_true).max() \
+        <= max(np.abs(mu_true).max(), 1e-12) / 126
+    assert np.array_equal(np.asarray(back["['frozen']"]),
+                          np.asarray(grown["frozen"]))
+
+
+# ------------------------------------------------------------ overlap mode --
+def test_overlap_defers_transfer_and_restores(store):
+    """Overlap submits report no transfer figure (gather is deferred);
+    materialized stats carry the measured bytes; restores stay correct."""
+    pipe = CheckpointPipeline(store, chunk_words=256, full_every=4,
+                              overlap=True, quantize_slots=("mu",))
+    assert pipe.overlap
+    trees = {}
+    for i in range(6):
+        trees[i] = _tree(float(i + 1))
+        s = pipe.submit(f"ck{i}", trees[i], scope="train")
+        assert s["overlap"] and s["transferred_bytes"] is None
+    pipe.drain()
+    mats = list(pipe.stats)
+    pipe.close()
+    assert len(mats) == 6
+    assert all(m["transferred_bytes"] is not None and m["overlap"]
+               for m in mats)
+    deltas = [m for m in mats if m["kind"] == "delta"]
+    assert deltas and all(m["transferred_bytes"] < m["logical_bytes"] * 0.2
+                          for m in deltas)
+    for i in range(6):
+        back = store.get_tree(f"ck{i}")
+        assert np.array_equal(np.asarray(back["['frozen']"]),
+                              np.asarray(trees[i]["frozen"]))
+        assert np.array_equal(np.asarray(back["['head']"]),
+                              np.asarray(trees[i]["head"]))
+
+
+def test_overlap_requires_async_stage(store):
+    """overlap composes with the async writer only; a sync pipeline keeps
+    the one-phase path."""
+    pipe = CheckpointPipeline(store, async_stage=False, overlap=True)
+    assert not pipe.overlap
+    pipe.close()
+
+
+# --------------------------------------------------- learned cost models --
+def test_context_overlap_charges_foreground_only(tmp_path):
+    """Overlap mode: M_i sees only the submit stall; writer-thread finalize
+    lands in the controller's background accumulator; tfrac still learned
+    from the deferred measured transfer."""
+    from repro.core.context import FlorContext
+    ctx = FlorContext(str(tmp_path / "run"), "record", adaptive=True,
+                      ckpt_overlap=True, ckpt_quantize_slots=("mu",))
+    try:
+        st = _tree(1.0)
+        for e in range(4):
+            ctx.begin_epoch(e)
+            st = {"frozen": st["frozen"], "head": st["head"] + 1.0,
+                  "opt": {"mu": st["opt"]["mu"] + 0.5}}
+            ctx.controller.observe_execution("train", 1.0)
+            ctx.submit_checkpoint("train", ctx.block_key("train"), st, {})
+            ctx.advance_block("train")
+        ctx.pipeline.drain()
+        snap = ctx.controller.snapshot()
+        assert snap["bg_s"] > 0          # finalize landed off the step path
+        b = ctx.controller.blocks["train"]
+        assert b.M.count == 4            # every materialization observed
+        assert b.pending == 0
+        assert b.tfrac.count > 0 and b.tfrac.value < 1.0
+    finally:
+        ctx.finish()
+
+
+def test_calibration_persists_read_bps(tmp_path):
+    from repro.core.context import FlorContext
+    ctx = FlorContext(str(tmp_path / "run"), "record", adaptive=True)
+    calib = ctx.store.get_meta("store_calib")
+    ctx.finish()
+    assert calib["write_bps"] >= 1e7
+    assert calib["read_bps"] >= 1e7
+
+
+def test_restore_stats_feed_learned_model(tmp_path):
+    """restore_checkpoint records bytes+hops; finish() persists a fitted
+    read_bps into store calibration meta."""
+    from repro.core.context import FlorContext
+    ctx = FlorContext(str(tmp_path / "run"), "record", adaptive=False)
+    st = _tree(1.0)
+    for e in range(3):
+        ctx.begin_epoch(e)
+        st = {"frozen": st["frozen"], "head": st["head"] + 1.0,
+              "opt": {"mu": st["opt"]["mu"]}}
+        ctx.submit_checkpoint("train", ctx.block_key("train"), st, {})
+        ctx.advance_block("train")
+    ctx.pipeline.drain()
+    _, dt = ctx.restore_checkpoint("train@2.0")
+    rec = ctx.restore_stats[-1]
+    assert rec["bytes"] > 0 and rec["hops"] >= 1   # delta chain walked
+    ctx.finish()
+    calib = CheckpointStore(str(tmp_path / "run" / "store")) \
+        .get_meta("store_calib")
+    assert calib["read_bps"] > 0 and calib["restore_samples"] == 1
+
+
+def test_fit_restore_model_shapes():
+    from repro.core.context import _fit_restore_model
+    assert _fit_restore_model([]) is None
+    # single sample: effective throughput only
+    one = _fit_restore_model([{"restore_s": 0.5, "bytes": 5 * 10**8,
+                               "hops": 0}])
+    assert one == {"read_bps": pytest.approx(1e9)}
+    # spanning depths: both coefficients recovered from synthetic data
+    bps, hop = 2e9, 0.004
+    samples = [{"restore_s": b / bps + h * hop, "bytes": b, "hops": h}
+               for b, h in [(10**8, 0), (2 * 10**8, 1), (10**8, 3),
+                            (4 * 10**8, 2)]]
+    fit = _fit_restore_model(samples)
+    assert fit["read_bps"] == pytest.approx(bps, rel=1e-3)
+    assert fit["hop_s"] == pytest.approx(hop, rel=1e-3)
+
+
+def test_plan_consumes_learned_calib(tmp_path):
+    """build_plan prices restores from the LEARNED calibration meta: bumping
+    hop_s / dropping read_bps must raise its restore-cost estimates."""
+    import repro.flor as flor
+    from repro.replay import build_plan
+    run = str(tmp_path / "run")
+    with flor.Session(run, record=flor.RecordSpec(adaptive=False)) as sess:
+        state = {"x": jnp.zeros((8,), jnp.float32)}
+        with sess.checkpointing(state=state) as ckpt:
+            for e in sess.loop("epochs", range(4)):
+                for _ in sess.loop("train", range(1)):
+                    ckpt.state = {"x": ckpt.state["x"] + (e + 1)}
+    store = CheckpointStore(os.path.join(run, "store"))
+    base = build_plan(run, probed=set())
+    calib = dict(store.get_meta("store_calib") or {})
+    calib.update({"read_bps": 1e9, "hop_s": 10.0})
+    store.put_meta("store_calib", calib)
+    slow = build_plan(run, probed=set())
+    rc_base = sum(s.restore_cost_s for s in base.segments)
+    rc_slow = sum(s.restore_cost_s for s in slow.segments)
+    # every priced restore now pays >= 10s of hop latency
+    assert rc_slow > rc_base + 9
+
+
+def test_measured_straggler_default():
+    from repro.replay.scheduler import (DEFAULT_STRAGGLER_FACTOR, Task,
+                                        measured_straggler_factor)
+    measured = [Task(task_id=0, visits=[], est_cost_s=2.0),
+                Task(task_id=1, visits=[], est_cost_s=0.5)]
+    unmeasured = [Task(task_id=0, visits=[], est_cost_s=2.0),
+                  Task(task_id=1, visits=[], est_cost_s=0.0)]
+    assert measured_straggler_factor(measured) == DEFAULT_STRAGGLER_FACTOR
+    assert measured_straggler_factor(unmeasured) == 0.0
+    assert measured_straggler_factor([]) == 0.0
+
+
+# --------------------------------------------------------- session surface --
+def test_recordspec_fused_knobs_validation():
+    from repro.core.session import RecordSpec
+    spec = RecordSpec(ckpt_quantize_slots=["mu", "nu"], ckpt_overlap=True)
+    assert spec.ckpt_quantize_slots == ("mu", "nu")
+    kw = spec.to_kwargs()
+    assert kw["ckpt_quantize_slots"] == ("mu", "nu") and kw["ckpt_overlap"]
+    with pytest.raises(ValueError):
+        RecordSpec(ckpt_quantize_slots="mu")        # bare string
+    with pytest.raises(ValueError):
+        RecordSpec(ckpt_overlap=True, async_materialize=False)
+
+
+def test_session_fused_end_to_end(tmp_path):
+    """RecordSpec knobs reach the pipeline through a Session; exact slots
+    restore bit-identically, quantized slot within bound."""
+    import repro.flor as flor
+    from repro.core.session import RecordSpec
+    run = str(tmp_path / "run")
+    spec = RecordSpec(adaptive=False, ckpt_quantize_slots=("mu",),
+                      ckpt_overlap=True)
+    st = _tree(1.0)
+    with flor.Session(run, record=spec):
+        ctx = flor.get_context()
+        assert ctx.pipeline.quantize_slots == ("mu",)
+        assert ctx.pipeline.overlap
+        for e in range(3):
+            ctx.begin_epoch(e)
+            st = {"frozen": st["frozen"], "head": st["head"] + 1.0,
+                  "opt": {"mu": st["opt"]["mu"] + 0.25}}
+            ctx.submit_checkpoint("train", ctx.block_key("train"), st, {})
+            ctx.advance_block("train")
+        ctx.pipeline.drain()
+        back = ctx.store.get_tree("train@2.0")
+        assert np.array_equal(np.asarray(back["['frozen']"]),
+                              np.asarray(st["frozen"]))
+        assert np.array_equal(np.asarray(back["['head']"]),
+                              np.asarray(st["head"]))
+        mu_true = np.asarray(st["opt"]["mu"])
+        assert np.abs(np.asarray(back["['opt']['mu']"]) - mu_true).max() \
+            <= max(np.abs(mu_true).max(), 1e-12) / 126
