@@ -1,0 +1,194 @@
+"""Mesh-sharded record bandwidth + resharded restore correctness.
+
+Measures the tentpole claim of the sharded checkpoint path: on an 8-device
+(2, 4) mesh, every device runs the fused fingerprint+gather pass over its
+OWN shard and ships bytes only to its host's store shard, so aggregate
+record bandwidth scales with hosts instead of serializing through a
+gather-to-one-host bottleneck.
+
+    sharded_wall(ckpt)  = max over hosts (local stall + local shard write)
+    baseline_wall(ckpt) = device_get(full tree) + flat sync pipeline submit
+
+(Hosts run concurrently in production; this single-process simulation runs
+them serially and reports the max — the honest production figure.) Gates:
+
+  * aggregate sharded record bandwidth >= 4x the gather-to-one-host
+    baseline on the 8-device mesh;
+  * restores are BIT-IDENTICAL to the recorded tree when resharded onto a
+    (4, 2) mesh, a (1, 8) mesh, and a plain unsharded host tree.
+
+The measurement needs 8 simulated devices (XLA_FLAGS set before jax
+imports), so ``run(rows)`` re-execs itself as a ``--child`` subprocess and
+parses one JSON line back — same pattern the sharded tests use.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+from benchmarks.common import Rows
+
+SMOKE = bool(os.environ.get("SMOKE"))
+MESH_SHAPE = (2, 4)
+RESHARD_SHAPES = ((4, 2), (1, 8))
+SIDE = 512 if SMOKE else 2048         # three f32 (SIDE, SIDE) leaves
+N_CKPTS = 3 if SMOKE else 5
+MIN_SPEEDUP = 4.0
+
+
+def _child() -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.checkpoint import (CheckpointPipeline, CheckpointStore,
+                                  restore_sharded_tree)
+
+    tmp = "/tmp/bench_sharded_ckpt"
+    if os.path.isdir(tmp):
+        shutil.rmtree(tmp)
+    store = CheckpointStore(os.path.join(tmp, "store"))
+
+    devs = jax.devices()
+    mesh = Mesh(np.array(devs).reshape(MESH_SHAPE), ("data", "model"))
+    specs = {"win": P("data", "model"), "wout": P("model", "data"),
+             "embed": P("data", "model"), "scale": P()}
+
+    def make_state(step):
+        # element-wise construction: identical bytes under any sharding.
+        # sin(arange) is dense O(1) noise — zstd can't cheat, and the
+        # multiplicative step is a RELATIVE change, so every element's bytes
+        # really differ between checkpoints (an additive epsilon would be
+        # absorbed by f32 rounding on large values, silently turning the
+        # full-change workload into a near-empty delta)
+        idx = jnp.arange(SIDE * SIDE, dtype=jnp.float32).reshape(SIDE, SIDE)
+        noise = jnp.sin(idx)
+        st = {"scale": jnp.float32(1.0 + 0.001 * (step + 3))}
+        for i, k in enumerate(sorted(k for k in specs if k != "scale")):
+            st[k] = noise * ((i + 1) * (1.0 + 0.001 * (step + 3)))
+        return {k: jax.device_put(v, NamedSharding(mesh, specs[k]))
+                for k, v in st.items()}
+
+    logical = 3 * SIDE * SIDE * 4
+
+    # ---- sharded record: per-device fused pass -> per-host store shard ----
+    pipe = CheckpointPipeline(store, async_stage=False, mesh=mesh)
+    # two warm submits: the first compiles the no-previous fingerprint
+    # variant, the second the with-previous (delta) variant — both must be
+    # out of the measured window
+    pipe.submit("warm@0.0", make_state(-2), block=True)
+    pipe.submit("warm@1.0", make_state(-1), block=True)
+    sh_walls = []
+    for i in range(N_CKPTS):
+        pipe.submit(f"train@{i}.0", make_state(i), block=True)
+        stat = pipe.stats[-1]
+        per_host = {h: stat["shard_stall_s"].get(h, 0.0) + w
+                    for h, w in stat["shard_write_s"].items()}
+        sh_walls.append(max(per_host.values()))
+    n_shards = len(pipe.stats[-1]["shard_write_s"])
+    pipe.close()
+
+    # ---- baseline: gather the full tree to one host, flat sync write ----
+    flat_store = CheckpointStore(os.path.join(tmp, "flat_store"))
+    flat = CheckpointPipeline(flat_store, async_stage=False)
+    for i, step in enumerate((-2, -1)):
+        host_w = {k: np.asarray(jax.device_get(v))
+                  for k, v in make_state(step).items()}
+        flat.submit(f"warm@{i}.0", host_w, block=True)
+    import time
+    base_walls = []
+    for i in range(N_CKPTS):
+        state = make_state(i)
+        t0 = time.perf_counter()
+        host = {k: np.asarray(jax.device_get(v)) for k, v in state.items()}
+        flat.submit(f"train@{i}.0", host, block=True)
+        base_walls.append(time.perf_counter() - t0)
+    flat.close()
+
+    sh_bw = logical / (sum(sh_walls) / len(sh_walls))
+    base_bw = logical / (sum(base_walls) / len(base_walls))
+
+    # ---- resharded restores: bit-identical on every target layout ----
+    last = f"train@{N_CKPTS - 1}.0"
+    truth = {k: np.asarray(jax.device_get(v))
+             for k, v in make_state(N_CKPTS - 1).items()}
+    flat_like = {k: np.empty_like(v) for k, v in truth.items()}
+    got = store.get_tree(last, like=flat_like)
+    identical = {"unsharded": all(
+        np.array_equal(got[k], truth[k]) for k in truth)}
+    for shape in RESHARD_SHAPES:
+        m2 = Mesh(np.array(devs).reshape(shape), ("data", "model"))
+        out = restore_sharded_tree(store, last, m2)
+        identical[f"{shape[0]}x{shape[1]}"] = all(
+            np.array_equal(np.asarray(jax.device_get(out[f"['{k}']"])),
+                           truth[k]) for k in truth)
+
+    # ---- per-shard read calibration: the planner's shard_read_bps ----
+    resolved = store.resolve_manifest(last)
+    shard_read_bps = {}
+    for hid, member in sorted(resolved["members_resolved"].items()):
+        t0 = time.perf_counter()
+        nbytes = 0
+        for leaf in member["leaves"]:
+            for h in leaf.get("chunks") or (leaf.get("delta") or {}).values():
+                nbytes += len(store.get_chunk(h, shard=hid))
+        dt = max(time.perf_counter() - t0, 1e-9)
+        shard_read_bps[str(hid)] = nbytes / dt
+    calib = dict(store.get_meta("store_calib") or {})
+    calib["shard_read_bps"] = shard_read_bps
+    store.put_meta("store_calib", calib)
+
+    return {"logical_mb": logical / 2**20, "n_store_shards": n_shards,
+            "sharded_wall_s": sum(sh_walls) / len(sh_walls),
+            "baseline_wall_s": sum(base_walls) / len(base_walls),
+            "sharded_bw_mbs": sh_bw / 2**20,
+            "baseline_bw_mbs": base_bw / 2**20,
+            "speedup": sh_bw / base_bw, "identical": identical,
+            "shard_read_bps_spread":
+                max(shard_read_bps.values()) / min(shard_read_bps.values())}
+
+
+def run(rows: Rows):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join(
+        ["src", ".", env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.sharded_ckpt", "--child"],
+        env=env, capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(f"sharded_ckpt child failed rc={proc.returncode}:"
+                           f"\n{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}")
+    res = json.loads(proc.stdout.strip().splitlines()[-1])
+
+    mesh_note = f"(2,4) mesh, {res['n_store_shards']} store shards, " \
+                f"{res['logical_mb']:.0f} MiB state"
+    rows.add("sharded_ckpt", "record_bw_sharded_mbs",
+             round(res["sharded_bw_mbs"], 1), mesh_note)
+    rows.add("sharded_ckpt", "record_bw_gather_mbs",
+             round(res["baseline_bw_mbs"], 1), "gather-to-one-host baseline")
+    rows.add("sharded_ckpt", "record_bw_speedup", round(res["speedup"], 2),
+             f"gate >= {MIN_SPEEDUP}x")
+    for layout, ok in sorted(res["identical"].items()):
+        rows.add("sharded_ckpt", f"restore_identical_{layout}", bool(ok),
+                 "bit-identical resharded restore")
+    rows.add("sharded_ckpt", "shard_read_bps_spread",
+             round(res["shard_read_bps_spread"], 2),
+             "max/min learned per-shard read rate")
+
+    assert res["speedup"] >= MIN_SPEEDUP, \
+        f"sharded record bandwidth {res['speedup']:.2f}x < {MIN_SPEEDUP}x"
+    assert all(res["identical"].values()), \
+        f"resharded restore not bit-identical: {res['identical']}"
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        print(json.dumps(_child()))
+    else:
+        run(Rows())

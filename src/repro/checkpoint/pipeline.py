@@ -54,6 +54,16 @@ transparently on restore. Exact slots restore bit-identical; q8 slots
 restore with per-element error bounded by half a quantization step
 (absmax_block / 254).
 
+Mesh-aware record (``mesh=``): the same flow runs PER DEVICE SHARD — each
+shard's fused fingerprint+gather pass reads only its own buffer, its wire
+chunks land in its host's store shard, and the job writes one v3 member
+manifest per store shard plus a v4 stitching manifest recording the global
+layout (per-leaf shape, recorded PartitionSpec, shard bounds + placement).
+Delta chains run per shard (``<key>.shard<h>``), so inheritance, full-every
+bounds and structure-change fallbacks behave exactly as in the flat path —
+a layout change is a structure change and forces a full manifest. See
+checkpoint/mesh.py for the restore-side stitch/reshard geometry.
+
 A delta manifest inherits every unlisted chunk hash from its parent chain
 (`CheckpointStore.resolve_manifest`). Chains are bounded: a FULL manifest is
 written (a) for the first checkpoint of a scope, (b) every `full_every`
@@ -108,11 +118,25 @@ class CheckpointPipeline:
                  async_stage: bool = True, max_queue: int = 2,
                  on_materialized=None,
                  quantize_slots: Optional[Iterable[str]] = None,
-                 overlap: bool = False):
+                 overlap: bool = False,
+                 mesh=None, shard_axes: Iterable[str] = ()):
         self.store = store
         self.chunk_words = chunk_words
         self.full_every = max(1, int(full_every))
         self.tracker = DeltaTracker(chunk_words)
+        # mesh-aware record: each device shard runs the fused fingerprint
+        # pass over its OWN buffer, its chunks land in its host's store
+        # shard, and a v4 stitching manifest records the layout. shard_axes
+        # picks which mesh axes map onto store shards (default: all — one
+        # store shard per device).
+        self.mesh = mesh
+        self.shard_axes = tuple(shard_axes or ())
+        if mesh is not None:
+            from repro.checkpoint.mesh import device_maps, mesh_meta
+            self._dev_ord, self._dev_host = device_maps(mesh,
+                                                        self.shard_axes)
+            self._mesh_meta = mesh_meta(mesh, self.shard_axes)
+        self._mesh_meta_written = False
         # per-slot lossy policy: leaf paths matching any of these names /
         # glob patterns are stored blockwise-int8 (q8 wire format) when the
         # dtype supports it. Empty (the default) = every leaf exact, so the
@@ -158,6 +182,8 @@ class CheckpointPipeline:
         queue is full and block=False — the checkpoint is skipped and the
         device digest state is rolled back so the next delta stays correct).
         """
+        if self.mesh is not None:
+            return self._submit_sharded(key, tree, meta, scope, block)
         import jax
         t_submit0 = time.perf_counter()
         flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
@@ -276,6 +302,9 @@ class CheckpointPipeline:
         return True
 
     def _make_job(self, payload: dict):
+        if payload.get("sharded"):
+            return lambda store: self._sharded_job(payload, store)
+
         def job(store):
             scope = payload["scope"]
             if payload.get("overlap"):
@@ -371,6 +400,260 @@ class CheckpointPipeline:
                     "new_bytes": new_bytes, "new_chunks": new_chunks}
         return job
 
+    # ------------------------------------------------------ sharded record --
+    def _submit_sharded(self, key: str, tree: Any, meta: Optional[dict],
+                        scope: str, block: bool) -> Optional[dict]:
+        """Mesh-aware submit: per pytree leaf, enumerate the disjoint owner
+        shards (checkpoint/mesh.py) and run the fused fingerprint+gather
+        pass on EACH shard's own device buffer — no all-gather; a shard's
+        bytes only move device -> its host's store shard. Emits one v3
+        member manifest per store shard plus a v4 stitching manifest."""
+        import jax
+        from repro.checkpoint.mesh import leaf_spec_entries, owned_shards
+        t_submit0 = time.perf_counter()
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        prev_sig = self._sig.get(scope, {})
+        sig: dict[str, tuple] = {}
+        entries: list[dict] = []       # one per (leaf, device shard)
+        layout: list[dict] = []        # global-manifest leaves
+        rollback: list[tuple[str, Any]] = []
+        transferred = 0
+        logical = 0
+        changed_chunks_n = 0
+        total_chunks_n = 0
+        structure_changed = False
+        shard_stall: dict[int, float] = {}
+        for path, leaf in flat:
+            pstr = jax.tree_util.keystr(path)
+            if not hasattr(leaf, "dtype"):
+                leaf = np.asarray(leaf)
+            dtype = str(leaf.dtype)
+            shape = list(getattr(leaf, "shape", ()))
+            nbytes = _leaf_nbytes(leaf)
+            enc = self._slot_enc(pstr, dtype)
+            if nbytes == 0:
+                sig[pstr] = (dtype, tuple(shape), enc, ())
+                layout.append({"path": pstr, "dtype": dtype, "shape": shape,
+                               "nbytes": 0, "spec": None, "shards": []})
+                continue
+            shards = owned_shards(leaf, self._dev_ord, self._dev_host)
+            # the placement is part of the structure signature: a layout
+            # change (resharded mid-run, mesh swap) forces a FULL manifest —
+            # per-shard digests from another layout cover different bytes
+            mesh_sig = tuple((s["sid"], s["hid"],
+                              tuple(map(tuple, s["bounds"])))
+                             for s in shards)
+            sig[pstr] = (dtype, tuple(shape), enc, mesh_sig)
+            layout.append({"path": pstr, "dtype": dtype, "shape": shape,
+                           "nbytes": nbytes,
+                           "spec": leaf_spec_entries(leaf),
+                           "shards": [{"sid": s["sid"], "hid": s["hid"],
+                                       "bounds": s["bounds"]}
+                                      for s in shards]})
+            logical += nbytes
+            if prev_sig.get(pstr) != sig[pstr]:
+                structure_changed = True
+                for s in shards:
+                    self.tracker.forget(f"{scope}::{pstr}::s{s['sid']}")
+            for s in shards:
+                tpath = f"{scope}::{pstr}::s{s['sid']}"
+                rollback.append((tpath, self.tracker._digests.get(tpath)))
+                local = s["data"]
+                lnb = _leaf_nbytes(local)
+                n_chunks = -(-lnb // (self.chunk_words
+                                      * native_bytes_per_word(dtype)))
+                ent = {"path": pstr, "sid": s["sid"], "hid": s["hid"],
+                       "bounds": s["bounds"], "dtype": dtype,
+                       "shape": list(getattr(local, "shape", ())),
+                       "nbytes": lnb, "n_chunks": n_chunks, "enc": enc}
+                total_chunks_n += n_chunks
+                t0 = time.perf_counter()
+                if self.overlap:
+                    ent["handle"] = self.tracker.delta_dispatch(
+                        tpath, _fp_view(local), quantize=(enc == "q8"))
+                else:
+                    d = self.tracker.delta(tpath, _fp_view(local),
+                                           quantize=(enc == "q8"))
+                    idx_keep, chunks_keep, t_bytes = _encode_changed(
+                        d, ent, self.chunk_words)
+                    ent["changed_idx"] = idx_keep
+                    ent["chunks"] = chunks_keep
+                    transferred += t_bytes
+                    changed_chunks_n += len(idx_keep)
+                # per-host foreground cost: hosts run concurrently in a
+                # real deployment, so the simulated per-checkpoint wall is
+                # max over hosts, not the serial sum this process pays
+                shard_stall[s["hid"]] = shard_stall.get(s["hid"], 0.0) \
+                    + (time.perf_counter() - t0)
+                entries.append(ent)
+        if set(prev_sig) - set(sig):
+            structure_changed = True
+        last = self._last_key.get(scope)
+        since = self._since_full.get(scope, 0)
+        full = (last is None or structure_changed
+                or since + 1 >= self.full_every)
+        payload = {
+            "key": key, "scope": scope, "meta": meta or {},
+            "sharded": True, "mesh": self._mesh_meta,
+            "kind": "full" if full else "delta",
+            "parent": None if full else last,
+            "treedef": str(treedef), "chunk_words": self.chunk_words,
+            "entries": entries, "layout": layout, "overlap": self.overlap,
+            "transferred_bytes": None if self.overlap else transferred,
+            "logical_bytes": logical,
+            "changed_chunks": None if self.overlap else changed_chunks_n,
+            "total_chunks": total_chunks_n,
+            "shard_stall_s": shard_stall,
+            "submit_stall_s": time.perf_counter() - t_submit0,
+        }
+        ok = self._dispatch(payload, block=block)
+        if not ok:
+            for tpath, prev in rollback:
+                if prev is None:
+                    self.tracker.forget(tpath)
+                else:
+                    self.tracker._digests[tpath] = prev
+            return None
+        self._sig[scope] = sig
+        self._last_key[scope] = key
+        self._since_full[scope] = 0 if full else since + 1
+        return {"key": key, "kind": payload["kind"], "sharded": True,
+                "parent": payload["parent"],
+                "transferred_bytes": payload["transferred_bytes"],
+                "logical_bytes": logical,
+                "changed_chunks": payload["changed_chunks"],
+                "total_chunks": total_chunks_n,
+                "overlap": self.overlap,
+                "n_store_shards": self._mesh_meta["n_store_shards"],
+                "shard_stall_s": dict(shard_stall),
+                "submit_stall_s": payload["submit_stall_s"]}
+
+    def _sharded_job(self, payload: dict, store) -> dict:
+        """Writer half of a sharded checkpoint: per store shard, write the
+        changed chunks into that shard's pool and a v3 member manifest
+        (chained ``<key>.shard<h>`` -> ``<parent>.shard<h>``); then the v4
+        stitching manifest. Members land BEFORE the global manifest, so a
+        crash can leave orphan members but never a global that references a
+        missing one."""
+        scope = payload["scope"]
+        if payload.get("overlap"):
+            transferred = 0
+            changed_n = 0
+            for ent in payload["entries"]:
+                h = ent.pop("handle", None)
+                if h is None:
+                    continue
+                t0 = time.perf_counter()
+                d = self.tracker.finalize(h)
+                idx_keep, chunks_keep, t_bytes = _encode_changed(
+                    d, ent, payload["chunk_words"])
+                ent["changed_idx"] = idx_keep
+                ent["chunks"] = chunks_keep
+                transferred += t_bytes
+                changed_n += len(idx_keep)
+                ss = payload["shard_stall_s"]
+                ss[ent["hid"]] = ss.get(ent["hid"], 0.0) \
+                    + (time.perf_counter() - t0)
+            payload["transferred_bytes"] = transferred
+            payload["changed_chunks"] = changed_n
+        hashes_map = self._hashes.setdefault(scope, {})
+        encs_map = self._encs.setdefault(scope, {})
+        full = payload["kind"] == "full"
+        key, parent = payload["key"], payload["parent"]
+        by_hid: dict[int, list[dict]] = {}
+        for ent in payload["entries"]:
+            by_hid.setdefault(ent["hid"], []).append(ent)
+        new_bytes = 0
+        new_chunks = 0
+        members: dict[str, str] = {}
+        shard_write_s: dict[int, float] = {}
+        shard_bytes: dict[int, int] = {}
+        for hid in sorted(by_hid):
+            t0 = time.perf_counter()
+            mleaves = []
+            for ent in by_hid[hid]:
+                wkey = f"{ent['path']}::shard{ent['sid']}"
+                n = ent["n_chunks"]
+                lenc = ent["enc"]
+                base = hashes_map.get(wkey)
+                base = [None] * n if base is None or len(base) != n \
+                    else list(base)
+                ebase = encs_map.get(wkey)
+                ebase = ["raw"] * n if ebase is None or len(ebase) != n \
+                    else list(ebase)
+                delta_hashes = {}
+                for i, data in zip(ent["changed_idx"], ent["chunks"]):
+                    h, nb, new = store.put_chunk(data, shard=hid)
+                    base[i] = h
+                    ebase[i] = lenc
+                    delta_hashes[str(i)] = h
+                    new_bytes += nb
+                    new_chunks += int(new)
+                    shard_bytes[hid] = shard_bytes.get(hid, 0) + len(data)
+                if any(h is None for h in base):
+                    raise RuntimeError(
+                        f"sharded delta inconsistency for {wkey!r}: "
+                        f"unchanged chunks have no known hash (manifest "
+                        f"kind {payload['kind']!r})")
+                hashes_map[wkey] = base
+                encs_map[wkey] = ebase
+                mleaf = {"path": wkey, "dtype": ent["dtype"],
+                         "shape": ent["shape"], "nbytes": ent["nbytes"],
+                         "n_chunks": n, "bounds": ent["bounds"]}
+                if lenc != "raw":
+                    mleaf["leaf_enc"] = lenc
+                if full:
+                    mleaf["chunks"] = base
+                    if any(e != "raw" for e in ebase):
+                        mleaf["enc"] = ebase
+                else:
+                    mleaf["delta"] = delta_hashes
+                    if lenc != "raw" and delta_hashes:
+                        mleaf["denc"] = {i: lenc for i in delta_hashes}
+                mleaves.append(mleaf)
+            member_key = f"{key}.shard{hid}"
+            store.put_manifest({
+                "key": member_key, "version": 3,
+                "kind": payload["kind"],
+                "parent": f"{parent}.shard{hid}" if parent else None,
+                "treedef": payload["treedef"],
+                "chunk_words": payload["chunk_words"],
+                "store_shard": hid, "meta": {},
+                "leaves": mleaves,
+            })
+            members[str(hid)] = member_key
+            shard_write_s[hid] = time.perf_counter() - t0
+        if full:
+            current = {f"{ent['path']}::shard{ent['sid']}"
+                       for ent in payload["entries"]}
+            for stale in set(hashes_map) - current:
+                del hashes_map[stale]
+                encs_map.pop(stale, None)
+        store.put_manifest({
+            "key": key, "version": 4, "kind": "sharded",
+            "ckpt_kind": payload["kind"], "parent": parent,
+            "treedef": payload["treedef"],
+            "chunk_words": payload["chunk_words"],
+            "mesh": payload["mesh"], "members": members,
+            "meta": payload["meta"], "leaves": payload["layout"],
+        })
+        if not self._mesh_meta_written:
+            store.put_meta("mesh", payload["mesh"])
+            self._mesh_meta_written = True
+        return {"key": key, "kind": payload["kind"], "sharded": True,
+                "parent": parent,
+                "transferred_bytes": payload["transferred_bytes"],
+                "logical_bytes": payload["logical_bytes"],
+                "changed_chunks": payload["changed_chunks"],
+                "total_chunks": payload["total_chunks"],
+                "submit_stall_s": payload["submit_stall_s"],
+                "overlap": payload.get("overlap", False),
+                "new_bytes": new_bytes, "new_chunks": new_chunks,
+                "n_store_shards": len(by_hid),
+                "shard_stall_s": dict(payload["shard_stall_s"]),
+                "shard_write_s": shard_write_s,
+                "shard_bytes": shard_bytes}
+
     def _materialized(self, stat: dict):
         self._stats.append(stat)
         if self._on_mat:
@@ -398,6 +681,10 @@ class CheckpointPipeline:
         yet shared with the writer thread). Raises ValueError when the
         manifest cannot seed this pipeline (v1, unresolved holes, different
         `chunk_words`) — the caller falls back to a cold start."""
+        if manifest.get("kind") == "sharded":
+            raise ValueError(
+                f"warm start from sharded (v4) manifest {manifest['key']!r} "
+                "is not supported yet — the derived run records cold")
         if manifest.get("version", 1) < 2:
             raise ValueError(
                 f"warm start needs a v2 pipeline manifest; {manifest['key']!r}"

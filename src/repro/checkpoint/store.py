@@ -25,6 +25,18 @@ Three manifest generations coexist:
   through the parent chain exactly like hashes, and ``get_tree``
   dequantizes transparently, so readers never care which generation wrote a
   chunk.
+* v4 (``kind == "sharded"``, mesh-aware pipeline) — a STITCHING manifest: a
+  run recorded on a device mesh writes one ordinary v3 full/delta member
+  manifest per STORE SHARD (simulated host), each covering only the device
+  shards that host owns, plus a global v4 manifest recording the logical
+  layout: per-leaf global shape, the recorded physical PartitionSpec, and
+  each device shard's index bounds + owning store shard. Members chain
+  deltas independently (``<key>.shard<h>`` -> ``<parent>.shard<h>``), so
+  delta inheritance works per shard exactly as it does globally.
+  ``resolve_manifest`` resolves every member chain; ``get_tree`` stitches —
+  or, given a target ``NamedSharding``, reads ONLY the chunks the target
+  layout overlaps and reshards (checkpoint/mesh.py), which is what lets an
+  N-host recording replay bit-identically on an M-host or single-host mesh.
 
 Multi-run sharing (run lineage). One store root may be SHARED by many runs:
 each run gets a manifest namespace (``run_id``), so checkpoint keys like
@@ -88,6 +100,9 @@ def np_dtype(name: str) -> np.dtype:
 class CheckpointStore:
     """Thread-safe on-disk store, shareable across runs. Layout:
        <root>/objects/<h[:2]>/<h>.zst        — chunk payloads (shared pool)
+       <root>/shards/<host>/objects/...      — per-store-shard pools (mesh
+                                               record: each simulated host's
+                                               local disk; same addressing)
        <root>/manifests/<key>.msgpack        — un-namespaced manifests
        <root>/manifests/<run>/<key>.msgpack  — per-run manifest namespaces
        <root>/meta/[<run>/]<name>.json       — run-level metadata
@@ -144,14 +159,51 @@ class CheckpointStore:
             self._dirs.add(d)
 
     # ------------------------------------------------------------ chunks --
-    def _chunk_path(self, h: str) -> str:
-        return os.path.join(self.root, "objects", h[:2], h + ".zst")
+    def _chunk_path(self, h: str, shard=None) -> str:
+        """On-disk path of a chunk: the flat shared pool, or (``shard``)
+        one store shard's pool — ``shards/<h(ost)>/objects/`` — which in a
+        real deployment is that host's local disk."""
+        if shard is None:
+            base = os.path.join(self.root, "objects")
+        else:
+            base = os.path.join(self.root, "shards", str(shard), "objects")
+        return os.path.join(base, h[:2], h + ".zst")
 
-    def put_chunk(self, data: bytes) -> tuple[str, int, bool]:
-        """Store one content-addressed chunk.
+    def _shard_ids(self) -> list[str]:
+        """Store shards with a chunk pool on disk (sorted numerically when
+        possible so fallback scans are deterministic)."""
+        d = os.path.join(self.root, "shards")
+        if not os.path.isdir(d):
+            return []
+        ids = [e for e in os.listdir(d)
+               if os.path.isdir(os.path.join(d, e))]
+        return sorted(ids, key=lambda s: (not s.isdigit(),
+                                          int(s) if s.isdigit() else s))
+
+    def _find_chunk(self, h: str, shard=None) -> Optional[str]:
+        """Locate a chunk, preferring ``shard``'s pool, then the flat pool,
+        then every other shard pool. Content addressing makes any copy
+        valid; the fallback keeps reads working when a tree is restored on
+        a different mesh shape than recorded it."""
+        cands = []
+        if shard is not None:
+            cands.append(self._chunk_path(h, shard))
+        cands.append(self._chunk_path(h))
+        for s in self._shard_ids():
+            if shard is not None and str(shard) == s:
+                continue
+            cands.append(self._chunk_path(h, s))
+        for p in cands:
+            if os.path.exists(p):
+                return p
+        return None
+
+    def put_chunk(self, data: bytes, shard=None) -> tuple[str, int, bool]:
+        """Store one content-addressed chunk (``shard`` selects a store
+        shard's pool — bytes recorded on a host land on that host's disk).
         Returns (hash, compressed_bytes_written, was_new)."""
         h = _hash(data)
-        path = self._chunk_path(h)
+        path = self._chunk_path(h, shard)
         if os.path.exists(path):
             return h, 0, False
         self._ensure_dir(os.path.dirname(path))
@@ -162,11 +214,29 @@ class CheckpointStore:
     # kept under the old private name too — tests and older callers use it
     _put_chunk = put_chunk
 
-    def get_chunk(self, h: str) -> bytes:
-        with open(self._chunk_path(h), "rb") as f:
+    def get_chunk(self, h: str, shard=None) -> bytes:
+        path = self._chunk_path(h, shard)
+        if not os.path.exists(path):
+            found = self._find_chunk(h, shard)
+            if found is None:
+                raise FileNotFoundError(
+                    f"chunk {h} not in any pool of {self.root}")
+            path = found
+        with open(path, "rb") as f:
             return self._codec.decompress(f.read())
 
     _get_chunk = get_chunk
+
+    def _iter_chunk_files(self):
+        """Every chunk file across the flat pool and all shard pools as
+        (path, filename) — the single sweep gc/stats share."""
+        pools = [os.path.join(self.root, "objects")]
+        pools += [os.path.join(self.root, "shards", s, "objects")
+                  for s in self._shard_ids()]
+        for pool in pools:
+            for dirpath, _, files in os.walk(pool):
+                for fn in files:
+                    yield os.path.join(dirpath, fn), fn
 
     # --------------------------------------------------------- manifests --
     def _mpath(self, rid_safe: Optional[str], key_safe: str) -> str:
@@ -242,6 +312,24 @@ class CheckpointStore:
         full v2 manifests return (normalized) as-is."""
         cur_rid, _ = self._split_key(key)
         manifest = self.get_manifest(key)
+        if manifest.get("kind") == "sharded":
+            # v4 stitching manifest: resolve every member chain. Members are
+            # plain v3 full/delta manifests (one per store shard) living in
+            # the SAME namespace as the global key, so each member chain
+            # inherits deltas independently, across run lineage included.
+            resolved = dict(manifest)
+            members: dict[int, dict] = {}
+            hops = 0
+            for hid, mkey in (manifest.get("members") or {}).items():
+                mres = self.resolve_manifest(f"{cur_rid or ''}::{mkey}",
+                                             _max_depth=_max_depth)
+                members[int(hid)] = mres
+                hops = max(hops, int(mres.get("hops", 0)))
+            resolved["members_resolved"] = members
+            # a restore pays the DEEPEST member chain (shards resolve in
+            # parallel on their owning hosts)
+            resolved["hops"] = hops
+            return resolved
         if manifest.get("version", 1) < 2 or manifest.get("kind", "full") == "full":
             return manifest
         # delta: seed hole-filled lists from this manifest, then walk
@@ -373,17 +461,29 @@ class CheckpointStore:
                 "total_chunks": total_chunks, "new_chunks": new_chunks}
 
     def get_tree(self, key: str, like: Any = None,
-                 manifest: Optional[dict] = None):
+                 manifest: Optional[dict] = None,
+                 stats_out: Optional[dict] = None):
         """Load a checkpoint (delta manifests resolve transparently, across
         run lineage). If `like` (a pytree with the same structure) is given,
         arrays are unflattened into that structure; otherwise a flat
         {path: array} dict is returned. Pass a pre-``resolve_manifest``'d
         `manifest` to skip re-resolution (warm-start reads it anyway).
         Returned arrays are WRITABLE copies — np.frombuffer views are
-        read-only and silently break in-place consumers."""
+        read-only and silently break in-place consumers.
+
+        v4 sharded manifests stitch through checkpoint/mesh.py: a `like`
+        leaf carrying a ``NamedSharding`` restores SELECTIVELY (only the
+        chunks its target shards overlap are read) and comes back as a
+        sharded ``jax.Array``; other leaves stitch to full numpy arrays.
+        ``stats_out`` (a dict, sharded path only) receives read accounting:
+        {chunks_read, bytes_by_shard}."""
         import jax
         if manifest is None:
             manifest = self.resolve_manifest(key)
+        if manifest.get("kind") == "sharded":
+            from repro.checkpoint.mesh import stitch_tree
+            return stitch_tree(self, manifest, like=like,
+                               stats_out=stats_out)
         arrays = []
         for leaf in manifest["leaves"]:
             dt = np_dtype(leaf["dtype"])
@@ -473,15 +573,11 @@ class CheckpointStore:
         max_depth = 0
         n_manifests = 0
         info: dict[tuple, dict] = {}
-        for t0 in targets:
-            m = load(t0)
-            if m is None:
-                continue
-            n_manifests += 1
-            kind = m.get("kind", "full") if m.get("version", 1) >= 2 else "full"
-            counts[kind] = counts.get(kind, 0) + 1
-            # walk up to the first memoized ancestor (or the chain end),
-            # then unwind — every manifest is read at most once store-wide
+
+        def walk(t0) -> int:
+            """Chain depth of one manifest tuple — walk up to the first
+            memoized ancestor (or the chain end), then unwind; every
+            manifest is read at most once store-wide."""
             chain: list[tuple] = []
             seen: set[tuple] = set()
             t = t0
@@ -497,23 +593,53 @@ class CheckpointStore:
                 p = self._parent_of(load(node), node[0])
                 depth[node] = depth[p] + 1 if p is not None and p in depth \
                     else (1 if p is not None and p in seen else 0)
-            max_depth = max(max_depth, depth.get(t0, 0))
+            return depth.get(t0, 0)
+
+        for t0 in targets:
+            m = load(t0)
+            if m is None:
+                continue
+            n_manifests += 1
+            kind = m.get("kind", "full") if m.get("version", 1) >= 2 else "full"
+            counts[kind] = counts.get(kind, 0) + 1
+            d0 = walk(t0)
+            shards_info = None
+            if kind == "sharded":
+                # v4: depth/chunks live on the per-store-shard member
+                # chains; a restore pays the deepest one (shards resolve in
+                # parallel), so that is the depth reported for the key
+                shards_info = {}
+                for hid, mkey in (m.get("members") or {}).items():
+                    mt = (t0[0], _safe(mkey))
+                    mm = load(mt)
+                    if mm is None:
+                        continue
+                    shards_info[str(hid)] = {
+                        "depth": walk(mt),
+                        "chunks": sum(1 for _ in _manifest_chunk_hashes(mm)),
+                    }
+                if shards_info:
+                    d0 = max(s["depth"] for s in shards_info.values())
+            max_depth = max(max_depth, d0)
             if per_key:
-                info[t0] = {"depth": depth.get(t0, 0), "kind": kind,
-                            "direct_chunks":
-                                sum(1 for _ in _manifest_chunk_hashes(m))}
+                direct = sum(1 for _ in _manifest_chunk_hashes(m))
+                if shards_info:
+                    direct = sum(s["chunks"] for s in shards_info.values())
+                info[t0] = {"depth": d0, "kind": kind,
+                            "direct_chunks": direct}
+                if shards_info is not None:
+                    info[t0]["shards"] = shards_info
         chunks = 0
         stored = 0
         if include_chunks:
-            for dirpath, _, files in os.walk(os.path.join(self.root,
-                                                          "objects")):
-                for fn in files:
-                    if fn.endswith(".zst"):
-                        chunks += 1
-                        stored += os.path.getsize(os.path.join(dirpath, fn))
+            for p, fn in self._iter_chunk_files():
+                if fn.endswith(".zst"):
+                    chunks += 1
+                    stored += os.path.getsize(p)
         out = {"manifests": n_manifests,
                "full_manifests": counts.get("full", 0),
                "delta_manifests": counts.get("delta", 0),
+               "sharded_manifests": counts.get("sharded", 0),
                "max_chain_depth": max_depth,
                "chunks": chunks, "stored_bytes": stored}
         if per_key:
@@ -532,8 +658,11 @@ class CheckpointStore:
     def _parent_closure(self, keys: Iterable[str],
                         cache: dict) -> set[tuple]:
         """Normalized (rid, key) tuples of `keys` plus every ancestor their
-        delta chains resolve through (across run namespaces). Tuples whose
-        manifest is missing are dropped."""
+        delta chains resolve through (across run namespaces) AND, for v4
+        sharded manifests, their per-store-shard member manifests — a live
+        stitching manifest pins every shard chain it stitches, so multi-run
+        gc can never collect a live shard's chunks. Tuples whose manifest is
+        missing are dropped."""
         live = {self._norm_key(k) for k in keys}
         frontier = list(live)
         while frontier:
@@ -542,10 +671,17 @@ class CheckpointStore:
             if m is None:
                 live.discard(t)
                 continue
+            nxt = []
             p = self._parent_of(m, t[0])
-            if p is not None and p not in live:
-                live.add(p)
-                frontier.append(p)
+            if p is not None:
+                nxt.append(p)
+            # sharded (v4) members live in the global key's namespace
+            for mkey in (m.get("members") or {}).values():
+                nxt.append((t[0], _safe(mkey)))
+            for p in nxt:
+                if p not in live:
+                    live.add(p)
+                    frontier.append(p)
         return live
 
     def closure_chunks(self, keys: Iterable[str]) -> set[str]:
@@ -562,14 +698,16 @@ class CheckpointStore:
         return hashes
 
     def chunk_bytes(self, hashes: Iterable[str]) -> int:
-        """On-disk (compressed) bytes of the given chunk hashes; missing
-        chunks count 0."""
+        """On-disk (compressed) bytes of the given chunk hashes, wherever
+        they live (flat or shard pools); missing chunks count 0."""
         total = 0
         for h in hashes:
-            try:
-                total += os.path.getsize(self._chunk_path(h))
-            except OSError:
-                pass
+            p = self._find_chunk(h)
+            if p is not None:
+                try:
+                    total += os.path.getsize(p)
+                except OSError:
+                    pass
         return total
 
     # ---------------------------------------------------------------- gc --
@@ -615,24 +753,23 @@ class CheckpointStore:
                         pass
             kept = deleted = deleted_bytes = deleted_tmp = 0
             now = time.time()
-            obj_root = os.path.join(self.root, "objects")
-            for dirpath, _, files in os.walk(obj_root):
-                for fn in files:
-                    p = os.path.join(dirpath, fn)
-                    if not fn.endswith(".zst"):
-                        # stray .tmp from a KILLED writer (the in-process
-                        # failure path unlinks its own): reclaim once aged —
-                        # a live writer holds a tmp for milliseconds, so the
-                        # age gate never races an in-flight _atomic_write
-                        deleted_tmp += _reclaim_stale_tmp(p, now)
-                        continue
-                    h = fn[: -len(".zst")]
-                    if h in referenced:
-                        kept += 1
-                    else:
-                        deleted_bytes += os.path.getsize(p)
-                        os.remove(p)
-                        deleted += 1
+            # sweep the flat pool AND every store shard's pool — a chunk
+            # hash is live wherever it lives
+            for p, fn in self._iter_chunk_files():
+                if not fn.endswith(".zst"):
+                    # stray .tmp from a KILLED writer (the in-process
+                    # failure path unlinks its own): reclaim once aged —
+                    # a live writer holds a tmp for milliseconds, so the
+                    # age gate never races an in-flight _atomic_write
+                    deleted_tmp += _reclaim_stale_tmp(p, now)
+                    continue
+                h = fn[: -len(".zst")]
+                if h in referenced:
+                    kept += 1
+                else:
+                    deleted_bytes += os.path.getsize(p)
+                    os.remove(p)
+                    deleted += 1
             for dirpath, _, files in os.walk(os.path.join(self.root,
                                                           "manifests")):
                 for fn in files:
@@ -666,10 +803,22 @@ class CheckpointStore:
 
     def stored_bytes(self) -> int:
         total = 0
-        for dirpath, _, files in os.walk(os.path.join(self.root, "objects")):
-            for fn in files:
-                total += os.path.getsize(os.path.join(dirpath, fn))
+        for p, _ in self._iter_chunk_files():
+            total += os.path.getsize(p)
         return total
+
+    def shard_stored_bytes(self) -> dict:
+        """On-disk bytes per store shard pool — the `runs show` per-shard
+        breakdown."""
+        out: dict[str, int] = {}
+        for s in self._shard_ids():
+            total = 0
+            pool = os.path.join(self.root, "shards", s, "objects")
+            for dirpath, _, files in os.walk(pool):
+                for fn in files:
+                    total += os.path.getsize(os.path.join(dirpath, fn))
+            out[s] = total
+        return out
 
 
 def _atomic_write(path: str, payload: bytes):

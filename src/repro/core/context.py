@@ -65,7 +65,8 @@ class FlorContext:
                  async_log: bool = True,
                  log_queue_depth: int = DEFAULT_QUEUE_DEPTH,
                  log_spill_bytes: int = DEFAULT_SPILL_BYTES,
-                 ckpt_quantize_slots=(), ckpt_overlap: bool = False):
+                 ckpt_quantize_slots=(), ckpt_overlap: bool = False,
+                 mesh=None, ckpt_shard_axes=()):
         assert mode in ("record", "replay")
         self.run_dir = run_dir
         self.mode = mode
@@ -182,6 +183,7 @@ class FlorContext:
             full_every=full_manifest_every,
             quantize_slots=ckpt_quantize_slots,
             overlap=ckpt_overlap,
+            mesh=mesh, shard_axes=ckpt_shard_axes,
             on_materialized=self._on_materialized) \
             if mode == "record" else None
         # backward-compat handle (benchmarks call ctx.writer.drain())
@@ -427,16 +429,25 @@ class FlorContext:
         from repro.checkpoint.store import np_dtype
         t0 = time.perf_counter()
         manifest = self.store.resolve_manifest(key)
-        tree = self.store.get_tree(key, like=like, manifest=manifest)
+        read_stats: dict = {}
+        tree = self.store.get_tree(key, like=like, manifest=manifest,
+                                   stats_out=read_stats)
         dt = time.perf_counter() - t0
         nbytes = sum(
             int(lf["nbytes"]) if lf.get("nbytes") is not None
             else int(np.prod(lf["shape"], dtype=np.int64))
             * np_dtype(lf["dtype"]).itemsize
             for lf in manifest["leaves"])
-        self.restore_stats.append({"key": key, "restore_s": dt,
-                                   "bytes": nbytes,
-                                   "hops": int(manifest.get("hops") or 0)})
+        sample = {"key": key, "restore_s": dt, "bytes": nbytes,
+                  "hops": int(manifest.get("hops") or 0)}
+        if read_stats.get("bytes_by_shard"):
+            # sharded restore: what each store shard actually served (a
+            # resharded read touches only overlapping chunks) — the raw
+            # material for per-shard read_bps calibration
+            sample["shard_bytes"] = {str(k): int(v) for k, v in
+                                     read_stats["bytes_by_shard"].items()}
+            sample["chunks_read"] = int(read_stats.get("chunks_read") or 0)
+        self.restore_stats.append(sample)
         return tree, dt
 
     # ---------------------------------------------------------------- gc --
@@ -513,11 +524,18 @@ class FlorContext:
         actually span different chain depths (a rank-deficient fit would
         hallucinate a hop latency)."""
         fit = _fit_restore_model(self.restore_stats)
-        if fit is None:
+        shard_fit = _fit_shard_read_bps(self.restore_stats)
+        if fit is None and shard_fit is None:
             return
         try:
             calib = dict(self.store.get_meta("store_calib") or {})
-            calib.update(fit)
+            calib.update(fit or {})
+            if shard_fit:
+                # per-store-shard service rate (merged over runs): the
+                # planner's max-over-hosts restore cost consumes it
+                merged = dict(calib.get("shard_read_bps") or {})
+                merged.update(shard_fit)
+                calib["shard_read_bps"] = merged
             calib["restore_samples"] = len(self.restore_stats)
             calib["restore_measured_at"] = time.time()
             self.store.put_meta("store_calib", calib)
@@ -548,6 +566,31 @@ def _fit_restore_model(stats: list) -> Optional[dict]:
             return {"read_bps": float(np.clip(1.0 / sec_per_byte, 1e6, 1e12)),
                     "hop_s": hop_s}
     return {"read_bps": eff_bps}
+
+
+def _fit_shard_read_bps(stats: list) -> Optional[dict]:
+    """Per-store-shard service rate from sharded restore samples (those that
+    carry a {"shard_bytes": {hid: bytes}} breakdown). Shards are read
+    concurrently in production, so attributing each sample's full wall time
+    to every participating shard gives a conservative (lower-bound) per-shard
+    rate — exactly the right bias for a cost model used to schedule work."""
+    bytes_by = {}
+    secs_by = {}
+    for s in stats:
+        sb = s.get("shard_bytes")
+        wall = float(s.get("restore_s") or 0)
+        if not sb or wall <= 0:
+            continue
+        for hid, nbytes in sb.items():
+            if not nbytes:
+                continue
+            bytes_by[str(hid)] = bytes_by.get(str(hid), 0) + int(nbytes)
+            secs_by[str(hid)] = secs_by.get(str(hid), 0.0) + wall
+    if not bytes_by:
+        return None
+    return {hid: float(min(max(bytes_by[hid] / max(secs_by[hid], 1e-9),
+                                1e6), 1e12))
+            for hid in bytes_by}
 
 
 def _parse_arg_overrides(spec: str) -> dict[str, str]:

@@ -86,6 +86,13 @@ class RecordSpec:
     log_spill_bytes: int = DEFAULT_SPILL_BYTES    # spill threshold (0 = off)
     ckpt_quantize_slots: tuple = ()    # slots stored lossy-q8 (fused path)
     ckpt_overlap: bool = False         # overlap fused pass with the step
+    # mesh-sharded record: with a jax.sharding.Mesh here, each device shard
+    # fingerprints/gathers its OWN buffer and writes to its host's store
+    # shard (v4 stitching manifests; restore reshards onto any mesh).
+    # ckpt_shard_axes picks the mesh axes that map onto store shards
+    # (default () = all axes: one store shard per device).
+    mesh: Optional[Any] = None
+    ckpt_shard_axes: tuple = ()
 
     def __post_init__(self):
         if not 0 < self.epsilon <= 1:
@@ -103,6 +110,22 @@ class RecordSpec:
             raise ValueError("ckpt_overlap requires async_materialize=True "
                              "(the writer thread finalizes the deferred "
                              "fused pass)")
+        if isinstance(self.ckpt_shard_axes, str):
+            raise ValueError("ckpt_shard_axes must be a sequence of mesh "
+                             "axis names, not a bare string")
+        object.__setattr__(self, "ckpt_shard_axes",
+                           tuple(self.ckpt_shard_axes))
+        if self.mesh is not None and not hasattr(self.mesh, "devices"):
+            raise ValueError(f"mesh must be a jax.sharding.Mesh, got "
+                             f"{type(self.mesh).__name__}")
+        if self.ckpt_shard_axes and self.mesh is None:
+            raise ValueError("ckpt_shard_axes requires mesh=")
+        if self.mesh is not None and self.ckpt_shard_axes:
+            names = {str(a) for a in self.mesh.axis_names}
+            bad = [a for a in self.ckpt_shard_axes if str(a) not in names]
+            if bad:
+                raise ValueError(f"ckpt_shard_axes {bad} not in mesh axes "
+                                 f"{sorted(names)}")
 
     def to_kwargs(self) -> dict:
         return {f.name: getattr(self, f.name) for f in fields(self)}

@@ -201,6 +201,10 @@ def main():
     ap.add_argument("--tasks-per-worker", type=int, default=1,
                     help="split work finer than one share per worker so "
                          "the dynamic queue can rebalance")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="model N replay hosts: tasks are LPT-placed onto "
+                         "host queues and workers steal only when their "
+                         "home queue drains (sharded-store affinity)")
     ap.add_argument("--straggler-factor", type=float, default=None,
                     help="speculatively re-issue a task running this many "
                          "times longer than expected (0 = off; default: "
@@ -229,8 +233,9 @@ def main():
 
     from repro.core.query import merge_replay_logs
     from repro.replay import (DynamicExecutor, Task, TaskFailure,
-                              balanced_shares, build_plan, contiguous_shares,
-                              measured_straggler_factor, share_cost)
+                              assign_hosts, balanced_shares, build_plan,
+                              contiguous_shares, measured_straggler_factor,
+                              share_cost)
 
     # ---- plan ----
     if args.probe == "auto":
@@ -255,11 +260,16 @@ def main():
         tasks.append(Task(task_id=tid, visits=plan.visits_for(sh),
                           epochs=[s.epoch for s in sh],
                           est_cost_s=share_cost(plan, sh)))
+    n_hosts = max(1, args.hosts)
+    if n_hosts > 1:
+        assign_hosts(tasks, n_hosts)
     for t in tasks:
         print(f"  task {t.task_id}: epochs {t.epochs} "
-              f"({len(t.visits)} visits, est {t.est_cost_s:.2f}s)")
+              f"({len(t.visits)} visits, est {t.est_cost_s:.2f}s"
+              + (f", host {t.host}" if n_hosts > 1 else "") + ")")
     assignments = {str(t.task_id): {"epochs": t.epochs, "visits": t.visits,
-                                    "est_cost_s": t.est_cost_s}
+                                    "est_cost_s": t.est_cost_s,
+                                    "host": t.host}
                    for t in tasks}
     plan.save(assignments=assignments)
     if args.plan_only:
@@ -309,7 +319,7 @@ def main():
     t0 = time.time()
     ex = DynamicExecutor(tasks, run_task, args.nworkers,
                          straggler_factor=straggler,
-                         on_complete=on_complete)
+                         on_complete=on_complete, n_hosts=n_hosts)
     try:
         done = ex.run()
     except TaskFailure as e:

@@ -89,11 +89,47 @@ def cmd_show(store: CheckpointStore, registry: RunRegistry, args) -> int:
     ns = rec.get("namespace")
     # no chunk fields printed here: skip the O(store) objects-pool walk
     st = store.stats(keys=[f"{ns or ''}::{k}" for k in keys],
-                     include_chunks=False)
+                     include_chunks=False, per_key=True)
     print(f"manifests  {st['manifests']} ({st['full_manifests']} full + "
-          f"{st['delta_manifests']} delta), max resolve chain "
+          f"{st['delta_manifests']} delta"
+          + (f" + {st['sharded_manifests']} sharded"
+             if st.get("sharded_manifests") else "")
+          + f"), max resolve chain "
           f"{st['max_chain_depth']} (may cross into ancestor runs)")
+    _show_mesh(store, rec, st)
     return 0
+
+
+def _show_mesh(store: CheckpointStore, rec: dict, st: dict) -> None:
+    """Mesh shape + per-store-shard breakdown for sharded (v4) recordings —
+    read from the recorded mesh meta and the v4 manifests' member chains."""
+    rstore = CheckpointStore(store.root, run_id=rec.get("namespace"))
+    mesh = rstore.get_meta("mesh")
+    per_key = st.get("per_key") or {}
+    shard_keys: dict[str, set] = {}    # hid -> sanitized member keys
+    for info in per_key.values():
+        for hid in (info.get("shards") or {}):
+            shard_keys.setdefault(str(hid), set())
+    if not mesh and not shard_keys:
+        return
+    if mesh:
+        axes = " ".join(f"{n}={s}" for n, s in mesh.get("axes") or [])
+        shard_axes = ",".join(mesh.get("shard_axes") or []) or "(all axes)"
+        print(f"mesh       {axes or '-'}  "
+              f"(ckpt shard axes: {shard_axes}; "
+              f"{mesh.get('n_store_shards', len(shard_keys) or 1)} "
+              f"store shards)")
+    stored = store.shard_stored_bytes()
+    ns = rec.get("namespace")
+    print(f"{'  SHARD':<8} {'MANIFESTS':>9} {'CLOSURE CHUNKS':>14} "
+          f"{'CLOSURE MiB':>12} {'POOL MiB':>9}")
+    for hid in sorted(shard_keys, key=lambda h: int(h)):
+        members = [f"{ns or ''}::{k}" for k in store.list_keys(run=ns)
+                   if k.endswith(f".shard{hid}")]
+        chunks = store.closure_chunks(members)
+        print(f"  {hid:<6} {len(members):>9} {len(chunks):>14} "
+              f"{store.chunk_bytes(chunks) / 2**20:>12.2f} "
+              f"{stored.get(str(hid), 0) / 2**20:>9.2f}")
 
 
 def cmd_gc(store: CheckpointStore, registry: RunRegistry, args) -> int:

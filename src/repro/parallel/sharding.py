@@ -125,6 +125,53 @@ def physical_spec(
     return P(*out)
 
 
+def spec_entries(spec) -> list:
+    """Normalize a PartitionSpec (or any sequence of entries) into a
+    JSON/msgpack-serializable list: each entry None, a mesh-axis name, or a
+    list of names. This is the layout-independent form checkpoint manifests
+    record so a restore can re-resolve it on a different mesh."""
+    if spec is None:
+        return None
+    out: list = []
+    for e in tuple(spec):
+        if e is None:
+            out.append(None)
+        elif isinstance(e, (tuple, list)):
+            out.append([str(a) for a in e])
+        else:
+            out.append(str(e))
+    return out
+
+
+def respec(entries: Optional[Sequence], shape: Sequence[int],
+           mesh: Mesh) -> P:
+    """Re-resolve a RECORDED physical spec (``spec_entries`` form) on a
+    possibly different mesh, with the same defensive fallbacks as
+    ``physical_spec``: axes absent from the new mesh drop out, each mesh
+    axis is used at most once, and a combination that does not divide its
+    dimension falls back to its longest dividing prefix (ultimately
+    replication). This is how an N-host recording reshards onto an M-host
+    (or single-host) replay mesh."""
+    mesh_axes = set(mesh.shape.keys())
+    used: set[str] = set()
+    ent = list(entries or [])
+    ent += [None] * (len(shape) - len(ent))
+    out = []
+    for e, dim in zip(ent, shape):
+        if e is None:
+            axes: tuple[str, ...] = ()
+        elif isinstance(e, (tuple, list)):
+            axes = tuple(str(a) for a in e)
+        else:
+            axes = (str(e),)
+        axes = tuple(a for a in axes if a in mesh_axes and a not in used)
+        while axes and dim % _mesh_axis_size(mesh, axes) != 0:
+            axes = axes[:-1]
+        used.update(axes)
+        out.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*out)
+
+
 def param_sharding(logical, shape, mesh: Optional[Mesh] = None) -> Optional[NamedSharding]:
     mesh = mesh or _CTX.mesh
     if mesh is None:

@@ -15,4 +15,5 @@ from repro.replay.plan import (  # noqa: F401
     open_run_store)
 from repro.replay.scheduler import (  # noqa: F401
     DEFAULT_STRAGGLER_FACTOR, DynamicExecutor, Task, TaskFailure,
-    balanced_shares, contiguous_shares, measured_straggler_factor, share_cost)
+    assign_hosts, balanced_shares, contiguous_shares,
+    measured_straggler_factor, share_cost)

@@ -67,6 +67,7 @@ class Segment:
     restore_cost_s: float = 0.0      # estimated physical-restore seconds
     chain_depth: int = 0             # max delta-chain hops among its ckpts
     has_ckpt: bool = False           # any Loop End Checkpoint at this epoch
+    hosts: int = 1                   # store shards its restores touch
 
     @property
     def cost(self) -> float:
@@ -83,6 +84,7 @@ class ReplayPlan:
     main_loop: Optional[str]
     segments: list                    # [Segment, ...] one per epoch
     probe_source: dict = field(default_factory=dict)   # how probes resolved
+    mesh: dict = field(default_factory=dict)   # recorded mesh meta, if any
 
     # ------------------------------------------------------------ queries --
     def segment(self, epoch) -> Segment:
@@ -148,13 +150,18 @@ class ReplayPlan:
 
     @classmethod
     def from_dict(cls, d: dict) -> "ReplayPlan":
+        from dataclasses import fields as dc_fields
+        seg_keys = {f.name for f in dc_fields(Segment)}
         d = dict(d)
         d["probed"] = frozenset(d.get("probed") or ())
-        d["segments"] = [Segment(**{**s, "exec_blocks":
+        d["segments"] = [Segment(**{**{k: v for k, v in s.items()
+                                       if k in seg_keys},
+                                    "exec_blocks":
                                     tuple(s.get("exec_blocks") or ())})
                          for s in d.get("segments") or []]
         d.pop("assignments", None)
-        return cls(**d)
+        known = {f.name for f in dc_fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
 
     def save(self, path: Optional[str] = None,
              assignments: Optional[dict] = None) -> str:
@@ -341,6 +348,11 @@ def build_plan(run_dir: str,
                      or DEFAULT_READ_BPS)
     hop_s = float(calib["hop_s"]) if calib.get("hop_s") is not None \
         else RESTORE_HOP_S
+    # per-store-shard service rates (learned from sharded restores or a
+    # calibration probe); absent shards fall back to the global figure
+    shard_bps = {str(k): float(v)
+                 for k, v in (calib.get("shard_read_bps") or {}).items()
+                 if v}
 
     segments = []
     for e in epochs:
@@ -367,22 +379,39 @@ def build_plan(run_dir: str,
                         for b in set(exec_blocks) | forced)
         restore_cost = 0.0
         depth = 0
+        hosts_touched: set = set()
         for k in keys_by_epoch.get(ei, []):
             parsed = _parse_ckpt_key(k)
             if parsed and parsed[0] in exec_blocks:
                 continue          # re-executing blocks don't restore
             info = per_key.get(k) or {}
-            depth = max(depth, int(info.get("depth") or 0))
-            restore_cost += hop_s * (1 + int(info.get("depth") or 0))
-            restore_cost += int(info.get("direct_chunks") or 0) \
-                * avg_chunk / read_bps
+            shards = info.get("shards") or {}
+            if shards:
+                # sharded manifest: hosts read their store shards
+                # concurrently, so the wall-clock restore is the MAX over
+                # hosts of local bytes / that shard's service rate — not the
+                # aggregate-bytes figure the flat model would charge
+                d_k = max(int(s.get("depth") or 0) for s in shards.values())
+                depth = max(depth, d_k)
+                restore_cost += hop_s * (1 + d_k)
+                restore_cost += max(
+                    int(s.get("chunks") or 0) * avg_chunk
+                    / (shard_bps.get(str(hid)) or read_bps)
+                    for hid, s in shards.items())
+                hosts_touched.update(str(hid) for hid in shards)
+            else:
+                depth = max(depth, int(info.get("depth") or 0))
+                restore_cost += hop_s * (1 + int(info.get("depth") or 0))
+                restore_cost += int(info.get("direct_chunks") or 0) \
+                    * avg_chunk / read_bps
         segments.append(Segment(
             epoch=ei, action="exec" if exec_blocks else "restore",
             exec_blocks=exec_blocks, exec_cost_s=exec_cost,
             restore_cost_s=restore_cost, chain_depth=depth,
-            has_ckpt=bool(ckpt_blocks)))
+            has_ckpt=bool(ckpt_blocks), hosts=max(1, len(hosts_touched))))
 
     return ReplayPlan(run_dir=run_dir, epochs=[s.epoch for s in segments],
                       probed=frozenset(probed), init_mode=init_mode,
                       outer_probe=bool(outer_probe), main_loop=main_loop,
-                      segments=segments, probe_source=probe_source)
+                      segments=segments, probe_source=probe_source,
+                      mesh=dict(store.get_meta("mesh") or {}))

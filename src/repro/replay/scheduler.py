@@ -102,6 +102,21 @@ class Task:
     epochs: list = field(default_factory=list)   # work epochs it OWNS
     est_cost_s: float = 0.0
     payload: Any = None              # caller scratch (e.g. argv extras)
+    host: int = 0                    # preferred host queue (sharded replay)
+
+
+def assign_hosts(tasks: list, n_hosts: int) -> list:
+    """LPT host placement for sharded replay: heaviest task first onto the
+    least-loaded host. Mutates each task's ``host`` in place and returns the
+    list; the DynamicExecutor's per-host queues then keep each task near its
+    store shard while still allowing idle hosts to steal."""
+    n = max(1, int(n_hosts))
+    loads = [0.0] * n
+    for t in sorted(tasks, key=lambda t: -t.est_cost_s):
+        h = min(range(n), key=lambda i: (loads[i], i))
+        t.host = h
+        loads[h] += t.est_cost_s
+    return tasks
 
 
 class TaskFailure(RuntimeError):
@@ -126,7 +141,10 @@ class DynamicExecutor:
     * incremental completion: `on_complete(task, attempt, result)` fires as
       each task FIRST completes — the launcher merges that task's logs into
       the growing merged view right there, instead of waiting for the
-      slowest worker.
+      slowest worker;
+    * host affinity: with `n_hosts` > 1 each task carries a preferred host
+      (see :func:`assign_hosts`) and workers drain their home host's queue
+      before stealing — sharded-store restores stay near their shard.
 
     ``run()`` returns {task_id: (attempt, result)} and raises
     :class:`TaskFailure` if any task permanently failed.
@@ -134,14 +152,19 @@ class DynamicExecutor:
 
     def __init__(self, tasks: list, run_task: Callable, nworkers: int, *,
                  max_attempts: int = 2, straggler_factor: float = 0.0,
-                 on_complete: Optional[Callable] = None):
+                 on_complete: Optional[Callable] = None, n_hosts: int = 1):
         self.tasks = list(tasks)
         self.run_task = run_task
         self.nworkers = max(1, int(nworkers))
         self.max_attempts = max(1, int(max_attempts))
         self.straggler_factor = float(straggler_factor)
         self.on_complete = on_complete
-        self._q: "queue.Queue" = queue.Queue()
+        # one queue per host: workers drain their home queue first and only
+        # then steal, so sharded-replay tasks mostly run near their store
+        # shard while idle hosts still keep the makespan bounded
+        self.n_hosts = max(1, int(n_hosts))
+        self._qs: list["queue.Queue"] = [queue.Queue()
+                                         for _ in range(self.n_hosts)]
         self._lock = threading.Lock()
         self._done: dict[int, tuple[int, Any]] = {}
         self._errors: dict[int, list] = {}
@@ -155,13 +178,14 @@ class DynamicExecutor:
     def run(self) -> dict:
         for t in self.tasks:
             self._attempts[t.task_id] = 1
-            self._q.put((t, 1))
+            self._qs[t.host % self.n_hosts].put((t, 1))
         # with speculation on, keep ALL slots alive even when tasks <
         # workers: an idle slot is what picks up a straggler's duplicate
         nthreads = self.nworkers if self.straggler_factor > 0 \
             else min(self.nworkers, max(1, len(self.tasks)))
-        threads = [threading.Thread(target=self._worker, daemon=True)
-                   for _ in range(nthreads)]
+        threads = [threading.Thread(target=self._worker,
+                                    args=(i % self.n_hosts,), daemon=True)
+                   for i in range(nthreads)]
         for th in threads:
             th.start()
         for th in threads:
@@ -177,7 +201,18 @@ class DynamicExecutor:
     def _all_resolved(self) -> bool:
         return all(self._resolved(t.task_id) for t in self.tasks)
 
-    def _next(self):
+    def _try_get(self, home: int):
+        """Pop from the home host's queue first, then steal round-robin from
+        the others. Raises queue.Empty when every queue is drained."""
+        order = [home] + [i for i in range(len(self._qs)) if i != home]
+        for i in order:
+            try:
+                return self._qs[i].get_nowait()
+            except queue.Empty:
+                continue
+        raise queue.Empty
+
+    def _next(self, home: int = 0):
         """Atomically claim the next (task, attempt, cancelled) for an idle
         slot, or None to exit. Pop and claim happen under ONE lock — the
         same lock the give-up check takes — so a popped-but-unregistered
@@ -185,7 +220,7 @@ class DynamicExecutor:
         while True:
             with self._lock:
                 try:
-                    task, attempt = self._q.get_nowait()
+                    task, attempt = self._try_get(home)
                 except queue.Empty:
                     if self._all_resolved():
                         return None
@@ -241,9 +276,9 @@ class DynamicExecutor:
         return task, self._attempts[tid]
 
     # ------------------------------------------------------------- worker --
-    def _worker(self):
+    def _worker(self, home: int = 0):
         while True:
-            item = self._next()
+            item = self._next(home)
             if item is None:
                 return
             task, attempt, cancelled = item
@@ -273,7 +308,8 @@ class DynamicExecutor:
                     self._errors.setdefault(task.task_id, []).append(err)
                     if self._attempts[task.task_id] < self.max_attempts:
                         self._attempts[task.task_id] += 1
-                        self._q.put((task, self._attempts[task.task_id]))
+                        self._qs[task.host % self.n_hosts].put(
+                            (task, self._attempts[task.task_id]))
                     else:
                         running_elsewhere = any(
                             tid == task.task_id for tid, _ in self._running)

@@ -1,4 +1,8 @@
 """Pipeline stage-scan: equivalence with sequential execution."""
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -36,3 +40,53 @@ def test_bubble_fraction():
     assert bubble_fraction(4, 4) == 3 / 7
     assert bubble_fraction(1, 8) == 0.0
     assert bubble_fraction(4, 60) < 0.05
+
+
+@pytest.mark.slow
+def test_stage_scan_matches_sequential_on_8dev_mesh():
+    """Forced 8-device CPU mesh with a real 'stage' axis: stage_scan's
+    jnp.roll lowers to a cross-device permute when the [S, ...] buffer is
+    sharded over 'stage', and the result must still match the sequential
+    layer loop bit-for-bit (same dtype, same op order per lane)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.parallel import use_mesh
+        from repro.parallel.pipeline import stage_scan
+
+        devs = jax.devices()
+        assert len(devs) == 8, devs
+        mesh = Mesh(np.array(devs).reshape(4, 2), ("stage", "data"))
+        rules = {"stage": [("stage",), ()], "batch": [("data",), ()]}
+
+        S, M, d = 4, 8, 16
+        B = M * 2
+        k = jax.random.PRNGKey(0)
+        params = {"w": jax.random.normal(k, (S, d, d)) * 0.1,
+                  "b": jax.random.normal(jax.random.fold_in(k, 1),
+                                         (S, d)) * 0.1}
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, d))
+
+        def stage(p, h):
+            return jnp.tanh(h @ p["w"] + p["b"])
+
+        seq = x
+        for s in range(S):
+            seq = stage(jax.tree_util.tree_map(lambda a: a[s], params), seq)
+
+        sh = NamedSharding(mesh, P("stage"))
+        params_sh = {kk: jax.device_put(v, sh) for kk, v in params.items()}
+        with mesh, use_mesh(mesh, rules=rules):
+            pipe = jax.jit(lambda p, x: stage_scan(
+                stage, p, x, microbatches=M))(params_sh, x)
+        np.testing.assert_allclose(np.asarray(pipe), np.asarray(seq),
+                                   atol=1e-5)
+        print("STAGE_SCAN_OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=300)
+    assert "STAGE_SCAN_OK" in out.stdout, out.stderr[-2000:]

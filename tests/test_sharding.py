@@ -140,6 +140,54 @@ def test_small_mesh_train_and_decode_lowering():
     assert "LOWERED_OK" in out.stdout, out.stderr[-2000:]
 
 
+@pytest.mark.slow
+def test_divisibility_fallback_on_real_8dev_mesh():
+    """Forced 8-device CPU mesh: physical_spec's divisibility fallback and
+    respec's resharding rules hold on REAL devices — device_put under the
+    resolved spec round-trips the exact bytes, and a recorded (2, 4) spec
+    re-resolves on a (8,) mesh by dropping the absent axis."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.parallel.sharding import physical_spec, respec, spec_entries
+
+        devs = jax.devices()
+        assert len(devs) == 8, devs
+        mesh = Mesh(np.array(devs).reshape(2, 4), ("data", "model"))
+
+        # kv_heads=6 does not divide model=4 -> replicated dim; embed -> data
+        spec = physical_spec(("embed", "kv_heads"), (16, 6), mesh)
+        assert tuple(spec) == ("data", None), spec
+        x = jnp.arange(16 * 6, dtype=jnp.float32).reshape(16, 6)
+        xs = jax.device_put(x, NamedSharding(mesh, spec))
+        assert np.array_equal(np.asarray(jax.device_get(xs)), np.asarray(x))
+
+        # heads=8 divides model=4 -> sharded on real devices
+        spec2 = physical_spec(("embed", "heads"), (16, 8), mesh)
+        assert tuple(spec2) == ("data", "model"), spec2
+        y = jax.device_put(jnp.full((16, 8), 1.5),
+                           NamedSharding(mesh, spec2))
+        assert len({d.id for d in y.devices()}) == 8
+
+        # respec: recorded ("data","model") entries re-resolve on a 1-axis
+        # replay mesh — "model" is absent so that dim replicates, and a
+        # non-dividing dim falls back to its longest dividing prefix
+        m8 = Mesh(np.array(devs).reshape(8), ("data",))
+        r = respec(spec_entries(spec2), (16, 8), m8)
+        assert tuple(r) == ("data", None), r
+        r2 = respec(spec_entries(P(("data", "model"))), (12,), m8)
+        assert tuple(r2) == (None,), r2   # 12 % 8 != 0 -> replicate
+        print("FALLBACK_OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=300)
+    assert "FALLBACK_OK" in out.stdout, out.stderr[-2000:]
+
+
 def test_serve_param_shardings_drop_fsdp():
     """serve_replicate_fsdp: serve-path params lose the 'embed' FSDP dim
     (weights-stationary decode) while train params keep it."""
