@@ -269,5 +269,23 @@ class RunRegistry:
         return store.gc(self.live_keys(store))
 
 
+def registry_dirsig(store_root: str) -> Optional[list]:
+    """Cheap change signature of the registry directory — (mtime_ns, number
+    of JSON records) of ``<store_root>/runs/``. The query index stamps its
+    runs-table mirror with the signature it was built under; a mismatch at
+    query time means registrations/removals/finalizations happened since and
+    the mirror must not be trusted. The directory is stat'ed BEFORE it is
+    listed so a write racing this read can only make the mirror look stale
+    (re-sync), never current with missing rows. None when no registry
+    directory exists (legacy pseudo-run stores — never index-served)."""
+    root = os.path.join(store_root, "runs")
+    try:
+        st = os.stat(root)
+        n = sum(1 for fn in os.listdir(root) if fn.endswith(".json"))
+    except OSError:
+        return None
+    return [int(st.st_mtime_ns), n]
+
+
 def _fsafe(run_id: str) -> str:
     return run_id.replace("/", "_").replace(":", "_")

@@ -62,7 +62,7 @@ class FlorContext:
                  async_materialize: bool = True,
                  full_manifest_every: int = 8, store_root: Optional[str] = None,
                  parent_run: Optional[str] = None, run_id: Optional[str] = None,
-                 async_log: bool = True,
+                 async_log: bool = True, log_index: bool = True,
                  log_queue_depth: int = DEFAULT_QUEUE_DEPTH,
                  log_spill_bytes: int = DEFAULT_SPILL_BYTES,
                  ckpt_quantize_slots=(), ckpt_overlap: bool = False,
@@ -189,6 +189,25 @@ class FlorContext:
         # backward-compat handle (benchmarks call ctx.writer.drain())
         self.writer = self.pipeline.writer if self.pipeline else None
         suffix = "record" if mode == "record" else f"replay_p{pid}"
+        # incremental query-index maintenance (repro.querydb): sealed log
+        # segments are ingested into <store_root>/index/flor.db the moment
+        # they seal, off the step path, drawing from the same epsilon budget
+        # as the logging work itself. Best-effort by design — any failure
+        # just leaves this run file-scan-served.
+        self.log_indexer = None
+        if log_index and self.run_id:
+            try:
+                from repro.querydb import SegmentIndexer
+                self.log_indexer = SegmentIndexer(
+                    self.store_root, self.run_id, suffix,
+                    registry=self.registry,
+                    on_overhead=self.controller.observe_logging)
+                if mode == "replay":
+                    # this attempt rotates its stream below (fresh=True):
+                    # rows a previous attempt indexed are no longer truth
+                    self.log_indexer.invalidate()
+            except Exception:
+                self.log_indexer = None
         # record resumes (seq continues from the tail); each replay attempt
         # rotates its per-pid log so stale lines never pollute deferred_check.
         # async_log (default) puts serialization + I/O on a background stage
@@ -199,7 +218,8 @@ class FlorContext:
             fresh=(mode == "replay"), async_log=async_log,
             queue_depth=log_queue_depth, spill_bytes=log_spill_bytes,
             store=self.store, stream=suffix,
-            on_overhead=self.controller.observe_logging)
+            on_overhead=self.controller.observe_logging,
+            on_seal=(self.log_indexer.on_seal if self.log_indexer else None))
         self._block_keys_meta: dict[str, dict] = {}
         # ---- session-surface state (flor.loop / flor.checkpointing /
         # flor.arg): nesting depth of active flor.loop iterators (0 = the
@@ -500,6 +520,12 @@ class FlorContext:
             self.registry.finalize(self.run_id, final_keys=final_keys,
                                    status=status)
             self._registered = False
+        if self.log_indexer is not None:
+            # log closed above (final segment sealed+ingested), registry
+            # finalized: sync the runs mirror + directory signature so the
+            # whole store's listing is index-serviceable. Best-effort.
+            indexer, self.log_indexer = self.log_indexer, None
+            indexer.finish(self.registry)
         if self.mode == "record" and self._block_profile:
             # merge over any previous profile so a resumed run keeps the
             # epochs it recorded before the restart

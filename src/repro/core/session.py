@@ -82,6 +82,7 @@ class RecordSpec:
     async_materialize: bool = True     # background checkpoint write stage
     full_manifest_every: int = 8       # delta-chain length bound
     async_log: bool = True             # background flor.log (repro.logging)
+    log_index: bool = True             # incremental query index (repro.querydb)
     log_queue_depth: int = DEFAULT_QUEUE_DEPTH    # bounded queue (backpressure)
     log_spill_bytes: int = DEFAULT_SPILL_BYTES    # spill threshold (0 = off)
     ckpt_quantize_slots: tuple = ()    # slots stored lossy-q8 (fused path)
@@ -154,6 +155,7 @@ class ReplaySpec:
     segments: Optional[tuple] = None   # planned visits [(epoch, phase), ...]
     plan: Optional[Any] = None         # a ReplayPlan (repro.replay.plan)
     async_log: bool = True             # background flor.log (repro.logging)
+    log_index: bool = True             # incremental query index (repro.querydb)
     log_queue_depth: int = DEFAULT_QUEUE_DEPTH
     log_spill_bytes: int = DEFAULT_SPILL_BYTES
 
@@ -188,6 +190,7 @@ class ReplaySpec:
         return {"pid": self.pid, "nworkers": self.nworkers,
                 "init_mode": self.init_mode, "probed": set(self.probed),
                 "segments": self.segments, "async_log": self.async_log,
+                "log_index": self.log_index,
                 "log_queue_depth": self.log_queue_depth,
                 "log_spill_bytes": self.log_spill_bytes}
 

@@ -60,9 +60,14 @@ Query the accumulated logs of a whole lineage as data:
     flor.log_records(STORE)           # flat rows: run_id, parent_run, epoch,
                                       #   seq, key, value (+ replay sources)
     flor.pivot(STORE, "loss")         # one row per (run, epoch), keys as cols
+    flor.reindex(STORE)               # catch the sqlite query index up
 
-or from the shell: ``python -m repro.launch.runs logs|pivot --store-root ...``
-(plus the PR-2 ``list|show|gc|rm`` lineage management).
+Queries are served by the incrementally-maintained sqlite index
+(``<store_root>/index/flor.db``, repro.querydb) whenever its watermarks
+prove it current, and fall back to scanning the log files otherwise — the
+two paths return bit-identical rows (docs/queries.md). Or from the shell:
+``python -m repro.launch.runs logs|pivot|reindex --store-root ...`` (plus
+the PR-2 ``list|show|gc|rm`` lineage management).
 
 Legacy surface: ``flor.init/finish/get_context/generator/skipblock`` keep
 working as thin shims but warn with ``FlorDeprecationWarning`` (set
@@ -86,6 +91,7 @@ from repro.core.instrument import (   # noqa: F401
 from repro.core.probes import detect_probes                  # noqa: F401
 from repro.core.query import (log_records, merge_replay_logs,  # noqa: F401
                               pivot)
+from repro.querydb import reindex                            # noqa: F401
 from repro.core.session import (      # noqa: F401
     CheckpointScope, LineageSpec, RecordSpec, ReplaySpec, Session, arg,
     checkpointing, executed, loop)

@@ -7,9 +7,11 @@
     PYTHONPATH=src python -m repro.launch.runs diff RUN_A RUN_B \
         --store-root STORE
     PYTHONPATH=src python -m repro.launch.runs logs --store-root STORE \
-        [--run RUN] [--key loss] [--no-replay]
+        [--run RUN] [--key loss] [--no-replay] [--where key=loss] \
+        [--limit N] [--tail N] [--lineage RUN] [--engine auto|files|index]
     PYTHONPATH=src python -m repro.launch.runs pivot --store-root STORE \
-        [loss grad_norm ...] [--run RUN]
+        [loss grad_norm ...] [--run RUN] [--lineage RUN] [--engine ...]
+    PYTHONPATH=src python -m repro.launch.runs reindex --store-root STORE
 
 `--store-root` also accepts a RUN DIRECTORY (anything containing
 flor.run.json): the CLI follows the binding to the store the run actually
@@ -193,10 +195,27 @@ def cmd_diff(store: CheckpointStore, registry: RunRegistry, args) -> int:
     return 0
 
 
+def _parse_where(pairs) -> dict:
+    """--where col=value (repeatable) -> {col: value}. Values parse as JSON
+    when they can (epoch=3 is the int 3), else stay strings (key=loss)."""
+    out = {}
+    for pair in pairs or ():
+        if "=" not in pair:
+            raise SystemExit(f"--where expects col=value, got {pair!r}")
+        col, raw = pair.split("=", 1)
+        try:
+            out[col.strip()] = json.loads(raw)
+        except json.JSONDecodeError:
+            out[col.strip()] = raw
+    return out
+
+
 def cmd_logs(store: CheckpointStore, registry: RunRegistry, args) -> int:
     rows = log_records(args.store_root, run=args.run, key=args.key,
                        include_replay=not args.no_replay,
-                       inline_spill_bytes=args.inline_spill_bytes)
+                       inline_spill_bytes=args.inline_spill_bytes,
+                       lineage=args.lineage, where=_parse_where(args.where),
+                       limit=args.limit, tail=args.tail, engine=args.engine)
     if not rows:
         print("no log records found")
         return 0
@@ -213,7 +232,8 @@ def cmd_logs(store: CheckpointStore, registry: RunRegistry, args) -> int:
 def cmd_pivot(store: CheckpointStore, registry: RunRegistry, args) -> int:
     rows = pivot(args.store_root, *args.keys, run=args.run,
                  include_replay=not args.no_replay,
-                 inline_spill_bytes=args.inline_spill_bytes)
+                 inline_spill_bytes=args.inline_spill_bytes,
+                 lineage=args.lineage, engine=args.engine)
     if not rows:
         print("no log records found")
         return 0
@@ -235,6 +255,18 @@ def cmd_pivot(store: CheckpointStore, registry: RunRegistry, args) -> int:
                 else f" {str(v if v is not None else '-'):>14}"
         print(line)
     print(f"({len(rows)} rows x {len(cols)} keys)")
+    return 0
+
+
+def cmd_reindex(store: CheckpointStore, registry: RunRegistry, args) -> int:
+    from repro.querydb import reindex
+    stats = reindex(args.store_root)
+    print(f"reindexed {args.store_root}: {stats['runs']} runs, "
+          f"{stats['segments_ingested']} segments ingested "
+          f"({stats['segments_skipped']} already current, "
+          f"{stats['segments_pruned']} pruned), {stats['rows']} rows read; "
+          f"index now holds {stats['records']} records over "
+          f"{stats['segments']} segments ({stats['spilled']} spill refs)")
     return 0
 
 
@@ -274,6 +306,20 @@ def main(argv=None) -> int:
     p_logs.add_argument("--inline-spill-bytes", type=int, default=0,
                         help="resolve spilled values at/below this size "
                              "back to the actual value (0 = keep pointers)")
+    p_logs.add_argument("--where", action="append", metavar="COL=VALUE",
+                        help="equality filter (repeatable; e.g. key=loss, "
+                             "epoch=3, source=record) — pushed into SQL "
+                             "when the index serves")
+    p_logs.add_argument("--limit", type=int, default=None,
+                        help="at most N rows (in global row order)")
+    p_logs.add_argument("--tail", type=int, default=None,
+                        help="only the LAST N rows after filtering")
+    p_logs.add_argument("--lineage", default=None, metavar="RUN",
+                        help="restrict to RUN's ancestor chain (inclusive)")
+    p_logs.add_argument("--engine", default="auto",
+                        choices=("auto", "files", "index"),
+                        help="serving path (default auto: index when fresh, "
+                             "file scan otherwise)")
     p_piv = sub.add_parser("pivot", parents=[common],
                            help="one row per (run, epoch), keys as columns")
     p_piv.add_argument("keys", nargs="*",
@@ -284,14 +330,23 @@ def main(argv=None) -> int:
     p_piv.add_argument("--inline-spill-bytes", type=int, default=0,
                        help="resolve spilled values at/below this size "
                             "back to the actual value (0 = keep pointers)")
+    p_piv.add_argument("--lineage", default=None, metavar="RUN",
+                       help="restrict to RUN's ancestor chain (inclusive)")
+    p_piv.add_argument("--engine", default="auto",
+                       choices=("auto", "files", "index"),
+                       help="serving path (default auto: index when fresh, "
+                            "file scan otherwise)")
+    sub.add_parser("reindex", parents=[common],
+                   help="catch the sqlite query index up with the log "
+                        "segments on disk")
     args = ap.parse_args(argv)
 
     root = resolve_store_root(args.store_root)
     store = CheckpointStore(root)
     registry = RunRegistry(root)
     return {"list": cmd_list, "show": cmd_show, "gc": cmd_gc, "rm": cmd_rm,
-            "diff": cmd_diff, "logs": cmd_logs,
-            "pivot": cmd_pivot}[args.cmd](store, registry, args)
+            "diff": cmd_diff, "logs": cmd_logs, "pivot": cmd_pivot,
+            "reindex": cmd_reindex}[args.cmd](store, registry, args)
 
 
 if __name__ == "__main__":

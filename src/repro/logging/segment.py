@@ -106,10 +106,18 @@ class SegmentSink:
     calling thread in sync-over-segments mode). Segments open lazily on the
     first row, roll at ``roll_bytes``, and are sealed with a footer on roll
     and on close — an unsealed trailing segment is the signature of a
-    crashed writer, and the reader treats it accordingly."""
+    crashed writer, and the reader treats it accordingly.
 
-    def __init__(self, stream_dir: str, roll_bytes: int = DEFAULT_ROLL_BYTES):
+    ``on_seal(path, n, footer)`` fires right after a segment seals — on the
+    sealing thread (the background log stage on roll, the closing thread on
+    close), NEVER on the training step path. The query index's incremental
+    maintenance hangs off this hook: a segment becomes indexable exactly
+    when it becomes immutable."""
+
+    def __init__(self, stream_dir: str, roll_bytes: int = DEFAULT_ROLL_BYTES,
+                 on_seal=None):
         self.dir = stream_dir
+        self.on_seal = on_seal
         self.roll_bytes = max(int(roll_bytes), 1)
         os.makedirs(stream_dir, exist_ok=True)
         segs = list_segments(stream_dir)
@@ -147,28 +155,31 @@ class SegmentSink:
         self._f.write(json.dumps(footer) + "\n")
         self._f.close()
         self._f = None
+        sealed_n = self._n
         self._n += 1
+        if self.on_seal is not None:
+            self.on_seal(segment_path(self.dir, sealed_n), sealed_n, footer)
 
     def close(self):
         self._seal()
 
 
 # ---------------------------------------------------------------- reading --
-def _parse_lines(path: str) -> list[dict]:
-    """Every record line of one file, in file order, skipping seal footers
-    and blank lines. An unparsable FINAL line is a torn tail — the
+def parse_text(text: str, path: str = "<segment>") -> list[dict]:
+    """Every record line of one file's TEXT, in file order, skipping seal
+    footers and blank lines. An unparsable FINAL line is a torn tail — the
     signature of a writer killed mid-write (writers never reopen existing
     segments, so a torn line can only sit at the end of its file) — and is
     skipped. An unparsable line anywhere ELSE is real corruption and
     raises: silently dropping a mid-file record would let the deferred
-    check report fidelity on rows it never compared."""
+    check report fidelity on rows it never compared.
+
+    Exposed at the text level so the query index (``repro.querydb``) can
+    read a captured byte snapshot through the exact same row contract as
+    the file-scan path — the bit-identity guarantee between the two query
+    engines rests on sharing this one parser."""
     out = []
-    try:
-        f = open(path)
-    except OSError:
-        return out
-    with f:
-        lines = f.read().split("\n")
+    lines = text.split("\n")
     last_content = max((i for i, ln in enumerate(lines) if ln.strip()),
                        default=-1)
     for i, line in enumerate(lines):
@@ -186,6 +197,16 @@ def _parse_lines(path: str) -> list[dict]:
         if isinstance(rec, dict) and SEAL_KEY not in rec:
             out.append(rec)
     return out
+
+
+def _parse_lines(path: str) -> list[dict]:
+    """parse_text over one file on disk; a missing file is an empty log."""
+    try:
+        f = open(path)
+    except OSError:
+        return []
+    with f:
+        return parse_text(f.read(), path)
 
 
 def read_stream(path: str) -> list[dict]:

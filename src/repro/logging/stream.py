@@ -76,6 +76,7 @@ class FingerprintLog:
                  spill_bytes: Optional[int] = DEFAULT_SPILL_BYTES,
                  store=None, stream: Optional[str] = None,
                  on_overhead: Optional[Callable] = None,
+                 on_seal: Optional[Callable] = None,
                  roll_bytes: int = DEFAULT_ROLL_BYTES):
         self.path = path
         self.stream = stream or \
@@ -100,7 +101,13 @@ class FingerprintLog:
         self._f = None
         self._sink = None
         if segmented:
-            self._sink = SegmentSink(path, roll_bytes=roll_bytes)
+            # on_seal is the query index's incremental-maintenance hook
+            # (repro.querydb): it fires on the sealing thread — the
+            # background stage on roll, the closing thread on close — so
+            # index upkeep rides the same off-step-path budget as the
+            # serialize+write work itself
+            self._sink = SegmentSink(path, roll_bytes=roll_bytes,
+                                     on_seal=on_seal)
         else:
             self._f = open(path, "w" if fresh else "a", buffering=1)
         self._stage = AsyncStage(self._emit, max_queue=queue_depth) \

@@ -1,0 +1,521 @@
+"""The incremental query engine (repro.querydb): seal-hook maintenance off
+the step path, watermark freshness (unsealed tails, replay rotation, flat
+files), reindex catch-up, WAL reader-during-writer, and — the correctness
+contract — bit-identical rows between the index and file-scan engines on
+every query shape the surface supports."""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+import repro.flor as flor
+from repro.checkpoint.lineage import RunRegistry, registry_dirsig
+from repro.core.query import _ancestors, log_records, pivot
+from repro.logging import FingerprintLog
+from repro.logging.segment import list_segments, segment_path
+from repro.querydb import (FLAT_SEG, LogIndex, SegmentIndexer, ensure_index,
+                           index_path, open_index, reindex)
+
+
+def _state(x=0.0):
+    return {"w": np.arange(6.0) + x, "b": np.zeros(3) + x}
+
+
+def _record(run_dir, store, run_id, parent=None, epochs=2, **spec_kw):
+    lineage = flor.LineageSpec(store_root=store, run_id=run_id,
+                               parent_run=parent)
+    with flor.Session(run_dir, record=flor.RecordSpec(adaptive=False,
+                                                      **spec_kw),
+                      lineage=lineage) as sess:
+        with sess.checkpointing(state=_state()) as ckpt:
+            for e in sess.loop("epochs", range(epochs)):
+                for _ in sess.loop("train", range(2)):
+                    ckpt.state = {k: v + 1.0 for k, v in ckpt.state.items()}
+                sess.log("loss", 1.0 / (e + 1))
+                sess.log("acc", e * 0.125)
+
+
+def _assert_engines_agree(path, **kw):
+    files = log_records(path, engine="files", **kw)
+    auto = log_records(path, engine="auto", **kw)
+    indexed = log_records(path, engine="index", **kw)
+    assert auto == files
+    assert indexed == files            # bit-identity: the contract
+    return files
+
+
+# ------------------------------------------------ live seal-hook feeder ----
+def test_seal_hook_indexes_rolled_segments_not_tail(tmp_path):
+    """Rolled (sealed) segments are ingested the moment they seal; the
+    unsealed tail NEVER is — so mid-run queries fall back to the file scan
+    and stay bit-identical, and close-time sealing makes the run fully
+    index-served."""
+    store = str(tmp_path / "store")
+    run_dir = str(tmp_path / "run")
+    registry = RunRegistry(store)
+    registry.register("r1", run_dir=run_dir)
+    # give the run dir a query-surface identity (pseudo-meta not needed:
+    # the registry record carries run_dir)
+    indexer = SegmentIndexer(store, "r1", "record", registry=registry)
+    lp = os.path.join(run_dir, "logs", "record.jsonl")
+    log = FingerprintLog(lp, async_log=True, store=None,
+                         on_seal=indexer.on_seal, roll_bytes=256)
+    for i in range(40):
+        log.log(i // 10, "loss", float(i))
+    log.drain()
+    while len(LogIndex(store).stream_segments("r1", "record")) \
+            >= len(list_segments(lp)):
+        # keep logging until an UNSEALED tail segment exists on disk
+        log.log(4, "loss", float(len(list_segments(lp)) * 1000))
+        log.drain()                    # all rows durable, rolls done
+
+    idx = LogIndex(store)
+    segs_on_disk = list_segments(lp)
+    marks = idx.stream_segments("r1", "record")
+    assert marks, "rolled segments were not ingested by the seal hook"
+    # the tail segment (still open for appends) must not be watermarked
+    assert len(marks) < len(segs_on_disk)
+    assert all(s["sealed"] for s in (
+        dict(zip(("sealed",), row)) for row in idx.conn.execute(
+            "SELECT sealed FROM segments WHERE run_id='r1'")))
+    # mid-run: index can't cover the stream -> auto falls back, identical
+    streams = [("record", lp)]
+    assert not idx.covers("r1", streams)
+    idx.close()
+    mid = _kw_rows(store)
+    assert [r["value"] for r in mid["files"][:40]] == \
+        [float(i) for i in range(40)]
+    assert mid["auto"] == mid["files"]
+    with pytest.raises(RuntimeError):
+        log_records(store, engine="index")
+
+    log.close()                        # seals the tail -> hook ingests it
+    indexer.finish(registry)
+    idx = LogIndex(store)
+    assert idx.covers("r1", streams)
+    idx.close()
+    _assert_engines_agree(store)
+
+
+def _kw_rows(path):
+    return {"files": log_records(path, engine="files"),
+            "auto": log_records(path, engine="auto")}
+
+
+def test_seal_hook_reports_overhead_and_degrades_silently(tmp_path):
+    store = str(tmp_path / "store")
+    seen = []
+    indexer = SegmentIndexer(store, "r1", "record",
+                             on_overhead=lambda s, b: seen.append((s, b)))
+    seg_dir = str(tmp_path / "run" / "logs" / "record.jsonl")
+    os.makedirs(seg_dir)
+    p = segment_path(seg_dir, 0)
+    with open(p, "w") as f:
+        f.write(json.dumps({"epoch": 0, "seq": 0, "key": "k",
+                            "value": 1}) + "\n")
+    indexer.on_seal(p, 0, {})
+    assert len(seen) == 1 and seen[0][0] >= 0
+    # a failing ingest (missing file) kills the hook, silently
+    indexer.on_seal(segment_path(seg_dir, 99), 99, {})
+    assert indexer.dead
+    indexer.on_seal(p, 0, {})          # dead hook: no-op, no raise
+    indexer.finish()
+
+
+# ------------------------------------------------ replay rotation ----------
+def test_replay_reattempt_invalidates_stream(tmp_path):
+    store = str(tmp_path / "store")
+    run = str(tmp_path / "run")
+    _record(run, store, "base", epochs=2)
+    for attempt in range(2):           # two replay attempts, same pid
+        with flor.Session(run, mode="replay") as sess:
+            with sess.checkpointing(state=_state()) as ckpt:
+                for e in sess.loop("epochs", range(2)):
+                    for _ in sess.loop("train", range(2)):
+                        pass
+            sess.log("probe", attempt * 100)
+    rows = _assert_engines_agree(store)
+    probes = [r for r in rows if r["key"] == "probe"]
+    # only the LAST attempt's row survives — rotation truncated the stream
+    # and invalidation dropped the indexed rows of the previous attempt
+    assert [r["value"] for r in probes] == [100]
+    idx = LogIndex(store)
+    vals = [json.loads(v) for (v,) in idx.conn.execute(
+        "SELECT value_json FROM records WHERE key='probe'")]
+    idx.close()
+    assert vals == [100]
+
+
+def test_invalidate_stream_drops_rows_and_watermarks(tmp_path):
+    store = str(tmp_path / "store")
+    idx = ensure_index(store)
+    seg_dir = str(tmp_path / "s")
+    os.makedirs(seg_dir)
+    p = segment_path(seg_dir, 0)
+    with open(p, "w") as f:
+        f.write(json.dumps({"epoch": 0, "seq": 0, "key": "k",
+                            "value": 1}) + "\n")
+    idx.ingest_segment("r", "replay_p0", 0, p, sealed=True)
+    assert idx.stream_segments("r", "replay_p0")
+    idx.invalidate_stream("r", "replay_p0")
+    assert idx.stream_segments("r", "replay_p0") == {}
+    assert idx.conn.execute("SELECT COUNT(*) FROM records").fetchone()[0] == 0
+    idx.close()
+
+
+# ------------------------------------------------ reindex catch-up ---------
+def test_reindex_catches_up_unindexed_runs_and_stale_tails(tmp_path):
+    store = str(tmp_path / "store")
+    # recorded with the live feeder OFF: no index exists at all
+    _record(str(tmp_path / "a"), store, "base", log_index=False)
+    _record(str(tmp_path / "b"), store, "ft1", parent="base",
+            log_index=False)
+    assert open_index(store) is None
+    with pytest.raises(RuntimeError):
+        log_records(store, engine="index")
+
+    stats = reindex(store)
+    assert stats["runs"] == 2 and stats["records"] > 0
+    assert os.path.exists(index_path(store))
+    _assert_engines_agree(store)
+    _assert_engines_agree(store, lineage="ft1")
+
+    # grow a stream past its watermark: covers() must refuse until the
+    # next reindex re-ingests under the new size
+    rd = str(tmp_path / "a")
+    log = FingerprintLog(os.path.join(rd, "logs", "record.jsonl"))
+    log.log(9, "late", 3.14)
+    log.close()
+    kw = _kw_rows(store)                           # auto fell back for base
+    assert kw["auto"] == kw["files"]
+    assert any(r["key"] == "late" for r in kw["auto"])
+    with pytest.raises(RuntimeError):              # stale run: index refuses
+        log_records(store, engine="index")
+    again = reindex(store)
+    assert again["segments_ingested"] >= 1
+    assert any(r["key"] == "late"
+               for r in log_records(store, engine="index"))
+
+    # idempotent when nothing changed
+    third = reindex(store)
+    assert third["segments_ingested"] == 0 and third["segments_pruned"] == 0
+
+
+def test_reindex_flat_file_and_torn_tail(tmp_path):
+    """Flat (sync-mode) streams index as one size-watermarked pseudo-
+    segment; a torn final line parses identically in both engines (shared
+    parser)."""
+    store = str(tmp_path / "store")
+    run = str(tmp_path / "run")
+    _record(run, store, "base", async_log=False, log_index=False)
+    lp = os.path.join(run, "logs", "record.jsonl")
+    assert os.path.isfile(lp)          # flat layout
+    with open(lp, "a") as f:
+        f.write('{"epoch": 7, "seq": 99, "key": "torn", "val')  # torn tail
+    reindex(store)
+    idx = LogIndex(store)
+    assert FLAT_SEG in idx.stream_segments("base", "record")
+    idx.close()
+    rows = _assert_engines_agree(store)
+    assert all(r["key"] != "torn" for r in rows)
+
+
+def test_reindex_prunes_deleted_streams(tmp_path):
+    store = str(tmp_path / "store")
+    run = str(tmp_path / "run")
+    _record(run, store, "base")
+    with flor.Session(run, mode="replay") as sess:
+        with sess.checkpointing(state=_state()) as ckpt:
+            for e in sess.loop("epochs", range(2)):
+                for _ in sess.loop("train", range(2)):
+                    pass
+        sess.log("probe", 1)
+    # simulate a cleaned-up replay stream: delete it from disk
+    logs = os.path.join(run, "logs")
+    victims = [fn for fn in os.listdir(logs) if fn.startswith("replay_")]
+    assert victims
+    import shutil
+    for fn in victims:
+        p = os.path.join(logs, fn)
+        shutil.rmtree(p) if os.path.isdir(p) else os.remove(p)
+    stats = reindex(store)
+    assert stats["segments_pruned"] >= 1
+    _assert_engines_agree(store)
+
+
+def test_reindex_legacy_pseudo_run_dir(tmp_path):
+    """A bare pre-lineage run dir (no registry, no flor.run.json) queries as
+    a pseudo-run; reindex makes even that index-servable, and the runs
+    mirror is never trusted for it (its identity depends on the queried
+    path)."""
+    run = str(tmp_path / "legacy")
+    os.makedirs(os.path.join(run, "logs"))
+    with open(os.path.join(run, "logs", "record.jsonl"), "w") as f:
+        for e in range(3):
+            f.write(json.dumps({"epoch": e, "seq": e, "key": "loss",
+                                "value": 0.5 * e}) + "\n")
+    reindex(run)
+    rows = _assert_engines_agree(run)
+    assert len(rows) == 3
+    assert pivot(run, "loss", engine="index") == \
+        pivot(run, "loss", engine="files")
+
+
+# ------------------------------------------------ freshness: runs mirror ---
+def test_runs_mirror_staleness_on_new_registration(tmp_path):
+    store = str(tmp_path / "store")
+    _record(str(tmp_path / "a"), store, "base")
+    sig = registry_dirsig(store)
+    idx = LogIndex(store)
+    assert idx.runs_listing(sig) is not None      # synced at session close
+    idx.close()
+    # register another run WITHOUT syncing the mirror: signature moves,
+    # the mirror refuses, and the query (JSON fallback) still sees it
+    RunRegistry(store).register("ghost", run_dir=str(tmp_path / "g"))
+    idx = LogIndex(store)
+    assert idx.runs_listing(registry_dirsig(store)) is None
+    idx.close()
+    assert any(r.get("run_id") == "ghost"
+               for r in _runs_of(store))
+
+
+def _runs_of(store):
+    from repro.core.query import _open_engine, _runs_listing
+    root, idx = _open_engine(store, "auto")
+    try:
+        listing, _ = _runs_listing(store, root, idx)
+        return listing
+    finally:
+        if idx is not None:
+            idx.close()
+
+
+# ------------------------------------------------ lineage CTE --------------
+def test_lineage_cte_matches_python_walk(tmp_path):
+    store = str(tmp_path / "store")
+    _record(str(tmp_path / "a"), store, "base")
+    _record(str(tmp_path / "b"), store, "mid", parent="base")
+    _record(str(tmp_path / "c"), store, "leaf", parent="mid")
+    listing = RunRegistry(store).list_runs()
+    idx = LogIndex(store)
+    for rid in ("base", "mid", "leaf", "nosuch"):
+        assert idx.ancestry_ids(rid) == _ancestors(listing, rid)
+    idx.close()
+    for rid in ("base", "mid", "leaf"):
+        rows = _assert_engines_agree(store, lineage=rid)
+        chain = {r["run_id"] for r in rows}
+        assert chain == {"base", "mid", "leaf"} & _ancestors(listing, rid)
+    # pivot over the chain
+    assert pivot(store, "loss", lineage="mid", engine="index") == \
+        pivot(store, "loss", lineage="mid", engine="files")
+
+
+# ------------------------------------------------ filters ------------------
+def test_where_limit_tail_equivalence(tmp_path):
+    store = str(tmp_path / "store")
+    _record(str(tmp_path / "a"), store, "base", epochs=3)
+    _record(str(tmp_path / "b"), store, "ft1", parent="base", epochs=3)
+    cases = [
+        {},
+        {"key": "loss"},
+        {"key": ("loss", "acc")},
+        {"where": {"key": "loss"}},
+        {"where": {"epoch": 1}},
+        {"where": {"epoch": 1, "key": "acc"}},
+        {"where": {"source": "record"}},
+        {"where": {"run_id": "ft1"}},
+        {"where": {"value": 0.5}},               # post-filtered, both paths
+        {"limit": 3},
+        {"limit": 0},
+        {"tail": 4},
+        {"limit": 8, "tail": 2},
+        {"where": {"key": "loss"}, "limit": 2},
+        {"where": {"key": "loss"}, "tail": 2},
+        {"run": "base", "where": {"epoch": 2}, "limit": 1},
+    ]
+    for kw in cases:
+        _assert_engines_agree(store, **kw)
+    # sanity on semantics, not just equality
+    assert len(log_records(store, limit=3, engine="index")) == 3
+    t = log_records(store, tail=2, engine="index")
+    assert t == log_records(store, engine="index")[-2:]
+
+
+# ------------------------------------------------ spill refs ---------------
+def test_spill_refs_indexed_and_inlined_identically(tmp_path):
+    store = str(tmp_path / "store")
+    run = str(tmp_path / "run")
+    lineage = flor.LineageSpec(store_root=store, run_id="base")
+    with flor.Session(run, record=flor.RecordSpec(adaptive=False,
+                                                  log_spill_bytes=64),
+                      lineage=lineage) as sess:
+        with sess.checkpointing(state=_state()) as ckpt:
+            for e in sess.loop("epochs", range(2)):
+                for _ in sess.loop("train", range(2)):
+                    ckpt.state = {k: v + 1.0
+                                  for k, v in ckpt.state.items()}
+                sess.log("hist", np.arange(64.0) + e)   # 512B > 64B: spills
+    idx = LogIndex(store)
+    refs = idx.conn.execute(
+        "SELECT spill_ref, spill_digest FROM records "
+        "WHERE spill_ref IS NOT NULL").fetchall()
+    idx.close()
+    assert len(refs) == 2 and all(d for _, d in refs)
+    # pointer rows identical across engines...
+    rows = _assert_engines_agree(store, key="hist")
+    assert all(isinstance(r["value"], dict) and "ref" in r["value"]
+               for r in rows)
+    # ...and resolved values identical too (store touched post-filter only)
+    fi = log_records(store, key="hist", inline_spill_bytes=1 << 20,
+                     engine="files")
+    ix = log_records(store, key="hist", inline_spill_bytes=1 << 20,
+                     engine="index")
+    assert fi == ix
+    assert fi[0]["value"] == list(np.arange(64.0))
+
+
+# ------------------------------------------------ WAL concurrency ----------
+def test_wal_reader_during_writer(tmp_path):
+    """A query handle keeps answering while a writer ingests — WAL's one
+    writer + N readers. The reader may see older or newer watermarks, never
+    an error or a torn transaction."""
+    store = str(tmp_path / "store")
+    run_dir = str(tmp_path / "run")
+    RunRegistry(store).register("r1", run_dir=run_dir)
+    seg_dir = os.path.join(run_dir, "logs", "record.jsonl")
+    os.makedirs(seg_dir)
+    paths = []
+    for n in range(30):
+        p = segment_path(seg_dir, n)
+        with open(p, "w") as f:
+            for j in range(20):
+                seq = n * 20 + j
+                f.write(json.dumps({"epoch": n, "seq": seq, "key": "loss",
+                                    "value": float(seq)}) + "\n")
+            f.write(json.dumps({"__seal__": 1, "rows": 20,
+                                "first_seq": n * 20,
+                                "last_seq": n * 20 + 19}) + "\n")
+        paths.append(p)
+    writer = ensure_index(store)
+    errors = []
+
+    def _ingest():
+        try:
+            for n, p in enumerate(paths):
+                writer.ingest_segment("r1", "record", n, p, sealed=True)
+        except Exception as e:                    # pragma: no cover
+            errors.append(e)
+
+    t = threading.Thread(target=_ingest)
+    t.start()
+    try:
+        for _ in range(50):
+            rows = log_records(store)             # reader during writer
+            vals = [r["value"] for r in rows]
+            assert vals == [float(i) for i in range(len(vals))]
+    finally:
+        t.join()
+        writer.close()
+    assert not errors
+    reindex(store)                                # runs mirror sync
+    assert len(log_records(store, engine="index")) == 600
+
+
+# ------------------------------------------------ crash safety -------------
+def test_watermark_commits_with_rows_atomically(tmp_path):
+    """Rows and watermark land in ONE transaction: after a simulated crash
+    mid-ingest (rollback), neither is visible and the segment re-ingests
+    cleanly."""
+    store = str(tmp_path / "store")
+    idx = ensure_index(store)
+    seg_dir = str(tmp_path / "s")
+    os.makedirs(seg_dir)
+    p = segment_path(seg_dir, 0)
+    with open(p, "w") as f:
+        f.write(json.dumps({"epoch": 0, "seq": 0, "key": "k",
+                            "value": 1}) + "\n")
+    real_conn = idx.conn
+
+    class _CrashAfterRows:
+        """Delegate to the real connection, but die right after the row
+        insert — between the rows and their watermark."""
+        def __getattr__(self, name):
+            return getattr(real_conn, name)
+
+        def __enter__(self):
+            return real_conn.__enter__()
+
+        def __exit__(self, *exc):
+            return real_conn.__exit__(*exc)
+
+        def executemany(self, *a, **k):
+            real_conn.executemany(*a, **k)
+            raise RuntimeError("crash between rows and watermark")
+
+    idx.conn = _CrashAfterRows()
+    with pytest.raises(RuntimeError):
+        idx.ingest_segment("r", "record", 0, p, sealed=True)
+    idx.conn = real_conn
+    assert idx.stream_segments("r", "record") == {}
+    assert idx.conn.execute("SELECT COUNT(*) FROM records").fetchone()[0] == 0
+    n = idx.ingest_segment("r", "record", 0, p, sealed=True)
+    assert n == 1 and idx.stream_segments("r", "record")
+    idx.close()
+
+
+def test_future_schema_degrades_to_file_scan(tmp_path):
+    store = str(tmp_path / "store")
+    _record(str(tmp_path / "a"), store, "base")
+    idx = LogIndex(store)
+    with idx.conn:
+        idx.conn.execute("UPDATE meta SET v='999' WHERE k='schema_version'")
+    idx.close()
+    assert open_index(store) is None
+    rows = log_records(store)                     # auto: silent fallback
+    assert rows == log_records(store, engine="files")
+    with pytest.raises(RuntimeError):
+        log_records(store, engine="index")
+
+
+# ------------------------------------------------ existing fixture shapes --
+def test_bit_identity_on_lineage_fixture(tmp_path):
+    """The exact store shape of test_session_api's lineage fixture
+    (warm-started derived run) answers identically from both engines."""
+    store = str(tmp_path / "store")
+    _record(str(tmp_path / "base"), store, "base")
+    with flor.Session(str(tmp_path / "ft1"), mode="record",
+                      record=flor.RecordSpec(adaptive=False),
+                      lineage=flor.LineageSpec(store_root=store,
+                                               run_id="ft1",
+                                               parent_run="base")) as sess:
+        start = sess.warm_start("train", like={"state": _state()})
+        with sess.checkpointing(state=start["state"]) as ckpt:
+            for e in sess.loop("epochs", range(2)):
+                for _ in sess.loop("train", range(3)):
+                    ckpt.state = {k: v + 1.0
+                                  for k, v in ckpt.state.items()}
+                sess.log("loss", float(ckpt.state["w"][0]))
+    _assert_engines_agree(store)
+    assert pivot(store, "loss", engine="index") == \
+        pivot(store, "loss", engine="files")
+    # a run DIR resolves through its binding on both engines
+    assert pivot(str(tmp_path / "ft1"), "loss", engine="index") == \
+        pivot(str(tmp_path / "ft1"), "loss", engine="files")
+
+
+def test_bit_identity_on_private_store(tmp_path):
+    """A session with no shared store (private <run_dir>/store) still gets
+    a live-maintained index beside its private store."""
+    run = str(tmp_path / "run")
+    with flor.Session(run, record=flor.RecordSpec(adaptive=False)) as sess:
+        with sess.checkpointing(state=_state()) as ckpt:
+            for e in sess.loop("epochs", range(3)):
+                for _ in sess.loop("train", range(2)):
+                    ckpt.state = {k: v + 1.0 for k, v in ckpt.state.items()}
+                sess.log("loss", float(e))
+    assert os.path.exists(index_path(os.path.join(run, "store")))
+    _assert_engines_agree(run)
+    assert pivot(run, "loss", engine="index") == \
+        pivot(run, "loss", engine="files")
