@@ -1,46 +1,73 @@
-"""Paper Table 4: checkpoint storage footprint and S3 $/month.
+"""Paper Table 4: checkpoint storage footprint and S3 $/month, plus the
+adaptive wire-encoding acceptance gates.
 
-Also quantifies what the paper's lean checkpointing becomes here: chunk-level
-content dedup — the fine-tune-like workload (frozen majority) stores a small
-fraction of its logical bytes.
+Two sections:
+
+* **table4** — the florbench workload pair recorded through the Session
+  API; logical vs stored vs transferred bytes, stored-bytes-per-checkpoint,
+  and the S3 cost the paper prices.
+* **encodings** — direct pipeline A/B runs over three slot classes
+  (q4-eligible bounded, raw-fallback bounded, exact). These carry the
+  PR's hard gates (asserted in-harness, so ``--strict`` CI fails on
+  regression):
+
+    - q4 wire >= 1.8x smaller than q8 on slots whose error bound admits it;
+    - the writer-thread entropy stage >= 1.2x on a compressible slot class;
+    - restored error <= the declared bound, exact slots bit-identical;
+    - bounded-slot storage >= 2x smaller than the fixed-q8 policy
+      (entropy off) those slots used before adaptive encodings;
+    - auto full-manifest cadence restores no slower than the fixed-K
+      default (<= 1.1x, with absolute slack for timer noise).
+
+Run standalone: ``SMOKE=1 PYTHONPATH=src:. python -m
+benchmarks.storage_cost``. SMOKE only shrinks sizes and step counts.
 """
 from __future__ import annotations
 
+import os
 import shutil
+import time
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
 import repro.flor as flor
 from benchmarks.common import (Rows, S3_USD_PER_GB_MONTH, finetune_like,
                                make_runner, train_like)
+from repro.checkpoint import CheckpointPipeline, CheckpointStore
+from repro.utils.pytree import tree_bytes
 
-EPOCHS = 8
+SMOKE = bool(os.environ.get("SMOKE"))
+EPOCHS = 4 if SMOKE else 8
+ENC_ELEMS = 64 * 1024 if SMOKE else 256 * 1024   # f32 per encoded slot
+ENC_STEPS = 6 if SMOKE else 12
+CHUNK_WORDS = 1024
 
 
+# ------------------------------------------------------ table4 workloads --
 def _record(cfg, kw, run_dir):
     shutil.rmtree(run_dir, ignore_errors=True)
     state0, run_epoch = make_runner(cfg, **kw)
-    flor.init(run_dir, mode="record", adaptive=False)
-    state = state0
     logical = 0
-    for e in flor.generator(range(EPOCHS)):
-        if flor.skipblock.step_into("train"):
-            state, _ = run_epoch(state, e)
-        state = flor.skipblock.end("train", state)
-        from repro.utils.pytree import tree_bytes
-        logical += tree_bytes(state)
-    ctx = flor.get_context()
-    ctx.pipeline.drain()
-    stored = ctx.store.stored_bytes()
-    # device->host bytes the delta pipeline actually moved (vs `logical`,
-    # which is what the pre-pipeline full-transfer path copied every epoch)
-    transferred = sum(s.get("transferred_bytes", 0) for s in ctx.pipeline.stats)
-    flor.finish()
+    with flor.Session(run_dir, mode="record",
+                      record=flor.RecordSpec(adaptive=False)) as sess:
+        with sess.checkpointing(state=state0) as ckpt:
+            for e in sess.loop("epochs", range(EPOCHS)):
+                for _ in sess.loop("train", range(1)):
+                    ckpt.state, _ = run_epoch(ckpt.state, e)
+                logical += tree_bytes(ckpt.state)
+        ctx = sess.ctx
+        ctx.pipeline.drain()
+        stored = ctx.store.stored_bytes()
+        # device->host bytes the delta pipeline actually moved (vs
+        # `logical`, what the pre-pipeline full-transfer path copied)
+        transferred = sum(s.get("transferred_bytes", 0)
+                          for s in ctx.pipeline.stats)
     return logical, stored, transferred
 
 
-def run(rows: Rows, tmp="/tmp/bench_storage"):
+def run_table4(rows: Rows, tmp="/tmp/bench_storage"):
     for name, (cfg, kw) in (("train_like", train_like()),
                             ("finetune_like", finetune_like())):
         logical, stored, transferred = _record(cfg, kw, f"{tmp}/{name}")
@@ -49,12 +76,189 @@ def run(rows: Rows, tmp="/tmp/bench_storage"):
                  round(logical / 2 ** 20, 1), f"{EPOCHS} epoch ckpts")
         rows.add("storage_cost(table4)", f"{name}_stored_mb",
                  round(stored / 2 ** 20, 1), "post dedup+compression")
+        rows.add("storage_cost(table4)", f"{name}_stored_kb_per_ckpt",
+                 round(stored / EPOCHS / 2 ** 10, 1),
+                 "marginal footprint of one more checkpoint")
         rows.add("storage_cost(table4)", f"{name}_transferred_mb",
                  round(transferred / 2 ** 20, 1), "delta pipeline DMA")
         rows.add("storage_cost(table4)", f"{name}_compression_x",
                  round(logical / max(stored, 1), 1))
         rows.add("storage_cost(table4)", f"{name}_s3_usd_month",
                  round(gb * S3_USD_PER_GB_MONTH, 4), "paper: <$1/mo")
+
+
+# --------------------------------------------------- encoding A/B gates --
+# Three slot classes drive the gates, recorded one per store so stored
+# bytes attribute cleanly:
+#   mu — low-amplitude smooth f32 under atol 1e-3: the selector picks q4
+#        (absmax/13.5 <= atol) on every chunk;
+#   nu — unit-amplitude smooth f32 under a bound too tight for any lossy
+#        encoding: raw fallback WITHIN a lossy policy, the slot class the
+#        byte-plane-shuffle entropy stage exists for;
+#   w  — exact (no policy): must stay bit-identical everywhere.
+# The store compresses every chunk at rest, so all ratios below are
+# at-rest bytes — what actually lands on disk / S3.
+
+def _mu_slot(step: int) -> np.ndarray:
+    x = np.linspace(0.0, 60.0, ENC_ELEMS, dtype=np.float32)
+    return (0.01 * np.sin(x * (1.0 + 0.05 * step) + step)) \
+        .astype(np.float32)
+
+
+def _nu_slot(step: int) -> np.ndarray:
+    x = np.linspace(0.0, 60.0, ENC_ELEMS, dtype=np.float32)
+    return np.sin(x * (1.0 + 0.05 * step) + 2.0 * step).astype(np.float32)
+
+
+def _exact_slot(step: int) -> np.ndarray:
+    rng = np.random.default_rng(1000 + step)
+    return rng.normal(size=ENC_ELEMS // 4).astype(np.float32)
+
+
+def _record_encoded(root, tree_of_step, *, error_bounds=None,
+                    quantize_slots=None, entropy=True, full_every=8,
+                    calib=None):
+    """Record ENC_STEPS checkpoints of ``tree_of_step(i)``; returns
+    (store, at-rest stored bytes)."""
+    shutil.rmtree(root, ignore_errors=True)
+    store = CheckpointStore(os.path.join(root, "store"))
+    if calib:
+        store.put_meta("store_calib", calib)
+    pipe = CheckpointPipeline(store, chunk_words=CHUNK_WORDS,
+                              full_every=full_every, async_stage=True,
+                              error_bounds=error_bounds,
+                              quantize_slots=quantize_slots,
+                              entropy=entropy)
+    for i in range(ENC_STEPS):
+        pipe.submit(f"ck{i}", {k: jnp.asarray(v)
+                               for k, v in tree_of_step(i).items()},
+                    block=True)
+    pipe.drain()
+    stored = store.stored_bytes()
+    pipe.close()
+    return store, stored
+
+
+def _chain_hops(store, key):
+    """Delta-manifest hops from `key` back to its full ancestor."""
+    hops = 0
+    m = store.get_manifest(key)
+    while m.get("kind") == "delta":
+        hops += 1
+        m = store.get_manifest(m["parent"])
+    return hops
+
+
+def _restore_wall(store, key, like, trials=5):
+    ts = []
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        store.get_tree(key, like=like)
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def run_encodings(rows: Rows, tmp="/tmp/bench_storage_enc"):
+    atol = 1e-3
+    bench = "storage_cost(encodings)"
+    mu_tree = lambda i: {"mu": _mu_slot(i)}           # noqa: E731
+    nu_tree = lambda i: {"nu": _nu_slot(i)}           # noqa: E731
+
+    # -- gate: q4 >= 1.8x smaller than the fixed-q8 policy on mu ---------
+    _, b_q8 = _record_encoded(f"{tmp}/q8", mu_tree,
+                              quantize_slots=("mu",), entropy=False)
+    _, b_q4 = _record_encoded(f"{tmp}/q4", mu_tree,
+                              error_bounds={"mu": atol}, entropy=False)
+    _, b_ad = _record_encoded(f"{tmp}/adaptive", mu_tree,
+                              error_bounds={"mu": atol}, entropy=True)
+    rows.add(bench, "mu_stored_q8_kb", round(b_q8 / 2 ** 10, 1),
+             f"{ENC_STEPS} ckpts, fixed q8 (pre-adaptive policy)")
+    rows.add(bench, "mu_stored_q4_kb", round(b_q4 / 2 ** 10, 1),
+             f"error bound {atol} -> q4 selected per chunk")
+    rows.add(bench, "mu_stored_adaptive_kb", round(b_ad / 2 ** 10, 1),
+             "q4 + writer-thread entropy stage")
+    r_q4 = b_q8 / max(b_q4, 1)
+    rows.add(bench, "q4_vs_q8_shrink_x", round(r_q4, 2), "gate: >= 1.8x")
+    assert r_q4 >= 1.8, f"q4 shrink {r_q4:.2f}x < 1.8x over q8"
+    r_total = b_q8 / max(b_ad, 1)
+    rows.add(bench, "adaptive_vs_q8_shrink_x", round(r_total, 2),
+             "gate: >= 2x vs the fixed-q8 policy")
+    assert r_total >= 2.0, \
+        f"adaptive encodings shrink {r_total:.2f}x < 2x vs fixed q8"
+
+    # -- gate: entropy >= 1.2x on the raw-fallback slot class ------------
+    # nu's bound admits no lossy encoding (absmax/126 >> 1e-9), so its
+    # chunks ship raw and the entropy stage byte-plane-shuffles the f32
+    # payload — the transform the store's own at-rest compressor lacks.
+    _, b_nu = _record_encoded(f"{tmp}/nu_plain", nu_tree,
+                              error_bounds={"nu": 1e-9}, entropy=False)
+    s_nu_z, b_nu_z = _record_encoded(f"{tmp}/nu_entropy", nu_tree,
+                                     error_bounds={"nu": 1e-9},
+                                     entropy=True)
+    rows.add(bench, "nu_stored_plain_kb", round(b_nu / 2 ** 10, 1),
+             "raw fallback, store at-rest compression only")
+    rows.add(bench, "nu_stored_entropy_kb", round(b_nu_z / 2 ** 10, 1),
+             "+ byte-plane shuffle off the step path")
+    r_z = b_nu / max(b_nu_z, 1)
+    rows.add(bench, "entropy_shrink_x", round(r_z, 2),
+             "gate: >= 1.2x on the raw-fallback slot class")
+    assert r_z >= 1.2, f"entropy stage shrink {r_z:.2f}x < 1.2x"
+    nu_lf = {l["path"]: l for l in
+             s_nu_z.resolve_manifest("ck0")["leaves"]}["[\'nu\']"]
+    assert any(e == "raw+z" for e in nu_lf["enc"]), \
+        "entropy stage left no raw+z chunks on the compressible slot"
+
+    # -- gate: bound respected, exact slots bit-identical ----------------
+    last = ENC_STEPS - 1
+    full = lambda i: {"mu": _mu_slot(i), "nu": _nu_slot(i),   # noqa: E731
+                      "w": _exact_slot(i)}
+    s_all, b_all = _record_encoded(f"{tmp}/all", full,
+                                   error_bounds={"mu": atol, "nu": 1e-9},
+                                   entropy=True)
+    rows.add(bench, "kb_per_ckpt_adaptive",
+             round(b_all / ENC_STEPS / 2 ** 10, 1),
+             "mu+nu+w tree, all encodings live")
+    like = {"mu": np.empty(ENC_ELEMS, np.float32),
+            "nu": np.empty(ENC_ELEMS, np.float32),
+            "w": np.empty(ENC_ELEMS // 4, np.float32)}
+    out = s_all.get_tree(f"ck{last}", like=like)
+    err = float(np.max(np.abs(out["mu"] - _mu_slot(last))))
+    rows.add(bench, "mu_restore_max_err", round(err, 6),
+             f"gate: <= declared bound {atol}")
+    assert err <= atol, f"restored error {err} exceeds bound {atol}"
+    assert np.array_equal(out["nu"], _nu_slot(last)), \
+        "raw-fallback chunks must stay exact despite the lossy policy"
+    assert np.array_equal(out["w"], _exact_slot(last)), \
+        "exact slot not bit-identical through the adaptive store"
+    rows.add(bench, "exact_slots_bit_identical", 1,
+             "w (no policy) and nu (raw fallback)")
+
+    # -- gate: auto full-manifest cadence restores no slower than fixed --
+    s_fix, _ = _record_encoded(f"{tmp}/cadence_fixed", full,
+                               error_bounds={"mu": atol}, full_every=8)
+    s_auto, _ = _record_encoded(
+        f"{tmp}/cadence_auto", full, error_bounds={"mu": atol},
+        full_every="auto",
+        calib={"read_bps": 200e6, "hop_s": 0.01})   # restore-bound store
+    t_fix = _restore_wall(s_fix, f"ck{last}", like)
+    t_auto = _restore_wall(s_auto, f"ck{last}", like)
+    hops_fix = _chain_hops(s_fix, f"ck{last}")
+    hops_auto = _chain_hops(s_auto, f"ck{last}")
+    rows.add(bench, "fixed_chain_hops", hops_fix)
+    rows.add(bench, "auto_chain_hops", hops_auto,
+             "restore-bound calib -> shorter chains")
+    rows.add(bench, "auto_vs_fixed_restore_x",
+             round(t_auto / max(t_fix, 1e-9), 2), "gate: <= 1.1x")
+    assert hops_auto <= hops_fix, \
+        f"auto cadence lengthened chains ({hops_auto} > {hops_fix}) on a " \
+        "restore-bound store"
+    assert t_auto <= 1.1 * t_fix + 0.05, \
+        f"auto-cadence restore {t_auto:.4f}s > 1.1x fixed {t_fix:.4f}s"
+
+
+def run(rows: Rows, tmp="/tmp/bench_storage"):
+    run_table4(rows, tmp=tmp)
+    run_encodings(rows, tmp=f"{tmp}_enc")
 
 
 if __name__ == "__main__":

@@ -19,9 +19,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.ops import (CHUNK_WORDS, fingerprint_and_changed,
-                               fingerprint_leaf, gather_changed_blocks,
+from repro.kernels.ops import (CHUNK_WORDS, chunk_absmax,
+                               fingerprint_and_changed, fingerprint_leaf,
+                               gather_changed_blocks, gather_quantize4_blocks,
                                gather_quantize_blocks, native_bytes_per_word)
+
+# Error-bound encoding selector thresholds. The TRUE per-element bound of a
+# blockwise codec is half a quantization step: absmax/254 for q8 (scale =
+# absmax/127), absmax/14 for q4 (scale = absmax/7). The selector divides by
+# smaller figures so f32 scale rounding can never push a chunk past its
+# declared atol — the bound it GUARANTEES is absmax/Q8_ATOL_DIV (resp. q4).
+Q8_ATOL_DIV = 126.0
+Q4_ATOL_DIV = 13.5
 
 
 def blocks_to_native_bytes(blocks: np.ndarray, dtype) -> list[bytes]:
@@ -54,7 +63,8 @@ class DeltaTracker:
         self.chunk_words = chunk_words
         self._digests: dict[str, jnp.ndarray] = {}
 
-    def delta_dispatch(self, path: str, leaf, *, quantize: bool = False) -> dict:
+    def delta_dispatch(self, path: str, leaf, *, quantize: bool = False,
+                       enc: str = None, error_bound: float = None) -> dict:
         """Phase 1 of a delta: launch the device work (fused fingerprint +
         changed-mask when a previous digest exists) WITHOUT any host sync,
         and update the stored digest to the new device array. Returns an
@@ -63,6 +73,15 @@ class DeltaTracker:
         the writer thread; the synchronous path composes both in
         :meth:`delta`.
 
+        Encoding selection: ``enc`` fixes the wire encoding of every changed
+        chunk ("raw" | "q8" | "q4"; ``quantize=True`` is the legacy spelling
+        of enc="q8"). ``error_bound`` switches to the ADAPTIVE selector
+        instead: a per-chunk absmax pass (``chunk_absmax``, one extra leaf
+        read, dispatched async here) lets finalize pick, per changed chunk,
+        the cheapest encoding whose guaranteed bound satisfies the atol —
+        q4 when absmax/13.5 <= atol, else q8 when absmax/126 <= atol, else
+        raw. Float leaves only (the caller gates on quantizable_dtype).
+
         The handle retains references to `leaf` and the new digest — safe
         for jax arrays because nothing in this codebase donates buffers, so
         a deferred finalize gathers from the exact submitted state even if
@@ -70,6 +89,10 @@ class DeltaTracker:
         REFERENCE: a caller that mutates one in place between dispatch and
         finalize would gather post-mutation bytes (functional updates, the
         norm here, are unaffected)."""
+        if enc is None:
+            enc = "q8" if quantize else "raw"
+        if error_bound is not None:
+            enc = "auto"
         nbytes = int(leaf.nbytes) if hasattr(leaf, "nbytes") \
             else int(np.asarray(leaf).nbytes)
         dtype = leaf.dtype if hasattr(leaf, "dtype") \
@@ -87,20 +110,56 @@ class DeltaTracker:
             mask = None
             first = True                              # first sight: all new
         self._digests[path] = digest
+        absmax = chunk_absmax(leaf, self.chunk_words) if enc == "auto" \
+            else None
         return {"path": path, "leaf": leaf, "digest": digest, "mask": mask,
-                "first": first, "quantize": bool(quantize),
+                "first": first, "enc": enc, "quantize": (enc == "q8"),
+                "error_bound": error_bound, "absmax": absmax,
                 "nbytes": nbytes, "bpw": bpw}
 
+    def _gather_group(self, h: dict, enc: str, idx: np.ndarray,
+                      n_real: int) -> dict:
+        """Gather one encoding group's changed rows off the device. The
+        gather width pads to the next power of two (capped at the chunk
+        count) so fluctuating change counts compile O(log G) gather variants
+        per leaf instead of one per novel count. Returns
+        {enc, idx, bytes, <wire arrays per encoding>}."""
+        c = int(idx.size)
+        cap = min(1 << (c - 1).bit_length(), n_real)
+        idx_pad = jnp.asarray(np.concatenate(
+            [idx, np.full(cap - c, idx[0], idx.dtype)]), jnp.int32)
+        if enc == "q8":
+            q, s = gather_quantize_blocks(h["leaf"], idx_pad,
+                                          self.chunk_words)
+            q = np.ascontiguousarray(np.asarray(jax.device_get(q))[:c])
+            s = np.ascontiguousarray(np.asarray(jax.device_get(s))[:c])
+            return {"enc": "q8", "idx": idx, "q": q, "scales": s,
+                    "bytes": int(q.nbytes + s.nbytes)}
+        if enc == "q4":
+            p, s = gather_quantize4_blocks(h["leaf"], idx_pad,
+                                           self.chunk_words)
+            p = np.ascontiguousarray(np.asarray(jax.device_get(p))[:c])
+            s = np.ascontiguousarray(np.asarray(jax.device_get(s))[:c])
+            return {"enc": "q4", "idx": idx, "packed": p, "scales": s,
+                    "bytes": int(p.nbytes + s.nbytes)}
+        rows = np.asarray(jax.device_get(gather_changed_blocks(
+            h["leaf"], idx_pad, self.chunk_words)))
+        rows = np.ascontiguousarray(rows[:c])
+        return {"enc": "raw", "idx": idx, "blocks": rows,
+                "bytes": int(rows.nbytes)}
+
     def finalize(self, h: dict) -> dict:
-        """Phase 2: sync the change mask, gather the changed rows (plain u32
-        rows, or wire-format int8 q + scales when the handle was dispatched
-        with ``quantize=True``), and return the delta record. Touches no
+        """Phase 2: sync the change mask, gather the changed rows in wire
+        form per the handle's encoding (fixed raw/q8/q4, or the adaptive
+        error-bound selector), and return the delta record. Touches no
         tracker state, so it is safe to run on the writer thread while the
         training thread keeps dispatching.
 
-        Returns {digest, mask (np bool [G]), changed_blocks (np [C, W] u32
-        or None), changed_q / changed_scales (quantized rows or None),
-        changed_idx, transferred_bytes, total_bytes}."""
+        Returns {digest, mask (np bool [G]), enc_groups ([{enc, idx, ...}]
+        — one group per distinct wire encoding chosen), changed_idx,
+        transferred_bytes, total_bytes} plus the legacy single-encoding
+        fields (changed_blocks for raw handles, changed_q/changed_scales
+        for q8) older callers still read."""
         digest = h["digest"]
         g = int(digest.shape[0])
         if h["first"]:
@@ -110,44 +169,48 @@ class DeltaTracker:
         nbytes, bpw = h["nbytes"], h["bpw"]
         n_real = max(1, -(-nbytes // (self.chunk_words * bpw)))
         idx = np.flatnonzero(mask[:n_real])
-        changed = None
-        changed_q = changed_scales = None
+        enc = h.get("enc", "q8" if h.get("quantize") else "raw")
+        groups: list[dict] = []
         transferred = 0
         if idx.size:
-            # pad the gather width to the next power of two (capped at the
-            # chunk count) so fluctuating change counts compile O(log G)
-            # gather variants per leaf instead of one per novel count
-            c = int(idx.size)
-            cap = min(1 << (c - 1).bit_length(), n_real)
-            idx_pad = jnp.asarray(np.concatenate(
-                [idx, np.full(cap - c, idx[0], idx.dtype)]), jnp.int32)
-            if h["quantize"]:
-                q, s = gather_quantize_blocks(h["leaf"], idx_pad,
-                                              self.chunk_words)
-                changed_q = np.ascontiguousarray(
-                    np.asarray(jax.device_get(q))[:c])
-                changed_scales = np.ascontiguousarray(
-                    np.asarray(jax.device_get(s))[:c])
-                transferred = int(changed_q.nbytes + changed_scales.nbytes)
+            if enc == "auto":
+                # per-chunk selector: the cheapest encoding whose GUARANTEED
+                # bound (absmax / divisor) satisfies the slot's atol
+                amax = np.asarray(jax.device_get(h["absmax"]))[idx]
+                atol = float(h["error_bound"])
+                pick = np.where(
+                    amax / Q4_ATOL_DIV <= atol, "q4",
+                    np.where(amax / Q8_ATOL_DIV <= atol, "q8", "raw"))
+                for e in ("q4", "q8", "raw"):
+                    sub = idx[pick == e]
+                    if sub.size:
+                        groups.append(self._gather_group(h, e, sub, n_real))
             else:
-                rows = np.asarray(jax.device_get(gather_changed_blocks(
-                    h["leaf"], idx_pad, self.chunk_words)))
-                changed = np.ascontiguousarray(rows[:c])
-                transferred = int(changed.nbytes)
-        elif not h["quantize"]:
-            changed = np.zeros((0, self.chunk_words), np.uint32)
+                groups.append(self._gather_group(h, enc, idx, n_real))
+            transferred = sum(gr["bytes"] for gr in groups)
+        # legacy single-encoding view (raw/q8 callers predate enc_groups)
+        changed = None
+        changed_q = changed_scales = None
+        if enc == "raw":
+            changed = groups[0]["blocks"] if groups \
+                else np.zeros((0, self.chunk_words), np.uint32)
+        elif enc == "q8" and groups:
+            changed_q = groups[0]["q"]
+            changed_scales = groups[0]["scales"]
         return {
             "digest": np.asarray(jax.device_get(digest)),
             "mask": mask,
             "changed_blocks": changed,
             "changed_q": changed_q,
             "changed_scales": changed_scales,
+            "enc_groups": groups,
             "changed_idx": idx,
             "transferred_bytes": transferred,
             "total_bytes": int(g * self.chunk_words * 4),
         }
 
-    def delta(self, path: str, leaf, *, quantize: bool = False) -> dict:
+    def delta(self, path: str, leaf, *, quantize: bool = False,
+              enc: str = None, error_bound: float = None) -> dict:
         """Synchronous delta: dispatch + finalize in one call (see the two
         phases above). Updates the stored digest — call exactly once per
         MATERIALIZED checkpoint so the mask always means "changed since the
@@ -161,7 +224,8 @@ class DeltaTracker:
         the u32 block view is never materialized for it.
         """
         return self.finalize(self.delta_dispatch(path, leaf,
-                                                 quantize=quantize))
+                                                 quantize=quantize, enc=enc,
+                                                 error_bound=error_bound))
 
     def seed(self, path: str, leaf):
         """Rehydrate one leaf's device-side digests from restored bytes

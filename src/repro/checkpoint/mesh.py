@@ -178,15 +178,16 @@ def _read_shard_range(store, mleaf: dict, store_shard: int, c_lo: int,
                       c_hi: int, dt: np.dtype,
                       stats: Optional[dict]) -> bytes:
     """Decoded native bytes of chunks [c_lo, c_hi) of one recorded device
-    shard (q8 chunks dequantize transparently, as in the flat get_tree)."""
+    shard (encoded chunks — q8 / q4 / entropy-compressed — decode
+    transparently, as in the flat get_tree)."""
     enc = mleaf.get("enc")
     chunks = mleaf["chunks"]
     parts = []
     for i in range(c_lo, c_hi):
         raw = store.get_chunk(chunks[i], shard=store_shard)
-        if enc and enc[i] == "q8":
-            from repro.kernels.ops import q8_decode_chunk
-            raw = q8_decode_chunk(raw, dt)
+        if enc and enc[i] != "raw":
+            from repro.kernels.ops import decode_wire_chunk
+            raw = decode_wire_chunk(raw, enc[i], dt)
         parts.append(raw)
     out = b"".join(parts)
     _note_read(stats, store_shard, len(out), c_hi - c_lo)

@@ -38,21 +38,28 @@ Delta manifest format (store manifest v3)::
       "leaves": [{
          "path": str, "dtype": str, "shape": [int], "nbytes": int,
          "n_chunks": int,
-         "leaf_enc": "q8",           # slot POLICY, only when lossy
+         "leaf_enc": "q8"|"eb:...",  # slot POLICY, only when lossy
          "chunks": [hash, ...],      # kind == "full": complete ordered list
-         "enc": ["raw"|"q8", ...],   # full only, parallel to chunks; only
-                                     # present when any chunk is non-raw
+         "enc": [enc, ...],          # full only, parallel to chunks; only
+                                     # present when any chunk is non-raw.
+                                     # Per-chunk enc is "raw" | "q8" | "q4",
+                                     # optionally suffixed "+z" when the
+                                     # writer-thread entropy stage kept a
+                                     # compressed payload
          "delta": {"<idx>": hash},   # kind == "delta": changed indices only
-         "denc": {"<idx>": "q8"},    # delta only: non-raw changed chunks
+         "denc": {"<idx>": enc},     # delta only: non-raw changed chunks
       }, ...],
     }
 
 v2 manifests (no per-chunk encodings — everything raw/exact) remain fully
 readable; `resolve_manifest` inherits encodings through the parent chain
-exactly like chunk hashes, and `get_tree` dequantizes q8 chunks
-transparently on restore. Exact slots restore bit-identical; q8 slots
-restore with per-element error bounded by half a quantization step
-(absmax_block / 254).
+exactly like chunk hashes, and `get_tree` decodes non-raw chunks
+transparently on restore (kernels.ops.decode_wire_chunk). Exact slots
+restore bit-identical; q8 slots restore with per-element error bounded by
+half a quantization step (absmax_block / 254), q4 by absmax_block / 14.
+Slots declared via ``error_bounds`` pick, per changed chunk, the cheapest
+encoding whose GUARANTEED bound (delta.Q4_ATOL_DIV / Q8_ATOL_DIV margins)
+satisfies the slot's atol.
 
 Mesh-aware record (``mesh=``): the same flow runs PER DEVICE SHARD — each
 shard's fused fingerprint+gather pass reads only its own buffer, its wire
@@ -101,10 +108,16 @@ import numpy as np
 
 from repro.checkpoint.async_writer import AsyncWriter
 from repro.checkpoint.delta import DeltaTracker, blocks_to_native_bytes
-from repro.kernels.ops import (Q8_BLOCK, native_bytes_per_word,
-                               q8_encode_chunk, quantizable_dtype)
+from repro.kernels.ops import (Q4_BLOCK, Q8_BLOCK, native_bytes_per_word,
+                               q4_encode_chunk, q8_encode_chunk,
+                               quantizable_dtype)
+from repro.parallel.compression import entropy_encode_bytes
 
 DEFAULT_FULL_EVERY = 8
+# fallback hop cost for full_every="auto" before any replay calibration has
+# been learned — mirror of replay.plan.RESTORE_HOP_S (kept local: pipeline
+# must not import the replay layer)
+DEFAULT_HOP_S = 0.002
 # storage/fingerprint granularity: 16384 u32 words = 64 KiB chunks for
 # 4-byte dtypes. Finer chunks transfer marginally less but cost one object
 # FILE per chunk — at 4 KiB the filesystem round-trips dominate the write
@@ -114,15 +127,23 @@ PIPELINE_CHUNK_WORDS = 16 * 1024
 
 class CheckpointPipeline:
     def __init__(self, store, *, chunk_words: int = PIPELINE_CHUNK_WORDS,
-                 full_every: int = DEFAULT_FULL_EVERY,
+                 full_every=DEFAULT_FULL_EVERY,
                  async_stage: bool = True, max_queue: int = 2,
                  on_materialized=None,
                  quantize_slots: Optional[Iterable[str]] = None,
+                 error_bounds: Optional[dict] = None,
+                 entropy: bool = True,
                  overlap: bool = False,
                  mesh=None, shard_axes: Iterable[str] = ()):
         self.store = store
         self.chunk_words = chunk_words
-        self.full_every = max(1, int(full_every))
+        # full_every="auto": start at the default cadence and retune after
+        # every full manifest from the store's learned read/hop costs — see
+        # _retune_full_every. Restore-bound stores shorten chains; stores
+        # with cheap manifest hops lengthen them.
+        self.full_every_auto = (full_every == "auto")
+        self.full_every = DEFAULT_FULL_EVERY if self.full_every_auto \
+            else max(1, int(full_every))
         self.tracker = DeltaTracker(chunk_words)
         # mesh-aware record: each device shard runs the fused fingerprint
         # pass over its OWN buffer, its chunks land in its host's store
@@ -142,6 +163,16 @@ class CheckpointPipeline:
         # dtype supports it. Empty (the default) = every leaf exact, so the
         # bit-identical restore invariant holds unless explicitly opted out.
         self.quantize_slots = tuple(quantize_slots or ())
+        # declarative per-slot error bounds: {slot_or_glob: atol}. A matching
+        # leaf uses the ADAPTIVE encoding selector — per changed chunk, the
+        # cheapest wire encoding (q4 / q8 / raw) whose guaranteed blockwise
+        # bound satisfies the atol. Takes precedence over quantize_slots.
+        self.error_bounds = dict(error_bounds or {})
+        # writer-thread entropy stage: byte-compress already-gathered wire
+        # chunks of lossy-policy leaves off the step path (kept only when it
+        # actually shrinks them). Requires the async stage — a sync pipeline
+        # would pay it on the training thread, violating the epsilon budget.
+        self.entropy = bool(entropy)
         # overlap mode defers mask-sync + gather to the writer thread; it
         # needs the async stage to exist (sync pipelines gain nothing)
         self.overlap = bool(overlap) and async_stage
@@ -161,18 +192,31 @@ class CheckpointPipeline:
         self._encs: dict[str, dict[str, list]] = {}
         self._stats: list[dict] = []
 
-    def _slot_enc(self, pstr: str, dtype: str) -> str:
-        """Per-leaf encoding decision: "q8" when the leaf path matches a
-        quantize_slots entry (slot name or glob over the keystr path) AND
-        the dtype is one the fused quantize path supports; "raw" otherwise.
-        """
-        if not self.quantize_slots or not quantizable_dtype(dtype):
+    def _slot_policy(self, pstr: str, dtype: str) -> str:
+        """Per-leaf encoding POLICY: "eb:<atol>" when the leaf path matches
+        an error_bounds entry (adaptive selector), "q8" when it matches a
+        quantize_slots entry, "raw" otherwise. Both matchers take a slot
+        name or a glob over the keystr path, and only fire when the dtype is
+        one the fused quantize path supports. error_bounds wins when a leaf
+        matches both."""
+        if not quantizable_dtype(dtype):
             return "raw"
+        for pat, atol in self.error_bounds.items():
+            if _match_slot(pstr, pat):
+                return f"eb:{float(atol):g}"
         for pat in self.quantize_slots:
-            if f"['{pat}']" in pstr or f'["{pat}"]' in pstr \
-                    or f".{pat}" in pstr or fnmatch.fnmatch(pstr, pat):
+            if _match_slot(pstr, pat):
                 return "q8"
         return "raw"
+
+    @staticmethod
+    def _policy_delta_kwargs(policy: str) -> dict:
+        """DeltaTracker kwargs for one leaf policy string."""
+        if policy.startswith("eb:"):
+            return {"error_bound": float(policy[3:])}
+        if policy != "raw":
+            return {"enc": policy}
+        return {}
 
     # -------------------------------------------------------------- record --
     def submit(self, key: str, tree: Any, meta: Optional[dict] = None,
@@ -203,17 +247,19 @@ class CheckpointPipeline:
             dtype = str(leaf.dtype)
             shape = list(getattr(leaf, "shape", ()))
             nbytes = _leaf_nbytes(leaf)
-            enc = self._slot_enc(pstr, dtype)
-            # the encoding is part of the structure signature: flipping a
-            # slot's policy forces a FULL manifest (and a digest reset), so
-            # a chain never inherits chunks recorded under another encoding
-            # without declaring it per-chunk
-            sig[pstr] = (dtype, tuple(shape), enc)
+            policy = self._slot_policy(pstr, dtype)
+            # the policy is part of the structure signature: flipping a
+            # slot's policy (or changing its error bound) forces a FULL
+            # manifest (and a digest reset), so a chain never inherits
+            # chunks recorded under another encoding without declaring it
+            # per-chunk. Per-chunk choices WITHIN one "eb:" policy do not
+            # force fulls — the manifest's enc/denc fields carry them.
+            sig[pstr] = (dtype, tuple(shape), policy)
             if nbytes == 0:
                 payload_leaves.append({
                     "path": pstr, "dtype": dtype, "shape": shape,
                     "nbytes": 0, "n_chunks": 0, "enc": "raw",
-                    "changed_idx": [], "chunks": []})
+                    "changed_idx": [], "chunks": [], "chunk_encs": []})
                 continue
             tpath = f"{scope}::{pstr}"
             old = prev_sig.get(pstr)
@@ -226,21 +272,22 @@ class CheckpointPipeline:
             n_chunks = -(-nbytes // (self.chunk_words
                                      * native_bytes_per_word(dtype)))
             lmeta = {"path": pstr, "dtype": dtype, "shape": shape,
-                     "nbytes": nbytes, "n_chunks": n_chunks, "enc": enc}
+                     "nbytes": nbytes, "n_chunks": n_chunks, "enc": policy}
             logical += nbytes
             total_chunks_n += n_chunks
+            dkw = self._policy_delta_kwargs(policy)
             if self.overlap:
                 # dispatch-only: the fused fingerprint+mask launches here;
                 # mask sync, gather and encode run on the writer thread
                 lmeta["handle"] = self.tracker.delta_dispatch(
-                    tpath, _fp_view(leaf), quantize=(enc == "q8"))
+                    tpath, _fp_view(leaf), **dkw)
             else:
-                d = self.tracker.delta(tpath, _fp_view(leaf),
-                                       quantize=(enc == "q8"))
-                idx_keep, chunks_keep, t_bytes = _encode_changed(
+                d = self.tracker.delta(tpath, _fp_view(leaf), **dkw)
+                idx_keep, chunks_keep, encs_keep, t_bytes = _encode_changed(
                     d, lmeta, self.chunk_words)
                 lmeta["changed_idx"] = idx_keep
                 lmeta["chunks"] = chunks_keep
+                lmeta["chunk_encs"] = encs_keep
                 transferred += t_bytes
                 changed_chunks_n += len(idx_keep)
             payload_leaves.append(lmeta)
@@ -318,23 +365,29 @@ class CheckpointPipeline:
                     if h is None:              # zero-byte leaf
                         continue
                     d = self.tracker.finalize(h)
-                    idx_keep, chunks_keep, t_bytes = _encode_changed(
-                        d, leaf, payload["chunk_words"])
+                    idx_keep, chunks_keep, encs_keep, t_bytes = \
+                        _encode_changed(d, leaf, payload["chunk_words"])
                     leaf["changed_idx"] = idx_keep
                     leaf["chunks"] = chunks_keep
+                    leaf["chunk_encs"] = encs_keep
                     transferred += t_bytes
                     changed_n += len(idx_keep)
                 payload["transferred_bytes"] = transferred
                 payload["changed_chunks"] = changed_n
+            entropy_s = sum(self._entropy_pass(leaf)
+                            for leaf in payload["leaves"])
             hashes_map = self._hashes.setdefault(scope, {})
             encs_map = self._encs.setdefault(scope, {})
             full = payload["kind"] == "full"
             new_bytes = 0
             new_chunks = 0
+            stored_bytes = 0
             manifest_leaves = []
             for leaf in payload["leaves"]:
                 path, n = leaf["path"], leaf["n_chunks"]
                 lenc = leaf.get("enc", "raw")
+                cencs = leaf.get("chunk_encs") \
+                    or ["raw"] * len(leaf["changed_idx"])
                 base = hashes_map.get(path)
                 if base is None or len(base) != n:
                     base = [None] * n
@@ -346,13 +399,15 @@ class CheckpointPipeline:
                 else:
                     ebase = list(ebase)
                 delta_hashes = {}
-                for i, data in zip(leaf["changed_idx"], leaf["chunks"]):
+                for i, data, ce in zip(leaf["changed_idx"], leaf["chunks"],
+                                       cencs):
                     h, nb, new = store.put_chunk(data)
                     base[i] = h
-                    ebase[i] = lenc
+                    ebase[i] = ce
                     delta_hashes[str(i)] = h
                     new_bytes += nb
                     new_chunks += int(new)
+                    stored_bytes += len(data)
                 if any(h is None for h in base):
                     raise RuntimeError(
                         f"delta pipeline inconsistency for leaf {path!r}: "
@@ -374,8 +429,11 @@ class CheckpointPipeline:
                         mleaf["enc"] = ebase
                 else:
                     mleaf["delta"] = delta_hashes
-                    if lenc != "raw" and delta_hashes:
-                        mleaf["denc"] = {i: lenc for i in delta_hashes}
+                    denc = {str(i): ce
+                            for i, ce in zip(leaf["changed_idx"], cencs)
+                            if ce != "raw"}
+                    if denc:
+                        mleaf["denc"] = denc
                 manifest_leaves.append(mleaf)
             if full:    # drop leaves that left the tree
                 current = {lf["path"] for lf in payload["leaves"]}
@@ -389,6 +447,8 @@ class CheckpointPipeline:
                 "chunk_words": payload["chunk_words"],
                 "meta": payload["meta"], "leaves": manifest_leaves,
             })
+            if full:
+                self._retune_full_every(store, payload["logical_bytes"])
             return {"key": payload["key"], "kind": payload["kind"],
                     "parent": payload["parent"],
                     "transferred_bytes": payload["transferred_bytes"],
@@ -397,8 +457,64 @@ class CheckpointPipeline:
                     "total_chunks": payload["total_chunks"],
                     "submit_stall_s": payload["submit_stall_s"],
                     "overlap": payload.get("overlap", False),
-                    "new_bytes": new_bytes, "new_chunks": new_chunks}
+                    "new_bytes": new_bytes, "new_chunks": new_chunks,
+                    "stored_bytes": stored_bytes,
+                    "entropy_s": entropy_s,
+                    "full_every": self.full_every}
         return job
+
+    def _entropy_pass(self, leaf: dict) -> float:
+        """Writer-thread entropy stage for one leaf: byte-compress its wire
+        chunks in place (suffixing the chunk encoding with "+z") when the
+        leaf has a lossy policy and compression actually pays — a payload is
+        kept only below 0.95x its original size, so restore never decodes a
+        compression pass that bought nothing. Runs ONLY when an async writer
+        exists; on a sync pipeline this stage would land on the training
+        thread and silently inflate the foreground stall. Returns seconds
+        spent (the caller reports them as ``entropy_s`` so the adaptive
+        controller can move them to the background accumulator)."""
+        if self.writer is None or not self.entropy:
+            return 0.0
+        if leaf.get("enc", "raw") == "raw" or not leaf.get("chunks"):
+            return 0.0
+        t0 = time.perf_counter()
+        chunks = leaf["chunks"]
+        cencs = list(leaf.get("chunk_encs")
+                     or ["raw"] * len(chunks))
+        # raw chunks of a lossy-policy leaf (adaptive selector fallback) are
+        # still float words — byte-plane shuffle at the dtype's width;
+        # q8/q4 payloads are already byte-homogeneous, stride 1
+        raw_isz = 2 if leaf["dtype"] in ("bfloat16", "float16") else 4
+        for j, (data, ce) in enumerate(zip(chunks, cencs)):
+            if ce.endswith("+z"):
+                continue
+            z = entropy_encode_bytes(
+                data, itemsize=raw_isz if ce == "raw" else 1)
+            if len(z) < 0.95 * len(data):
+                chunks[j] = z
+                cencs[j] = ce + "+z"
+        leaf["chunk_encs"] = cencs
+        return time.perf_counter() - t0
+
+    def _retune_full_every(self, store, full_bytes: int):
+        """Close the loop on the full-manifest cadence (full_every="auto"):
+        pick the chain length K whose worst-case replay overhead — K
+        manifest hops — costs about half the time re-reading a full
+        checkpoint does, using the store's measured read bandwidth and the
+        learned per-hop resolve cost (PR-6 restore calibration). A
+        restore-bound store (expensive hops) gets short chains; a store with
+        cheap local hops amortizes fulls over long ones. Runs on the writer
+        thread right after each full manifest; submit() reads the updated
+        value for the next cadence decision."""
+        if not self.full_every_auto:
+            return
+        calib = store.get_meta("store_calib") or {}
+        read_bps = float(calib.get("read_bps") or calib.get("write_bps")
+                         or 1e9)
+        hop_s = float(calib.get("hop_s") or DEFAULT_HOP_S)
+        full_read_s = full_bytes / max(read_bps, 1.0)
+        self.full_every = min(64, max(2, int(0.5 * full_read_s
+                                             / max(hop_s, 1e-9))))
 
     # ------------------------------------------------------ sharded record --
     def _submit_sharded(self, key: str, tree: Any, meta: Optional[dict],
@@ -430,9 +546,9 @@ class CheckpointPipeline:
             dtype = str(leaf.dtype)
             shape = list(getattr(leaf, "shape", ()))
             nbytes = _leaf_nbytes(leaf)
-            enc = self._slot_enc(pstr, dtype)
+            policy = self._slot_policy(pstr, dtype)
             if nbytes == 0:
-                sig[pstr] = (dtype, tuple(shape), enc, ())
+                sig[pstr] = (dtype, tuple(shape), policy, ())
                 layout.append({"path": pstr, "dtype": dtype, "shape": shape,
                                "nbytes": 0, "spec": None, "shards": []})
                 continue
@@ -443,7 +559,7 @@ class CheckpointPipeline:
             mesh_sig = tuple((s["sid"], s["hid"],
                               tuple(map(tuple, s["bounds"])))
                              for s in shards)
-            sig[pstr] = (dtype, tuple(shape), enc, mesh_sig)
+            sig[pstr] = (dtype, tuple(shape), policy, mesh_sig)
             layout.append({"path": pstr, "dtype": dtype, "shape": shape,
                            "nbytes": nbytes,
                            "spec": leaf_spec_entries(leaf),
@@ -465,19 +581,20 @@ class CheckpointPipeline:
                 ent = {"path": pstr, "sid": s["sid"], "hid": s["hid"],
                        "bounds": s["bounds"], "dtype": dtype,
                        "shape": list(getattr(local, "shape", ())),
-                       "nbytes": lnb, "n_chunks": n_chunks, "enc": enc}
+                       "nbytes": lnb, "n_chunks": n_chunks, "enc": policy}
                 total_chunks_n += n_chunks
+                dkw = self._policy_delta_kwargs(policy)
                 t0 = time.perf_counter()
                 if self.overlap:
                     ent["handle"] = self.tracker.delta_dispatch(
-                        tpath, _fp_view(local), quantize=(enc == "q8"))
+                        tpath, _fp_view(local), **dkw)
                 else:
-                    d = self.tracker.delta(tpath, _fp_view(local),
-                                           quantize=(enc == "q8"))
-                    idx_keep, chunks_keep, t_bytes = _encode_changed(
-                        d, ent, self.chunk_words)
+                    d = self.tracker.delta(tpath, _fp_view(local), **dkw)
+                    idx_keep, chunks_keep, encs_keep, t_bytes = \
+                        _encode_changed(d, ent, self.chunk_words)
                     ent["changed_idx"] = idx_keep
                     ent["chunks"] = chunks_keep
+                    ent["chunk_encs"] = encs_keep
                     transferred += t_bytes
                     changed_chunks_n += len(idx_keep)
                 # per-host foreground cost: hosts run concurrently in a
@@ -545,10 +662,11 @@ class CheckpointPipeline:
                     continue
                 t0 = time.perf_counter()
                 d = self.tracker.finalize(h)
-                idx_keep, chunks_keep, t_bytes = _encode_changed(
+                idx_keep, chunks_keep, encs_keep, t_bytes = _encode_changed(
                     d, ent, payload["chunk_words"])
                 ent["changed_idx"] = idx_keep
                 ent["chunks"] = chunks_keep
+                ent["chunk_encs"] = encs_keep
                 transferred += t_bytes
                 changed_n += len(idx_keep)
                 ss = payload["shard_stall_s"]
@@ -556,6 +674,8 @@ class CheckpointPipeline:
                     + (time.perf_counter() - t0)
             payload["transferred_bytes"] = transferred
             payload["changed_chunks"] = changed_n
+        entropy_s = sum(self._entropy_pass(ent)
+                        for ent in payload["entries"])
         hashes_map = self._hashes.setdefault(scope, {})
         encs_map = self._encs.setdefault(scope, {})
         full = payload["kind"] == "full"
@@ -575,6 +695,8 @@ class CheckpointPipeline:
                 wkey = f"{ent['path']}::shard{ent['sid']}"
                 n = ent["n_chunks"]
                 lenc = ent["enc"]
+                cencs = ent.get("chunk_encs") \
+                    or ["raw"] * len(ent["changed_idx"])
                 base = hashes_map.get(wkey)
                 base = [None] * n if base is None or len(base) != n \
                     else list(base)
@@ -582,10 +704,11 @@ class CheckpointPipeline:
                 ebase = ["raw"] * n if ebase is None or len(ebase) != n \
                     else list(ebase)
                 delta_hashes = {}
-                for i, data in zip(ent["changed_idx"], ent["chunks"]):
+                for i, data, ce in zip(ent["changed_idx"], ent["chunks"],
+                                       cencs):
                     h, nb, new = store.put_chunk(data, shard=hid)
                     base[i] = h
-                    ebase[i] = lenc
+                    ebase[i] = ce
                     delta_hashes[str(i)] = h
                     new_bytes += nb
                     new_chunks += int(new)
@@ -608,8 +731,11 @@ class CheckpointPipeline:
                         mleaf["enc"] = ebase
                 else:
                     mleaf["delta"] = delta_hashes
-                    if lenc != "raw" and delta_hashes:
-                        mleaf["denc"] = {i: lenc for i in delta_hashes}
+                    denc = {str(i): ce
+                            for i, ce in zip(ent["changed_idx"], cencs)
+                            if ce != "raw"}
+                    if denc:
+                        mleaf["denc"] = denc
                 mleaves.append(mleaf)
             member_key = f"{key}.shard{hid}"
             store.put_manifest({
@@ -640,6 +766,8 @@ class CheckpointPipeline:
         if not self._mesh_meta_written:
             store.put_meta("mesh", payload["mesh"])
             self._mesh_meta_written = True
+        if full:
+            self._retune_full_every(store, payload["logical_bytes"])
         return {"key": key, "kind": payload["kind"], "sharded": True,
                 "parent": parent,
                 "transferred_bytes": payload["transferred_bytes"],
@@ -652,7 +780,9 @@ class CheckpointPipeline:
                 "n_store_shards": len(by_hid),
                 "shard_stall_s": dict(payload["shard_stall_s"]),
                 "shard_write_s": shard_write_s,
-                "shard_bytes": shard_bytes}
+                "shard_bytes": shard_bytes,
+                "entropy_s": entropy_s,
+                "full_every": self.full_every}
 
     def _materialized(self, stat: dict):
         self._stats.append(stat)
@@ -756,37 +886,57 @@ class CheckpointPipeline:
 def _encode_changed(d: dict, lmeta: dict, chunk_words: int):
     """Turn one finalized delta record into per-chunk wire payloads.
 
-    Raw leaves: gathered u32 rows back to native bytes, last chunk trimmed
-    to the leaf's real length. q8 leaves: each changed row is already int8 +
-    scales from the fused gather-quantize kernel — packed into the
-    self-describing q8 chunk format (per-chunk element count, so the last
-    chunk trims the same way). Returns (idx_keep, chunks_keep,
-    transferred_bytes)."""
+    Iterates the delta's ``enc_groups`` — one group per wire encoding the
+    tracker chose (a fixed-policy leaf has at most one; the adaptive
+    error-bound selector can split one checkpoint's changed chunks across
+    q4 / q8 / raw). Raw rows: gathered u32 blocks back to native bytes,
+    last chunk trimmed to the leaf's real length. q8 / q4 rows: already
+    int8 (resp. packed-nibble) + scales from the fused gather kernels —
+    packed into the self-describing chunk formats (per-chunk element count,
+    so the last chunk trims the same way). Returns (idx_keep, chunks_keep,
+    encs_keep, transferred_bytes) with the three lists parallel and sorted
+    by chunk index."""
     nbytes, n_chunks = lmeta["nbytes"], lmeta["n_chunks"]
     dtype = lmeta["dtype"]
-    idx_keep: list[int] = []
-    chunks_keep: list[bytes] = []
-    if lmeta["enc"] == "q8":
-        itemsize = 2 if dtype in ("bfloat16", "float16") else 4
-        total_elems = nbytes // itemsize
-        block = min(Q8_BLOCK, chunk_words)
-        for j, i in enumerate(d["changed_idx"].tolist()):
-            n_el = chunk_words if i < n_chunks - 1 \
-                else total_elems - (n_chunks - 1) * chunk_words
-            idx_keep.append(int(i))
-            chunks_keep.append(q8_encode_chunk(
-                d["changed_q"][j], d["changed_scales"][j], n_el, block))
-    else:
-        chunk_native = chunk_words * native_bytes_per_word(dtype)
-        native = blocks_to_native_bytes(d["changed_blocks"], dtype)
-        # tracker clamps changed_idx to the leaf's real chunk count, so
-        # every row lands in [0, n_chunks); only the last needs trimming
-        for i, data in zip(d["changed_idx"].tolist(), native):
-            if i == n_chunks - 1:
-                data = data[: nbytes - (n_chunks - 1) * chunk_native]
-            idx_keep.append(int(i))
-            chunks_keep.append(data)
-    return idx_keep, chunks_keep, sum(len(c) for c in chunks_keep)
+    itemsize = 2 if dtype in ("bfloat16", "float16") else 4
+    total_elems = nbytes // itemsize
+    chunk_native = chunk_words * native_bytes_per_word(dtype)
+    out: dict[int, tuple[str, bytes]] = {}
+    for gr in d["enc_groups"]:
+        e = gr["enc"]
+        if e == "q8":
+            block = min(Q8_BLOCK, chunk_words)
+            for j, i in enumerate(gr["idx"].tolist()):
+                n_el = chunk_words if i < n_chunks - 1 \
+                    else total_elems - (n_chunks - 1) * chunk_words
+                out[int(i)] = ("q8", q8_encode_chunk(
+                    gr["q"][j], gr["scales"][j], n_el, block))
+        elif e == "q4":
+            block = min(Q4_BLOCK, chunk_words)
+            for j, i in enumerate(gr["idx"].tolist()):
+                n_el = chunk_words if i < n_chunks - 1 \
+                    else total_elems - (n_chunks - 1) * chunk_words
+                out[int(i)] = ("q4", q4_encode_chunk(
+                    gr["packed"][j], gr["scales"][j], n_el, block))
+        else:
+            native = blocks_to_native_bytes(gr["blocks"], dtype)
+            # tracker clamps changed_idx to the leaf's real chunk count, so
+            # every row lands in [0, n_chunks); only the last needs trimming
+            for i, data in zip(gr["idx"].tolist(), native):
+                if i == n_chunks - 1:
+                    data = data[: nbytes - (n_chunks - 1) * chunk_native]
+                out[int(i)] = ("raw", data)
+    idx_keep = sorted(out)
+    encs_keep = [out[i][0] for i in idx_keep]
+    chunks_keep = [out[i][1] for i in idx_keep]
+    return idx_keep, chunks_keep, encs_keep, \
+        sum(len(c) for c in chunks_keep)
+
+
+def _match_slot(pstr: str, pat: str) -> bool:
+    """True when a keystr leaf path matches a slot name or glob pattern."""
+    return (f"['{pat}']" in pstr or f'["{pat}"]' in pstr
+            or f".{pat}" in pstr or fnmatch.fnmatch(pstr, pat))
 
 
 def _fp_view(leaf):

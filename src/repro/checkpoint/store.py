@@ -488,14 +488,14 @@ class CheckpointStore:
         for leaf in manifest["leaves"]:
             dt = np_dtype(leaf["dtype"])
             enc = leaf.get("enc")
-            if enc and any(e == "q8" for e in enc):
-                # quantized chunks dequantize transparently to native bytes
-                # (deferred import: the q8 codec lives with the kernels, and
-                # the store stays importable without pulling jax)
-                from repro.kernels.ops import q8_decode_chunk
+            if enc and any(e != "raw" for e in enc):
+                # encoded chunks decode transparently to native bytes — q8,
+                # q4, and entropy-compressed ("+z") payloads alike (deferred
+                # import: the wire codecs live with the kernels, and the
+                # store stays importable without pulling jax)
+                from repro.kernels.ops import decode_wire_chunk
                 raw = b"".join(
-                    q8_decode_chunk(self.get_chunk(h), dt) if e == "q8"
-                    else self.get_chunk(h)
+                    decode_wire_chunk(self.get_chunk(h), e, dt)
                     for h, e in zip(leaf["chunks"], enc))
             else:
                 raw = b"".join(self.get_chunk(h) for h in leaf["chunks"])
@@ -623,10 +623,19 @@ class CheckpointStore:
             max_depth = max(max_depth, d0)
             if per_key:
                 direct = sum(1 for _ in _manifest_chunk_hashes(m))
+                encc = _manifest_enc_counts(m)
                 if shards_info:
                     direct = sum(s["chunks"] for s in shards_info.values())
+                    encc = {}
+                    for hid, mkey in (m.get("members") or {}).items():
+                        mm = load((t0[0], _safe(mkey)))
+                        if mm is None:
+                            continue
+                        for e, c in _manifest_enc_counts(mm).items():
+                            encc[e] = encc.get(e, 0) + c
                 info[t0] = {"depth": d0, "kind": kind,
-                            "direct_chunks": direct}
+                            "direct_chunks": direct,
+                            "enc_counts": encc}
                 if shards_info is not None:
                     info[t0]["shards"] = shards_info
         chunks = 0
@@ -653,6 +662,44 @@ class CheckpointStore:
                 out["per_key"] = {f"{rid or ''}::{k}": v
                                   for (rid, k), v in info.items()}
         return out
+
+    def encoding_mix(self, key: str) -> dict:
+        """Resolved per-encoding storage mix of one checkpoint: for every
+        chunk a restore of `key` reads (chain-inherited included),
+        {enc: {"chunks": n, "stored_bytes": b}} with b the on-disk
+        (compressed) size — dedup-shared chunks count once per reference,
+        matching what a restore actually reads. v4 sharded keys aggregate
+        over all member manifests."""
+        m = self.resolve_manifest(key)
+        mix: dict[str, dict] = {}
+        size_cache: dict[str, int] = {}
+
+        def chunk_size(h: str) -> int:
+            if h not in size_cache:
+                p = self._find_chunk(h)
+                try:
+                    size_cache[h] = os.path.getsize(p) if p else 0
+                except OSError:
+                    size_cache[h] = 0
+            return size_cache[h]
+
+        def add_leaves(leaves):
+            for leaf in leaves:
+                enc = leaf.get("enc")
+                for i, h in enumerate(leaf.get("chunks") or []):
+                    if h is None:
+                        continue
+                    e = enc[i] if enc else "raw"
+                    d = mix.setdefault(e, {"chunks": 0, "stored_bytes": 0})
+                    d["chunks"] += 1
+                    d["stored_bytes"] += chunk_size(h)
+
+        if m.get("kind") == "sharded":
+            for mm in (m.get("members_resolved") or {}).values():
+                add_leaves(mm["leaves"])
+        else:
+            add_leaves(m["leaves"])
+        return mix
 
     # ------------------------------------------------------------ closure --
     def _parent_closure(self, keys: Iterable[str],
@@ -865,6 +912,24 @@ def _manifest_chunk_hashes(manifest: dict):
                 yield h
         for h in (leaf.get("delta") or {}).values():
             yield h
+
+
+def _manifest_enc_counts(manifest: dict) -> dict:
+    """Per-encoding chunk counts of the chunks DIRECTLY listed by a manifest
+    (chunks without a recorded encoding count as "raw")."""
+    counts: dict[str, int] = {}
+    for leaf in manifest.get("leaves") or []:
+        enc = leaf.get("enc")
+        for i, h in enumerate(leaf.get("chunks") or []):
+            if h is None:
+                continue
+            e = enc[i] if enc else "raw"
+            counts[e] = counts.get(e, 0) + 1
+        denc = leaf.get("denc") or {}
+        for i in (leaf.get("delta") or {}):
+            e = denc.get(i, "raw")
+            counts[e] = counts.get(e, 0) + 1
+    return counts
 
 
 def _safe(key: str) -> str:

@@ -65,9 +65,16 @@ class FlorContext:
                  async_log: bool = True, log_index: bool = True,
                  log_queue_depth: int = DEFAULT_QUEUE_DEPTH,
                  log_spill_bytes: int = DEFAULT_SPILL_BYTES,
-                 ckpt_quantize_slots=(), ckpt_overlap: bool = False,
+                 ckpt_quantize_slots=(), ckpt_error_bounds=(),
+                 ckpt_overlap: bool = False,
                  mesh=None, ckpt_shard_axes=()):
         assert mode in ("record", "replay")
+        if ckpt_quantize_slots:
+            _deprecated(
+                "ckpt_quantize_slots is deprecated: declare WHAT error each "
+                "slot tolerates via ckpt_error_bounds={slot: atol} and let "
+                "the pipeline pick the cheapest encoding per chunk "
+                "(ckpt_quantize_slots still works as fixed q8)")
         self.run_dir = run_dir
         self.mode = mode
         self.replay_phase = "init"           # init | exec (replay only)
@@ -182,6 +189,7 @@ class FlorContext:
             self.store, async_stage=async_materialize,
             full_every=full_manifest_every,
             quantize_slots=ckpt_quantize_slots,
+            error_bounds=dict(ckpt_error_bounds or {}),
             overlap=ckpt_overlap,
             mesh=mesh, shard_axes=ckpt_shard_axes,
             on_materialized=self._on_materialized) \
@@ -334,10 +342,17 @@ class FlorContext:
             # M_i = foreground stall on the training thread (fingerprint +
             # changed-chunk DMA) + background write stage; counting only the
             # latter would let the eps-overhead invariant undercount record
-            # cost
+            # cost. The writer-thread entropy stage is the exception: it
+            # only runs when an async writer exists, so its seconds are
+            # genuinely concurrent with training — they move to the
+            # background accumulator instead of the epsilon-charged M_i
+            entropy_s = stat.get("entropy_s") or 0.0
             self.controller.observe_materialization(
                 block,
-                stat["materialize_s"] + stat.get("submit_stall_s", 0.0))
+                max(0.0, stat["materialize_s"] - entropy_s)
+                + stat.get("submit_stall_s", 0.0))
+            if entropy_s:
+                self.controller.note_background(entropy_s)
 
     def submit_checkpoint(self, block_id: str, key: str, tree, meta):
         assert self.pipeline is not None, \

@@ -67,25 +67,36 @@ class RecordSpec:
     is spilled to the checkpoint store and logged as a ``{"ref": ...}``
     pointer row (0 disables spilling).
 
-    ``ckpt_quantize_slots`` opts named slots into the LOSSY fused q8
-    checkpoint path (blockwise int8 + scales leave the device wire-format;
-    per-element error bounded by half a quantization step). Entries match
-    leaf paths by slot name or glob — e.g. ``("mu", "nu")`` for Adam
-    moments. Everything else stays exact: the bit-identical restore
-    invariant holds by default. ``ckpt_overlap`` overlaps the fused
-    fingerprint pass with training: the step thread only dispatches kernels
-    and the mask sync + gather + encode move to the writer thread (the
-    adaptive controller then charges only the measured foreground stall
-    against epsilon)."""
+    ``ckpt_error_bounds`` declares WHAT ERROR each lossy slot tolerates
+    instead of how to encode it: ``{"mu": 1e-2}`` (slot name or glob ->
+    absolute per-element tolerance). The pipeline picks, per changed chunk,
+    the cheapest wire encoding whose guaranteed blockwise bound satisfies
+    the tolerance — int4 packed nibbles when the chunk's amplitude allows,
+    else int8, else exact — and the writer thread may additionally
+    entropy-compress the result. ``ckpt_quantize_slots`` is the older
+    fixed-q8 spelling (DEPRECATED — prefer an error bound of
+    ``absmax / 126`` intent via ``ckpt_error_bounds``); when a slot matches
+    both, the error bound wins. Everything unmatched stays exact: the
+    bit-identical restore invariant holds by default.
+
+    ``full_manifest_every`` bounds delta-chain length; pass ``"auto"`` to
+    let the pipeline retune the cadence from the store's measured read
+    bandwidth and learned per-hop restore cost (restore-bound stores get
+    short chains, cheap-hop stores amortize fulls over long ones).
+    ``ckpt_overlap`` overlaps the fused fingerprint pass with training: the
+    step thread only dispatches kernels and the mask sync + gather + encode
+    move to the writer thread (the adaptive controller then charges only
+    the measured foreground stall against epsilon)."""
     epsilon: float = 1.0 / 15          # record-overhead budget (Eq. 1)
     adaptive: bool = True              # adaptive checkpointing (section 5.3)
     async_materialize: bool = True     # background checkpoint write stage
-    full_manifest_every: int = 8       # delta-chain length bound
+    full_manifest_every: Any = 8       # delta-chain length bound (or "auto")
     async_log: bool = True             # background flor.log (repro.logging)
     log_index: bool = True             # incremental query index (repro.querydb)
     log_queue_depth: int = DEFAULT_QUEUE_DEPTH    # bounded queue (backpressure)
     log_spill_bytes: int = DEFAULT_SPILL_BYTES    # spill threshold (0 = off)
-    ckpt_quantize_slots: tuple = ()    # slots stored lossy-q8 (fused path)
+    ckpt_quantize_slots: tuple = ()    # slots stored lossy-q8 (deprecated)
+    ckpt_error_bounds: tuple = ()      # {slot: atol} adaptive encodings
     ckpt_overlap: bool = False         # overlap fused pass with the step
     # mesh-sharded record: with a jax.sharding.Mesh here, each device shard
     # fingerprints/gathers its OWN buffer and writes to its host's store
@@ -98,7 +109,12 @@ class RecordSpec:
     def __post_init__(self):
         if not 0 < self.epsilon <= 1:
             raise ValueError(f"epsilon must be in (0, 1], got {self.epsilon}")
-        if self.full_manifest_every < 1:
+        if isinstance(self.full_manifest_every, str):
+            if self.full_manifest_every != "auto":
+                raise ValueError(
+                    "full_manifest_every must be an int >= 1 or \"auto\", "
+                    f"got {self.full_manifest_every!r}")
+        elif self.full_manifest_every < 1:
             raise ValueError("full_manifest_every must be >= 1")
         _check_log_knobs(self.log_queue_depth, self.log_spill_bytes)
         if isinstance(self.ckpt_quantize_slots, str):
@@ -107,6 +123,24 @@ class RecordSpec:
                 "globs, not a bare string (a string would match per-char)")
         object.__setattr__(self, "ckpt_quantize_slots",
                            tuple(self.ckpt_quantize_slots))
+        if isinstance(self.ckpt_error_bounds, str):
+            raise ValueError(
+                "ckpt_error_bounds must be a {slot: atol} mapping (or a "
+                "sequence of (slot, atol) pairs), not a bare string")
+        eb = self.ckpt_error_bounds
+        pairs = sorted(eb.items()) if isinstance(eb, dict) \
+            else sorted(tuple(p) for p in eb)
+        for p in pairs:
+            if len(p) != 2 or not isinstance(p[0], str) or not p[0]:
+                raise ValueError(
+                    f"ckpt_error_bounds entries must be (slot, atol) with a "
+                    f"non-empty slot name/glob, got {p!r}")
+            if not float(p[1]) > 0:
+                raise ValueError(
+                    f"ckpt_error_bounds atol must be > 0, got {p[1]!r} for "
+                    f"slot {p[0]!r}")
+        object.__setattr__(self, "ckpt_error_bounds",
+                           tuple((s, float(a)) for s, a in pairs))
         if self.ckpt_overlap and not self.async_materialize:
             raise ValueError("ckpt_overlap requires async_materialize=True "
                              "(the writer thread finalizes the deferred "

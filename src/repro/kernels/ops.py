@@ -16,10 +16,12 @@ from repro.kernels.chunk_delta import (changed_mask_pallas,
                                        fingerprint_changed_pallas,
                                        fingerprint_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.quantize import (Q8_BLOCK, dequantize_pallas,
+from repro.kernels.quantize import (Q4_BLOCK, Q8_BLOCK, dequantize_pallas,
+                                    gather_quantize4_pallas,
                                     gather_quantize_pallas, quantize_pallas)
 from repro.kernels.ref import (changed_mask_ref, fingerprint_changed_ref,
-                               fingerprint_ref, gather_quantize_ref)
+                               fingerprint_ref, gather_quantize4_ref,
+                               gather_quantize_ref)
 
 CHUNK_WORDS = 1024        # 4 KiB chunks (uint32 words)
 
@@ -122,15 +124,47 @@ def gather_quantize_blocks(x, idx, chunk_words: int = CHUNK_WORDS,
     fingerprint view for quantizable dtypes); only rows named by ``idx`` are
     read — the wire-format payload leaves the device in one pass."""
     block = min(block, chunk_words)            # small-chunk configs
+    blocks = _padded_float_blocks(x, chunk_words)
+    if _interpret():
+        return gather_quantize_ref(blocks, idx, block)
+    return gather_quantize_pallas(blocks, idx, block=block, interpret=False)
+
+
+def _padded_float_blocks(x, chunk_words: int):
+    """The leaf's [g, chunk_words] f32 chunk view, g TILE_G-aligned — the
+    shared row layout of every fused gather variant."""
     flat = x.reshape(-1).astype(jnp.float32)
     n = flat.shape[0]
     g = -(-n // chunk_words)
     g = -(-g // 8) * 8
     flat = jnp.pad(flat, (0, g * chunk_words - n))
-    blocks = flat.reshape(g, chunk_words)
+    return flat.reshape(g, chunk_words)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_words", "block"))
+def gather_quantize4_blocks(x, idx, chunk_words: int = CHUNK_WORDS,
+                            block: int = Q4_BLOCK):
+    """Fused gather + blockwise-int4 quantize of the CHANGED chunk rows of a
+    float leaf: (packed uint8 [C, chunk_words // 2], scales f32
+    [C, chunk_words // block]). Two elements per byte in the half-split
+    nibble layout; per-element error bounded by half a quantization step
+    (block absmax / 14)."""
+    block = min(block, chunk_words)            # small-chunk configs
+    blocks = _padded_float_blocks(x, chunk_words)
     if _interpret():
-        return gather_quantize_ref(blocks, idx, block)
-    return gather_quantize_pallas(blocks, idx, block=block, interpret=False)
+        return gather_quantize4_ref(blocks, idx, block)
+    return gather_quantize4_pallas(blocks, idx, block=block, interpret=False)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_words",))
+def chunk_absmax(x, chunk_words: int = CHUNK_WORDS):
+    """Per-chunk-row f32 absmax of a float leaf ([g] over the same padded
+    row layout the fused gathers use). The encoding selector turns this into
+    a GUARANTEED per-chunk error bound (q4 half-step = a/14, q8 = a/254;
+    the selector tests a/13.5 and a/126 to absorb f32 scale rounding), so
+    the cheapest encoding satisfying the slot's atol is chosen per chunk
+    before any gather runs."""
+    return jnp.max(jnp.abs(_padded_float_blocks(x, chunk_words)), axis=1)
 
 
 # ------------------------------------------------------------- q8 wire codec
@@ -165,6 +199,65 @@ def q8_decode_chunk(payload: bytes, dtype) -> bytes:
     # plain astype covers f32/bf16/f16 alike
     out = x.astype(jnp.dtype(dtype) if isinstance(dtype, str) else dtype)
     return np.ascontiguousarray(out).tobytes()
+
+
+# ------------------------------------------------------------- q4 wire codec
+# Self-describing int4 chunk payload (little-endian):
+#   [u32 n_elems][u32 block][f32 scales[W/block]][u8 packed[W/2]]
+# scales and packed bytes cover the FULL kernel row W (untrimmed; W is
+# recovered from the payload length: bytes after the 8-byte header =
+# n_sub * (4 + block/2), so n_sub = after / (4 + block//2), W = n_sub*block).
+# Nibbles use the half-split layout: byte j holds element j (low) and
+# element j + W/2 (high), signed two's-complement in 4 bits.
+
+def q4_encode_chunk(packed_row: np.ndarray, scales: np.ndarray,
+                    n_elems: int, block: int = Q4_BLOCK) -> bytes:
+    """Pack one int4-quantized chunk row (uint8 [W // 2], f32 [W // block])
+    into the q4 wire format. The packed row is kept whole — the half-split
+    nibble layout interleaves elements W/2 apart, so a partial last chunk
+    cannot trim bytes the way q8 does; `n_elems` in the header trims on
+    decode instead."""
+    head = np.uint32(n_elems).tobytes() + np.uint32(block).tobytes()
+    return (head
+            + np.ascontiguousarray(scales, np.float32).tobytes()
+            + np.ascontiguousarray(packed_row, np.uint8).tobytes())
+
+
+def q4_decode_chunk(payload: bytes, dtype) -> bytes:
+    """Dequantize one q4 chunk payload back to the leaf's native bytes."""
+    n = int(np.frombuffer(payload[:4], np.uint32)[0])
+    block = int(np.frombuffer(payload[4:8], np.uint32)[0])
+    after = len(payload) - 8
+    n_sub = after // (4 + block // 2)
+    W = n_sub * block
+    scales = np.frombuffer(payload[8:8 + 4 * n_sub], np.float32)
+    packed = np.frombuffer(payload[8 + 4 * n_sub:], np.uint8)
+    q = np.empty(W, np.int8)
+    lo = (packed & 0xF).astype(np.int8)
+    hi = (packed >> 4).astype(np.int8)
+    q[: W // 2] = lo - ((lo > 7) << 4)       # sign-extend 4 -> 8 bits
+    q[W // 2:] = hi - ((hi > 7) << 4)
+    qf = q.astype(np.float32).reshape(n_sub, block)
+    x = (qf * scales[:, None]).reshape(-1)[:n]
+    out = x.astype(jnp.dtype(dtype) if isinstance(dtype, str) else dtype)
+    return np.ascontiguousarray(out).tobytes()
+
+
+# -------------------------------------------------------- decode dispatch --
+def decode_wire_chunk(payload: bytes, enc: str, dtype) -> bytes:
+    """Decode one stored chunk body to native leaf bytes given its manifest
+    ``enc`` marker. Handles every wire encoding ("raw", "q8", "q4") plus the
+    "+z" entropy-stage suffix (byte-plane-shuffled compression applied on
+    the writer thread; see parallel/compression.py)."""
+    if enc.endswith("+z"):
+        from repro.parallel.compression import entropy_decode_bytes
+        payload = entropy_decode_bytes(payload)
+        enc = enc[:-2]
+    if enc == "q8":
+        return q8_decode_chunk(payload, dtype)
+    if enc == "q4":
+        return q4_decode_chunk(payload, dtype)
+    return payload
 
 
 @functools.partial(jax.jit, static_argnames=("block",))

@@ -41,6 +41,23 @@ def gather_quantize_ref(x: jnp.ndarray, idx: jnp.ndarray, block: int = 256):
     return q.reshape(C, W), s.reshape(C, W // block)
 
 
+def gather_quantize4_ref(x: jnp.ndarray, idx: jnp.ndarray, block: int = 256):
+    """Fused gather+int4-quantize oracle over the [G, W] float chunk view:
+    returns (packed uint8 [C, W // 2], scales f32 [C, W // block]) with the
+    half-split nibble layout (element j in the low nibble of byte j, element
+    j + W/2 in its high nibble)."""
+    rows = jnp.take(x.astype(jnp.float32), idx, axis=0)
+    C, W = rows.shape
+    sub = rows.reshape(C * (W // block), block)
+    scale = jnp.maximum(jnp.max(jnp.abs(sub), axis=1) / 7.0, 1e-12)
+    q = jnp.clip(jnp.round(sub / scale[:, None]), -7, 7).astype(jnp.int32)
+    q = q.reshape(C, W)
+    lo = q[:, : W // 2] & 0xF
+    hi = q[:, W // 2:] & 0xF
+    return ((lo | (hi << 4)).astype(jnp.uint8),
+            scale.reshape(C, W // block).astype(jnp.float32))
+
+
 def quantize_ref(x: jnp.ndarray):
     """Blockwise int8 quantization of [G, B] f32. Returns (q int8 [G,B],
     scale f32 [G])."""

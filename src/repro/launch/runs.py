@@ -99,6 +99,7 @@ def cmd_show(store: CheckpointStore, registry: RunRegistry, args) -> int:
           + f"), max resolve chain "
           f"{st['max_chain_depth']} (may cross into ancestor runs)")
     _show_mesh(store, rec, st)
+    _show_encodings(store, rec)
     return 0
 
 
@@ -132,6 +133,26 @@ def _show_mesh(store: CheckpointStore, rec: dict, st: dict) -> None:
         print(f"  {hid:<6} {len(members):>9} {len(chunks):>14} "
               f"{store.chunk_bytes(chunks) / 2**20:>12.2f} "
               f"{stored.get(str(hid), 0) / 2**20:>9.2f}")
+
+
+def _show_encodings(store: CheckpointStore, rec: dict) -> None:
+    """Per-chunk wire-encoding mix of each scope's FINAL checkpoint (what a
+    restore of it reads, chain-inherited chunks included): chunk counts and
+    on-disk bytes per encoding — raw / q8 / q4, "+z" marking payloads the
+    writer-thread entropy stage kept compressed. Checkpoints that are all
+    raw print nothing (the default exact path has no mix to show)."""
+    ns = rec.get("namespace")
+    for scope, key in sorted((rec.get("final_keys") or {}).items()):
+        try:
+            mix = store.encoding_mix(f"{ns or ''}::{key}")
+        except Exception:
+            continue                       # broken chain: diagnostic only
+        if not mix or set(mix) == {"raw"}:
+            continue
+        parts = ", ".join(
+            f"{e} {mix[e]['chunks']} ({mix[e]['stored_bytes'] / 2**20:.2f} "
+            f"MiB)" for e in sorted(mix))
+        print(f"encodings  {scope}: {parts}")
 
 
 def cmd_gc(store: CheckpointStore, registry: RunRegistry, args) -> int:

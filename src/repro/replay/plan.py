@@ -51,6 +51,27 @@ RESTORE_HOP_S = 0.002
 DEFAULT_READ_BPS = 1e9
 DEFAULT_EXEC_S = 1.0
 NOMINAL_CHUNK_BYTES = 64 * 1024
+# per-encoding DECODE throughputs (bytes of decoded output per second):
+# restoring a q8/q4 chunk pays a dequantize pass, an entropy-compressed
+# ("+z") one an extra decompress+unshuffle. Nominal figures — as with
+# NOMINAL_CHUNK_BYTES only RELATIVE segment cost matters to the planner,
+# and the per-chunk counts come from the manifests' recorded encodings.
+DECODE_BPS = {"q8": 1.5e9, "q4": 1.2e9}
+ENTROPY_DECODE_BPS = 0.8e9
+
+
+def _decode_cost_s(enc_counts: Optional[dict], avg_chunk: int) -> float:
+    """Extra restore seconds a key's encoded chunks cost to decode, from
+    the per-encoding chunk counts the store's stats report. An entropy
+    suffix ("+z") prices the decompress pass on top of the dequantize."""
+    cost = 0.0
+    for e, n in (enc_counts or {}).items():
+        base = e[:-2] if e.endswith("+z") else e
+        if base in DECODE_BPS:
+            cost += n * avg_chunk / DECODE_BPS[base]
+        if e.endswith("+z"):
+            cost += n * avg_chunk / ENTROPY_DECODE_BPS
+    return cost
 
 
 class ReplayPlanError(RuntimeError):
@@ -404,6 +425,11 @@ def build_plan(run_dir: str,
                 restore_cost += hop_s * (1 + int(info.get("depth") or 0))
                 restore_cost += int(info.get("direct_chunks") or 0) \
                     * avg_chunk / read_bps
+            # encoded chunks (q8/q4, entropy-compressed) pay a decode pass
+            # on top of the raw read — priced from the manifests' recorded
+            # per-chunk encodings
+            restore_cost += _decode_cost_s(info.get("enc_counts"),
+                                           avg_chunk)
         segments.append(Segment(
             epoch=ei, action="exec" if exec_blocks else "restore",
             exec_blocks=exec_blocks, exec_cost_s=exec_cost,

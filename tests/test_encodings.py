@@ -1,0 +1,327 @@
+"""Adaptive wire encodings: the int4 gather-quantize kernel and wire codec,
+the writer-thread entropy stage, the per-chunk error-bound selector
+(RecordSpec.ckpt_error_bounds), and the auto-retuned full-manifest cadence.
+All in-process on the default 1-device CPU."""
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointPipeline, CheckpointStore
+from repro.checkpoint.delta import DeltaTracker, Q4_ATOL_DIV, Q8_ATOL_DIV
+from repro.kernels.ops import (chunk_absmax, decode_wire_chunk,
+                               gather_quantize4_blocks, q4_decode_chunk,
+                               q4_encode_chunk, q8_encode_chunk)
+from repro.kernels.quantize import Q4_BLOCK, gather_quantize4_pallas
+from repro.kernels.ref import gather_quantize4_ref
+from repro.parallel.compression import (entropy_decode_bytes,
+                                        entropy_encode_bytes)
+
+
+# ------------------------------------------------------------ q4 kernel --
+def test_q4_pallas_matches_ref():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 512)).astype(np.float32))
+    idx = jnp.asarray([1, 4, 7], jnp.int32)
+    p_k, s_k = gather_quantize4_pallas(x, idx, block=256, interpret=True)
+    p_r, s_r = gather_quantize4_ref(x, idx, 256)
+    # interpret-mode lowering may round scales differently by 1 ulp, which
+    # can flip a borderline nibble; the packings must agree to one level
+    assert np.allclose(np.asarray(s_k), np.asarray(s_r), rtol=1e-6)
+    lo_k, hi_k = np.asarray(p_k) & 0xF, np.asarray(p_k) >> 4
+    lo_r, hi_r = np.asarray(p_r) & 0xF, np.asarray(p_r) >> 4
+    for a, b in ((lo_k, lo_r), (hi_k, hi_r)):
+        d = (a.astype(np.int8) - ((a > 7) << 4)) \
+            - (b.astype(np.int8) - ((b > 7) << 4))
+        assert np.max(np.abs(d)) <= 1
+    assert p_k.shape == (3, 256) and p_k.dtype == jnp.uint8
+    assert s_k.shape == (3, 2) and s_k.dtype == jnp.float32
+
+
+def test_q4_roundtrip_error_bounded():
+    rng = np.random.default_rng(1)
+    chunk_words = 512
+    x = rng.normal(size=(4 * chunk_words,)).astype(np.float32)
+    idx = jnp.asarray([0, 2, 3], jnp.int32)
+    p, s = gather_quantize4_blocks(jnp.asarray(x), idx, chunk_words)
+    rows = x.reshape(4, chunk_words)
+    amax = np.abs(rows).reshape(4, -1, Q4_BLOCK).max(axis=2)
+    for j, c in enumerate(np.asarray(idx)):
+        wire = q4_encode_chunk(np.asarray(p)[j], np.asarray(s)[j],
+                               chunk_words, Q4_BLOCK)
+        got = np.frombuffer(q4_decode_chunk(wire, "float32"), np.float32)
+        err = np.abs(got - rows[c]).reshape(-1, Q4_BLOCK).max(axis=1)
+        # guaranteed half-step bound per 256-element block
+        assert np.all(err <= amax[c] / 14.0 + 1e-9)
+
+
+def test_q4_partial_chunk_trims_on_decode():
+    # last chunk of a leaf is partial: header n_elems trims after unpack
+    chunk_words = 256
+    x = np.linspace(-1.0, 1.0, 300).astype(np.float32)
+    p, s = gather_quantize4_blocks(jnp.asarray(x), jnp.asarray([1], jnp.int32),
+                                   chunk_words)
+    n_last = 300 - 256
+    wire = q4_encode_chunk(np.asarray(p)[0], np.asarray(s)[0],
+                           n_last, chunk_words)
+    got = np.frombuffer(q4_decode_chunk(wire, "float32"), np.float32)
+    assert got.shape == (n_last,)
+    assert np.max(np.abs(got - x[256:300])) <= np.abs(x[256:]).max() / 14.0
+
+
+def test_q4_wire_roughly_halves_q8():
+    rng = np.random.default_rng(2)
+    chunk_words = 1024
+    x = jnp.asarray(rng.normal(size=(chunk_words,)).astype(np.float32))
+    idx = jnp.asarray([0], jnp.int32)
+    from repro.kernels.ops import gather_quantize_blocks
+    q, s8 = gather_quantize_blocks(x, idx, chunk_words)
+    p, s4 = gather_quantize4_blocks(x, idx, chunk_words)
+    w8 = q8_encode_chunk(np.asarray(q)[0], np.asarray(s8)[0], chunk_words)
+    w4 = q4_encode_chunk(np.asarray(p)[0], np.asarray(s4)[0], chunk_words)
+    assert len(w8) / len(w4) >= 1.8
+
+
+# -------------------------------------------------------- entropy codec --
+def test_entropy_codec_roundtrips():
+    smooth = np.sin(np.linspace(0, 20, 4096)).astype(np.float32).tobytes()
+    z = entropy_encode_bytes(smooth, itemsize=4)
+    assert entropy_decode_bytes(z) == smooth
+    assert len(z) < len(smooth)          # byte-plane shuffle pays on f32
+    # int8-ish payloads and odd lengths use stride 1
+    q = bytes(range(256)) * 3 + b"\x01"
+    z = entropy_encode_bytes(q, itemsize=1)
+    assert entropy_decode_bytes(z) == q
+    # itemsize not dividing the length falls back to stride 1, still exact
+    odd = os.urandom(1001)
+    z = entropy_encode_bytes(odd, itemsize=4)
+    assert entropy_decode_bytes(z) == odd
+
+
+def test_entropy_decode_rejects_bad_magic():
+    with pytest.raises(ValueError):
+        entropy_decode_bytes(b"\x00\x01" + b"1234" + b"x")
+
+
+def test_decode_wire_chunk_dispatch():
+    x = np.arange(16, dtype=np.float32)
+    raw = x.tobytes()
+    assert decode_wire_chunk(raw, "raw", "float32") == raw
+    z = entropy_encode_bytes(raw, itemsize=4)
+    assert decode_wire_chunk(z, "raw+z", "float32") == raw
+    p, s = gather_quantize4_blocks(jnp.asarray(x), jnp.asarray([0], jnp.int32),
+                                   16)
+    wire = q4_encode_chunk(np.asarray(p)[0], np.asarray(s)[0], 16, 16)
+    got = np.frombuffer(decode_wire_chunk(wire, "q4", "float32"), np.float32)
+    assert np.max(np.abs(got - x)) <= np.abs(x).max() / 14.0
+    zq = entropy_encode_bytes(wire, itemsize=1)
+    assert decode_wire_chunk(zq, "q4+z", "float32") == \
+        decode_wire_chunk(wire, "q4", "float32")
+
+
+# ------------------------------------------------- adaptive selector --
+def test_tracker_error_bound_partitions_chunks():
+    """One leaf, three amplitude regimes -> three encoding groups, split
+    exactly where the guaranteed bounds cross the atol."""
+    cw = 256
+    rng = np.random.default_rng(3)
+    leaf = np.empty(8 * cw, np.float32)
+    base = rng.uniform(-1.0, 1.0, leaf.shape).astype(np.float32)
+    leaf[: 3 * cw] = 0.01 * base[: 3 * cw]      # 0.01/13.5  <= 1e-2 -> q4
+    leaf[3 * cw: 6 * cw] = base[3 * cw: 6 * cw]  # 1/126     <= 1e-2 -> q8
+    leaf[6 * cw:] = 100.0 * base[6 * cw:]        # 100/126   >  1e-2 -> raw
+    tr = DeltaTracker(chunk_words=cw)
+    d = tr.finalize(tr.delta_dispatch("p", jnp.asarray(leaf),
+                                      error_bound=1e-2))
+    groups = {g["enc"]: g for g in d["enc_groups"]}
+    assert set(groups) == {"q4", "q8", "raw"}
+    assert list(groups["q4"]["idx"]) == [0, 1, 2]
+    assert list(groups["q8"]["idx"]) == [3, 4, 5]
+    assert list(groups["raw"]["idx"]) == [6, 7]
+    # the selector divisors leave margin over the true half-step bounds
+    assert Q4_ATOL_DIV < 14.0 and Q8_ATOL_DIV < 254.0
+
+
+def test_tracker_fixed_enc_still_single_group():
+    tr = DeltaTracker(chunk_words=256)
+    x = jnp.asarray(np.ones(512, np.float32))
+    d = tr.finalize(tr.delta_dispatch("p", x, quantize=True))
+    assert [g["enc"] for g in d["enc_groups"]] == ["q8"]
+    assert d["changed_q"] is not None          # legacy fields kept
+
+
+# ------------------------------------------- pipeline end to end --------
+def _restore(store, key, shapes):
+    like = {k: np.empty(s, np.float32) if s else np.int64(0)
+            for k, s in shapes.items()}
+    return store.get_tree(key, like=like)
+
+
+def test_pipeline_error_bounds_end_to_end(tmp_path):
+    rng = np.random.default_rng(4)
+    store = CheckpointStore(os.path.join(str(tmp_path), "store"))
+    pipe = CheckpointPipeline(store, chunk_words=1024, full_every=4,
+                              async_stage=False,
+                              error_bounds={"mu": 1e-2})
+    mus, ws = [], []
+    for i in range(3):
+        mu = (0.02 * rng.normal(size=4096)).astype(np.float32)
+        w = rng.normal(size=2048).astype(np.float32)
+        pipe.submit(f"ck{i}", {"mu": jnp.asarray(mu), "w": jnp.asarray(w),
+                               "step": i}, block=True)
+        mus.append(mu)
+        ws.append(w)
+    pipe.close()
+    for i in range(3):
+        out = _restore(store, f"ck{i}",
+                       {"mu": (4096,), "w": (2048,), "step": None})
+        # bounded slot restores within the declared atol...
+        assert np.max(np.abs(out["mu"] - mus[i])) <= 1e-2
+        # ...every other slot stays bit-identical
+        assert np.array_equal(out["w"], ws[i])
+        assert int(out["step"]) == i
+    m0 = store.resolve_manifest("ck0")
+    by_path = {lf["path"]: lf for lf in m0["leaves"]}
+    assert by_path["['mu']"]["leaf_enc"] == "eb:0.01"
+    assert set(by_path["['mu']"]["enc"]) <= {"q4", "q8", "raw",
+                                             "q4+z", "q8+z", "raw+z"}
+    assert set(by_path["['mu']"]["enc"]) & {"q4", "q4+z"}
+    assert "enc" not in by_path["['w']"] or \
+        all(e == "raw" for e in by_path["['w']"]["enc"])
+    # the RAW delta manifest carries per-chunk encodings in denc...
+    raw1 = {lf["path"]: lf for lf in
+            store.get_manifest("ck1")["leaves"]}["['mu']"]
+    if raw1.get("delta"):                    # noise may leave chunks equal
+        assert set(raw1["denc"].values()) <= {"q4", "q8", "q4+z", "q8+z"}
+    # ...and the resolved view inherits them into the full enc list
+    m1 = store.resolve_manifest("ck1")
+    lf1 = {lf["path"]: lf for lf in m1["leaves"]}["['mu']"]
+    assert set(lf1["enc"]) <= {"q4", "q8", "q4+z", "q8+z"}
+    mix = store.encoding_mix("ck2")
+    assert any(e.startswith("q4") for e in mix)
+    assert "raw" in mix
+
+
+def test_pipeline_policy_change_forces_full(tmp_path):
+    store = CheckpointStore(os.path.join(str(tmp_path), "store"))
+    x = np.linspace(0, 0.01, 2048).astype(np.float32)
+    pipe = CheckpointPipeline(store, chunk_words=1024, full_every=64,
+                              async_stage=False, error_bounds={"mu": 1e-2})
+    pipe.submit("a", {"mu": jnp.asarray(x)}, block=True)
+    pipe.submit("b", {"mu": jnp.asarray(x + 1e-5)}, block=True)
+    assert store.get_manifest("b")["kind"] == "delta"
+    # same scope, new bound -> the policy string in the structure signature
+    # flips -> forced full (mixed-bound chunk inheritance would be unsound)
+    pipe.error_bounds = {"mu": 1e-3}
+    pipe.submit("c", {"mu": jnp.asarray(x + 2e-5)}, block=True)
+    pipe.close()
+    assert store.get_manifest("c")["kind"] == "full"
+    lf = {l["path"]: l for l in
+          store.get_manifest("c")["leaves"]}["['mu']"]
+    assert lf["leaf_enc"] == "eb:0.001"
+
+
+def test_entropy_stage_needs_writer(tmp_path):
+    """Sync pipelines must NOT run the entropy stage (it would bill the
+    training thread); async pipelines compress repetitive lossy chunks and
+    report the cost as entropy_s."""
+    const = np.full(4096, 0.005, np.float32)
+    s1 = CheckpointStore(os.path.join(str(tmp_path), "sync"))
+    p1 = CheckpointPipeline(s1, chunk_words=1024, async_stage=False,
+                            error_bounds={"mu": 1e-2})
+    p1.submit("k", {"mu": jnp.asarray(const)}, block=True)
+    p1.close()
+    lf = s1.resolve_manifest("k")["leaves"][0]
+    assert all(not e.endswith("+z") for e in lf["enc"])
+    assert all(st.get("entropy_s", 0.0) == 0.0 for st in p1.stats)
+
+    s2 = CheckpointStore(os.path.join(str(tmp_path), "async"))
+    p2 = CheckpointPipeline(s2, chunk_words=1024, async_stage=True,
+                            error_bounds={"mu": 1e-2})
+    p2.submit("k", {"mu": jnp.asarray(const)}, block=True)
+    p2.drain()
+    stats = p2.stats
+    p2.close()
+    lf = s2.resolve_manifest("k")["leaves"][0]
+    assert any(e.endswith("+z") for e in lf["enc"])   # constants compress
+    assert any(st.get("entropy_s", 0.0) > 0.0 for st in stats)
+    out = _restore(s2, "k", {"mu": (4096,)})
+    assert np.max(np.abs(out["mu"] - const)) <= 1e-2
+
+
+def test_auto_full_every_tracks_store_calib(tmp_path):
+    x = np.linspace(0, 1, 65536).astype(np.float32)
+    # expensive manifest hops -> short chains (K clamps to the 2 floor)
+    s1 = CheckpointStore(os.path.join(str(tmp_path), "hops"))
+    s1.put_meta("store_calib", {"read_bps": 1e9, "hop_s": 1.0})
+    p1 = CheckpointPipeline(s1, full_every="auto", async_stage=False)
+    p1.submit("k0", {"w": jnp.asarray(x)}, block=True)
+    p1.close()
+    assert p1.full_every == 2
+    # slow reads + near-free hops -> long chains (K clamps to the 64 cap)
+    s2 = CheckpointStore(os.path.join(str(tmp_path), "cheap"))
+    s2.put_meta("store_calib", {"read_bps": 1e3, "hop_s": 1e-9})
+    p2 = CheckpointPipeline(s2, full_every="auto", async_stage=False)
+    p2.submit("k0", {"w": jnp.asarray(x)}, block=True)
+    p2.close()
+    assert p2.full_every == 64
+    assert any("full_every" in st for st in p2.stats)
+
+
+# --------------------------------------------------- session surface --
+def test_recordspec_error_bounds_validation():
+    from repro.core.session import RecordSpec
+    spec = RecordSpec(ckpt_error_bounds={"mu": 1e-2, "nu": 1e-3})
+    assert spec.ckpt_error_bounds == (("mu", 0.01), ("nu", 0.001))
+    spec = RecordSpec(ckpt_error_bounds=[("mu", 1e-2)])
+    assert spec.ckpt_error_bounds == (("mu", 0.01),)
+    with pytest.raises(ValueError):
+        RecordSpec(ckpt_error_bounds="mu")        # bare string
+    with pytest.raises(ValueError):
+        RecordSpec(ckpt_error_bounds={"mu": 0.0})  # atol must be > 0
+    with pytest.raises(ValueError):
+        RecordSpec(ckpt_error_bounds={"": 1e-2})   # empty slot
+    with pytest.raises(ValueError):
+        RecordSpec(full_manifest_every="never")
+    assert RecordSpec(full_manifest_every="auto").full_manifest_every \
+        == "auto"
+
+
+def test_quantize_slots_deprecation_warns(tmp_path):
+    from repro.core.context import FlorContext, FlorDeprecationWarning
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        ctx = FlorContext(str(tmp_path), mode="record", adaptive=False,
+                          ckpt_quantize_slots=("mu",))
+        ctx.finish()
+    assert any(issubclass(x.category, FlorDeprecationWarning) and
+               "ckpt_error_bounds" in str(x.message) for x in w)
+
+
+def test_session_error_bounds_roundtrip(tmp_path):
+    from repro.core.session import RecordSpec, Session
+    rng = np.random.default_rng(5)
+    tree = {"mu": np.asarray(0.02 * rng.normal(size=2048), np.float32),
+            "w": np.asarray(rng.normal(size=1024), np.float32)}
+    with Session(str(tmp_path), mode="record",
+                 record=RecordSpec(adaptive=False,
+                                   ckpt_error_bounds={"mu": 1e-2},
+                                   full_manifest_every="auto")) as sess:
+        ctx = sess.ctx
+        assert ctx.pipeline.error_bounds == {"mu": 0.01}
+        assert ctx.pipeline.full_every_auto
+        for i in range(2):
+            ctx.submit_checkpoint("train", f"ck{i}", tree, {})
+        ctx.pipeline.drain()
+        lf = {l["path"]: l for l in
+              ctx.store.resolve_manifest("ck0")["leaves"]}
+        assert lf["['mu']"]["leaf_enc"] == "eb:0.01"
+        out = ctx.store.get_tree("ck1")
+        for p, a in out.items():
+            ref = tree["mu" if "mu" in p else "w"]
+            err = np.max(np.abs(a - ref))
+            assert err <= 1e-2 if "mu" in p else err == 0.0

@@ -218,6 +218,126 @@ def test_plan_uses_per_shard_read_rates(tmp_path):
         == [s.hosts for s in slow.segments]
 
 
+# ----------------------------------------------- encodings on a mesh --------
+def test_sharded_error_bound_slots(tmp_path):
+    """The adaptive encoding selector composes with the sharded (v4) path:
+    bounded slots land as q4/q8 wire chunks in the member manifests, deltas
+    carry denc, the resolved member chain inherits enc, and restores stay
+    within the declared bound (exact slots bit-identical)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.checkpoint import (CheckpointPipeline, CheckpointStore,
+                                  restore_sharded_tree)
+    store = CheckpointStore(os.path.join(str(tmp_path), "store"))
+    mesh = _mesh1()
+    pipe = CheckpointPipeline(store, async_stage=False, mesh=mesh,
+                              chunk_words=16, error_bounds={"mu": 1e-2})
+    rng = np.random.default_rng(7)
+    mus, ws = [], []
+    for i in range(2):
+        mu = (0.02 * rng.normal(size=(8, 8))).astype(np.float32)
+        w = rng.normal(size=(8, 8)).astype(np.float32)
+        sh = NamedSharding(mesh, P("data", None))
+        pipe.submit(f"train@{i}.0", {
+            "mu": jax.device_put(jnp.asarray(mu), sh),
+            "w": jax.device_put(jnp.asarray(w), sh)}, block=True)
+        mus.append(mu)
+        ws.append(w)
+    pipe.close()
+    for i in range(2):
+        like = {"mu": np.empty((8, 8), np.float32),
+                "w": np.empty((8, 8), np.float32)}
+        out = store.get_tree(f"train@{i}.0", like=like)
+        assert np.max(np.abs(out["mu"] - mus[i])) <= 1e-2
+        assert np.array_equal(out["w"], ws[i])
+    # member manifests carry the wire encodings (paths gain ::shard<h>)
+    m0 = store.resolve_manifest("train@0.0")
+    lf0 = {l["path"]: l for l in m0["members_resolved"][0]["leaves"]}
+    assert lf0["['mu']::shard0"]["leaf_enc"] == "eb:0.01"
+    assert set(lf0["['mu']::shard0"]["enc"]) <= {"q4", "q8", "q4+z", "q8+z"}
+    assert all(e == "raw" for e in lf0["['w']::shard0"].get("enc", []))
+    # the delta member records denc; the resolved chain inherits enc
+    raw1 = store.get_manifest("train@1.0.shard0")
+    rlf = {l["path"]: l for l in raw1["leaves"]}["['mu']::shard0"]
+    assert rlf.get("delta") and rlf.get("denc")
+    assert set(rlf["denc"].values()) <= {"q4", "q8", "q4+z", "q8+z"}
+    m1 = store.resolve_manifest("train@1.0")
+    lf1 = {l["path"]: l for l in m1["members_resolved"][0]["leaves"]}
+    assert set(lf1["['mu']::shard0"]["enc"]) <= {"q4", "q8", "q4+z", "q8+z"}
+    # mesh-placed restore decodes the wire chunks too
+    out = restore_sharded_tree(store, "train@1.0", mesh)
+    assert np.max(np.abs(np.asarray(out["['mu']"]) - mus[1])) <= 1e-2
+    assert np.array_equal(np.asarray(out["['w']"]), ws[1])
+    # stats/encoding_mix see through the v4 indirection
+    mix = store.encoding_mix("train@1.0")
+    assert any(e.startswith("q") for e in mix)
+    st = store.stats(keys=store.list_keys(), per_key=True)
+    encc = st["per_key"]["train_at_1.0"]["enc_counts"]
+    assert any(e.startswith("q") for e in encc)
+
+
+@pytest.mark.slow
+def test_encoded_slots_cross_mesh_restore_within_bound():
+    """q4/q8-encoded slots recorded on a (2, 4) mesh restore within their
+    declared bound on (4, 2), (1, 8) and unsharded; the exact slot stays
+    bit-identical across every resharding."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.checkpoint import (CheckpointPipeline, CheckpointStore,
+                                      restore_sharded_tree)
+        devs = jax.devices()
+        mesh = Mesh(np.array(devs).reshape(2, 4), ("data", "model"))
+        store = CheckpointStore("/tmp/t_sh8enc/store")
+        pipe = CheckpointPipeline(store, async_stage=False, mesh=mesh,
+                                  chunk_words=64,
+                                  error_bounds={"mu": 1e-2})
+        rng = np.random.default_rng(11)
+        def state(i):
+            mu = (0.02 * rng.normal(size=(64, 32))).astype(np.float32)
+            w = rng.normal(size=(64, 32)).astype(np.float32)
+            sh = NamedSharding(mesh, P("data", "model"))
+            return ({"mu": jax.device_put(jnp.asarray(mu), sh),
+                     "w": jax.device_put(jnp.asarray(w), sh)},
+                    {"mu": mu, "w": w})
+        truth = None
+        for i in range(2):
+            tree, truth = state(i)
+            pipe.submit(f"train@{i}.0", tree, block=True)
+        assert store.resolve_manifest("train@1.0")["ckpt_kind"] == "delta"
+        m1 = store.resolve_manifest("train@1.0")
+        for mem in m1["members_resolved"].values():
+            for l in mem["leaves"]:
+                if l["path"].startswith("['mu']"):
+                    assert set(l["enc"]) <= {"q4", "q8",
+                                             "q4+z", "q8+z"}, l
+        like = {k: np.empty_like(v) for k, v in truth.items()}
+        got = store.get_tree("train@1.0", like=like)
+        assert np.max(np.abs(got["mu"] - truth["mu"])) <= 1e-2
+        assert np.array_equal(got["w"], truth["w"])
+        for shape in ((4, 2), (1, 8)):
+            m2 = Mesh(np.array(devs).reshape(shape), ("data", "model"))
+            out = restore_sharded_tree(store, "train@1.0", m2)
+            mu = np.asarray(jax.device_get(out["['mu']"]))
+            assert np.max(np.abs(mu - truth["mu"])) <= 1e-2, shape
+            w = np.asarray(jax.device_get(out["['w']"]))
+            assert np.array_equal(w, truth["w"]), shape
+        pipe.close()
+        print("SH8ENC_OK")
+    """)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    subprocess.run([sys.executable, "-c", "import shutil; "
+                    "shutil.rmtree('/tmp/t_sh8enc', ignore_errors=True)"])
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=600, env=env)
+    assert "SH8ENC_OK" in out.stdout, out.stderr[-3000:]
+
+
 # ----------------------------------------------- 8-device cross-mesh cases --
 @pytest.mark.slow
 def test_record_2x4_restores_bitwise_on_other_meshes():
