@@ -66,10 +66,11 @@ def main(argv=None) -> None:
     import benchmarks.delta_pipeline as b_dp
     import benchmarks.lineage_warmstart as b_lw
     import benchmarks.sharded_ckpt as b_sh
+    import benchmarks.dist_record as b_dr
     import benchmarks.query_latency as b_ql
 
-    mods = [b_bg, b_st, b_dp, b_sh, b_lw, b_ql, b_rl, b_ps, b_rec, b_ada,
-            b_roof]
+    mods = [b_bg, b_st, b_dp, b_sh, b_dr, b_lw, b_ql, b_rl, b_ps, b_rec,
+            b_ada, b_roof]
     if args.only:
         wanted = {w.strip() for w in args.only.split(",") if w.strip()}
         known = {m.__name__.rsplit(".", 1)[-1] for m in mods}

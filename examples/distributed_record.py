@@ -1,0 +1,223 @@
+"""True multi-process mesh record, crash injection, and recovery, end to end.
+
+    PYTHONPATH=src python examples/distributed_record.py --run-dir /tmp/flor_dist
+
+The script is its own fleet launcher: it re-execs itself twice with
+``--child <process-id>`` so two REAL processes join a ``jax.distributed``
+fleet over a loopback coordinator (4 forced host-platform devices each — a
+2x4 global mesh). Each process records through the full Session path:
+
+* it fingerprints + gathers ONLY the checkpoint shards its local devices
+  own and publishes per-host member manifests crash-safely;
+* the lead gathers every process's publication through the file rendezvous
+  under ``<store>/runs/<run>/.stitch/`` and writes the v4 stitch atomically.
+
+Round 1 proves the happy path: every epoch stitches, and the state restores
+bit-identically both unsharded and on a DIFFERENT mesh layout.
+
+Round 2 proves the crash-safety argument: ``FLOR_DIST_CRASH_BEFORE_PUBLISH``
+kills process 1 in the exact window between durable member manifests and
+its rendezvous marker. The store is never corrupted — the lead marks the
+checkpoint incomplete, the run finalizes at the last COMPLETE checkpoint,
+the replay planner skips the torn key, and GC reclaims the orphan members.
+
+(The CPU backend cannot jit multi-process computations, so the children
+compute their SPMD-replicated state locally and place it on the global mesh
+with ``make_array_from_callback`` — exactly the layout a real multi-host
+training step leaves behind, and the only part the checkpoint path sees.)
+"""
+import argparse
+import os
+import shutil
+import socket
+import subprocess
+import sys
+
+EPOCHS = 3
+CRASH_KEY = "train@2.0"
+
+
+def host_state(epoch):
+    import numpy as np
+    rng = np.random.default_rng(7)
+    w = (rng.normal(size=(64, 32)).astype(np.float32)
+         * (1.0 + 0.001 * epoch))
+    b = np.arange(32, dtype=np.float32) * (2.0 + 0.001 * epoch)
+    return {"w": w, "b": b}
+
+
+# ------------------------------------------------------------------ child --
+def child(run_dir: str, port: int, pid: int):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    import repro.flor as flor
+    from repro.parallel.rendezvous import StitchRendezvous, init_distributed
+
+    group = init_distributed(f"127.0.0.1:{port}", pid, 2)
+    assert jax.device_count() == 8 and jax.local_device_count() == 4
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+    specs = {"w": P("data", "model"), "b": P("model")}
+
+    def global_tree(epoch):
+        h = host_state(epoch)
+        return {k: jax.make_array_from_callback(
+                    h[k].shape, NamedSharding(mesh, specs[k]),
+                    lambda idx, a=h[k]: a[idx])
+                for k in h}
+
+    timeout = float(os.environ.get("T_STITCH", "30"))
+    with flor.Session(run_dir, mode="record",
+                      record=flor.RecordSpec(adaptive=False, mesh=mesh,
+                                             distributed=group,
+                                             stitch_timeout_s=timeout)) as s:
+        with s.checkpointing(state=global_tree(0)) as ckpt:
+            for epoch in s.loop("epochs", range(EPOCHS)):
+                for _ in s.loop("train", range(2)):
+                    pass
+                ckpt.state = global_tree(epoch + 1)
+                flor.log("epoch", epoch)
+    # exit barrier: neither process may tear down the jax coordinator
+    # (hosted by process 0) while its peer is still closing
+    rdv = StitchRendezvous(os.path.join(run_dir, "store"),
+                           "dist-" + os.path.basename(run_dir.rstrip("/")),
+                           group, timeout_s=timeout)
+    rdv.arrive("exit")
+    rdv.await_all("exit")
+    print(f"child {pid}: record complete", flush=True)
+    os._exit(0)
+
+
+# ----------------------------------------------------------- fleet driver --
+def free_port() -> int:
+    s = socket.socket()
+    s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def run_fleet(run_dir: str, env_extra=None) -> list:
+    if os.path.isdir(run_dir):
+        shutil.rmtree(run_dir)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)       # children force their own 4 devices
+    env.pop("JAX_PLATFORMS", None)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src, env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    env.update(env_extra or {})
+    port = free_port()
+    procs = [subprocess.Popen(
+                 [sys.executable, os.path.abspath(__file__),
+                  "--child", str(p), "--port", str(port),
+                  "--run-dir", run_dir],
+                 env=env)
+             for p in (0, 1)]
+    return [p.wait() for p in procs]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--run-dir", default="/tmp/flor_dist")
+    ap.add_argument("--child", type=int, default=None)
+    ap.add_argument("--port", type=int, default=0)
+    args = ap.parse_args()
+    if args.child is not None:
+        child(args.run_dir, args.port, args.child)
+        return
+
+    # the parent does the cross-mesh restore itself: 8 forced devices
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.checkpoint import CheckpointStore, restore_sharded_tree
+    from repro.checkpoint.lineage import RunRegistry
+    from repro.replay.plan import build_plan
+
+    # ---- round 1: clean 2-process record --------------------------------
+    run = args.run_dir
+    run_id = "dist-" + os.path.basename(run.rstrip("/"))
+    print("== round 1: 2-process record over a (2, 4) mesh ==")
+    rcs = run_fleet(run)
+    assert rcs == [0, 0], f"fleet failed: exit codes {rcs}"
+
+    store = CheckpointStore(os.path.join(run, "store"))
+    keys = set(store.list_keys())
+    for e in range(EPOCHS):
+        m = store.get_manifest(f"train@{e}.0")
+        assert m["version"] == 4 and len(m["members"]) == 8
+    print(f"  {EPOCHS} checkpoints stitched, 8 member shards each")
+
+    truth = host_state(2)            # train@2.0 = state ENTERING epoch 2
+    like = {"state": {k: np.empty_like(v) for k, v in truth.items()}}
+    got = store.get_tree("train@2.0", like=like)["state"]
+    assert all(np.array_equal(got[k], truth[k]) for k in truth)
+    print("  unsharded restore: bit-identical")
+
+    if len(jax.devices()) >= 8:
+        mesh = Mesh(np.array(jax.devices()[:8]).reshape(4, 2),
+                    ("data", "model"))
+        out = restore_sharded_tree(store, "train@2.0", mesh)
+        for k in truth:
+            arr = np.asarray(jax.device_get(out[f"['state']['{k}']"]))
+            assert np.array_equal(arr, truth[k]), k
+        print("  resharded (4, 2) restore: bit-identical")
+
+    rec = {r["run_id"]: r
+           for r in RunRegistry(os.path.join(run, "store")).list_runs()}
+    assert rec[run_id]["status"] == "finished"
+    assert rec[run_id]["final_keys"] == {"train": f"train@{EPOCHS - 1}.0"}
+    print(f"  registry: finished at train@{EPOCHS - 1}.0")
+
+    # ---- round 2: crash between publication and stitch ------------------
+    crun = run.rstrip("/") + "_crash"
+    print("== round 2: kill process 1 before it publishes", CRASH_KEY, "==")
+    rcs = run_fleet(crun, env_extra={
+        "T_STITCH": "6",
+        "FLOR_DIST_CRASH_BEFORE_PUBLISH": CRASH_KEY,
+        "FLOR_DIST_CRASH_PROCESS": "1",
+    })
+    assert rcs[0] == 0 and rcs[1] == 43, f"unexpected exit codes {rcs}"
+    print(f"  exit codes {rcs}: survivor finished, victim crashed")
+
+    cstore = CheckpointStore(os.path.join(crun, "store"))
+    ckeys = set(cstore.list_keys())
+    assert "train_at_2.0" not in ckeys            # no torn v4, ever
+    orphans = [k for k in ckeys if k.startswith("train_at_2.0.shard")]
+    assert orphans and cstore.get_meta("incomplete_ckpts") == \
+        {"keys": [CRASH_KEY]}
+    print(f"  no v4 for {CRASH_KEY}; {len(orphans)} orphan member(s); "
+          f"checkpoint marked incomplete")
+
+    creg = RunRegistry(os.path.join(crun, "store"))
+    crec = {r["run_id"]: r for r in creg.list_runs()}[run_id + "_crash"]
+    assert crec["final_keys"] == {"train": "train@1.0"}
+    assert build_plan(crun).incomplete == ["train_at_2.0"]
+    truth1 = host_state(1)
+    like1 = {"state": {k: np.empty_like(v) for k, v in truth1.items()}}
+    got1 = cstore.get_tree("train@1.0", like=like1)["state"]
+    assert all(np.array_equal(got1[k], truth1[k]) for k in truth1)
+    print("  run finalized at train@1.0; replay plan skips the torn key; "
+          "last complete checkpoint restores bit-identically")
+
+    res = creg.gc(cstore)
+    assert res["deleted_manifests"] == len(orphans)
+    got1 = cstore.get_tree("train@1.0", like=like1)["state"]
+    assert all(np.array_equal(got1[k], truth1[k]) for k in truth1)
+    print(f"  gc reclaimed {res['deleted_manifests']} orphan manifest(s) + "
+          f"{res['deleted_chunks']} chunk(s); restore still intact")
+    print("DISTRIBUTED_RECORD_OK")
+
+
+if __name__ == "__main__":
+    main()

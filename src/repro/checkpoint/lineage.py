@@ -119,20 +119,31 @@ class RunRegistry:
         # registry-driven gc forever
         self._sweep_stale(run_id, run_dir, namespace)
         if exclusive:
-            prev = self.get(run_id)
-            if prev is None:
-                if self._create_exclusive(rec):
-                    return rec
-                # lost the race between get() and link(): someone else owns
-                # the path now — reload and fall through to the ownership
-                # check below
+            # loop instead of falling through: under true multi-PROCESS
+            # contention a loser of the link race can observe the path
+            # vanish again (the winner finished and was unregistered, or a
+            # sweep raced us) — re-reading and falling through to the
+            # unconditional write below would claim the id NON-atomically,
+            # silently clobbering whichever peer re-created it in between.
+            # Every exit from this loop is either an atomic create we won,
+            # a RunIdCollision, or proof the existing record is OURS.
+            for _ in range(64):
                 prev = self.get(run_id)
-            if prev is not None and (prev.get("run_dir") != run_dir
-                                     or prev.get("namespace") != namespace):
-                raise RunIdCollision(
-                    f"run id {run_id!r} is already registered for "
-                    f"{prev.get('run_dir')!r} (ns {prev.get('namespace')!r})")
-            # else: our own stale/resumed registration — safe to replace
+                if prev is None:
+                    if self._create_exclusive(rec):
+                        return rec
+                    continue       # lost the link race: reload and re-check
+                if (prev.get("run_dir") != run_dir
+                        or prev.get("namespace") != namespace):
+                    raise RunIdCollision(
+                        f"run id {run_id!r} is already registered for "
+                        f"{prev.get('run_dir')!r} "
+                        f"(ns {prev.get('namespace')!r})")
+                break     # our own stale/resumed registration — replaceable
+            else:
+                raise RuntimeError(
+                    f"exclusive registration of {run_id!r} could not "
+                    f"stabilize — registry under pathological churn")
         prev = self.get(run_id)
         if prev:
             # a crash-restart/resume re-registers the same run id: its
@@ -250,13 +261,21 @@ class RunRegistry:
         so a chunk survives while ANY registered run can still resolve a
         manifest through it. `exclude_run_id` lets a run apply its OWN
         retention policy while keeping every sibling fully live."""
+        from repro.checkpoint.store import filter_orphan_members
         live = []
         for rec in self.list_runs():
             if exclude_run_id is not None \
                     and rec.get("run_id") == exclude_run_id:
                 continue
             ns = rec.get("namespace")
-            for k in store.list_keys(run=ns):
+            # orphan member manifests — shard members whose v4 stitch was
+            # never written because a host died between publication and
+            # stitch — must not SEED the closure (they'd pin their own
+            # chunks forever); members of stitched checkpoints re-enter
+            # through the v4's member walk, and incomplete predecessors a
+            # later delta inherits from re-enter through per-shard parent
+            # chains, so nothing live is lost
+            for k in filter_orphan_members(store.list_keys(run=ns)):
                 # "::key" = explicit flat namespace, immune to whatever
                 # namespace the store handle happens to be bound to
                 live.append(f"{ns or ''}::{k}")

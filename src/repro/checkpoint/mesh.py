@@ -70,7 +70,9 @@ def device_maps(mesh, shard_axes=()) -> tuple[dict, dict]:
     return ords, hosts
 
 
-def owned_shards(leaf, ords: dict, hosts: dict) -> list[dict]:
+def owned_shards(leaf, ords: dict, hosts: dict,
+                 process_index: Optional[int] = None,
+                 anchor: tuple[int, int] = (0, 0)) -> list[dict]:
     """Disjoint owner shards of one leaf: [{sid, hid, bounds, data}, ...]
     sorted by sid, where ``bounds`` is the shard's global index box
     ``[[lo, hi), ...]`` and ``data`` its single-device buffer.
@@ -78,28 +80,54 @@ def owned_shards(leaf, ords: dict, hosts: dict) -> list[dict]:
     jax arrays placed on the mesh cover exactly via their
     ``replica_id == 0`` addressable shards (a replicated leaf has ONE owner
     shard). Host numpy/python leaves — and arrays living off the mesh —
-    fall back to a single full shard owned by store shard 0."""
+    fall back to a single full shard owned by store shard 0.
+
+    Multi-process mode (``process_index`` set): a mesh leaf contributes
+    exactly the replica-0 shards addressable from THIS process — possibly
+    none (the union across the fleet is the same exact cover the
+    single-process path enumerates). Host / off-mesh leaves are SPMD-
+    replicated values, so only process 0 publishes them, under ``anchor``
+    — the (sid, hid) of process 0's lowest-ordinal mesh device — keeping
+    every byte inside a pool its writer owns."""
     shards = getattr(leaf, "addressable_shards", None)
     if shards is not None:
         out = []
         on_mesh = True
         for sh in shards:
-            if getattr(sh, "replica_id", 0) != 0:
-                continue
             did = sh.device.id
             if did not in ords:
                 on_mesh = False
                 break
+            if getattr(sh, "replica_id", 0) != 0:
+                continue
             bounds = [[int(s.start or 0),
                        int(s.stop if s.stop is not None else dim)]
                       for s, dim in zip(sh.index, leaf.shape)]
             out.append({"sid": ords[did], "hid": hosts[did],
                         "bounds": bounds, "data": sh.data})
-        if on_mesh and out:
+        if on_mesh and (out or process_index is not None):
             out.sort(key=lambda e: e["sid"])
             return out
+    if process_index is not None and process_index != 0:
+        return []
+    sid, hid = anchor if process_index is not None else (0, 0)
     full = [[0, int(d)] for d in getattr(leaf, "shape", ())]
-    return [{"sid": 0, "hid": 0, "bounds": full, "data": leaf}]
+    return [{"sid": sid, "hid": hid, "bounds": full, "data": leaf}]
+
+
+def local_anchor(mesh, ords: dict, hosts: dict,
+                 process_index: int) -> tuple[int, int]:
+    """(sid, hid) of this process's lowest-ordinal mesh device — the pool
+    host/off-mesh leaves are filed under in multi-process record. Falls
+    back to (0, 0) for a process with no mesh devices."""
+    best = None
+    for d in mesh.devices.flat:
+        if getattr(d, "process_index", 0) != process_index:
+            continue
+        cand = (ords[d.id], hosts[d.id])
+        if best is None or cand < best:
+            best = cand
+    return best if best is not None else (0, 0)
 
 
 def leaf_spec_entries(leaf) -> Optional[list]:

@@ -134,7 +134,8 @@ class CheckpointPipeline:
                  error_bounds: Optional[dict] = None,
                  entropy: bool = True,
                  overlap: bool = False,
-                 mesh=None, shard_axes: Iterable[str] = ()):
+                 mesh=None, shard_axes: Iterable[str] = (),
+                 dist=None):
         self.store = store
         self.chunk_words = chunk_words
         # full_every="auto": start at the default cadence and retune after
@@ -152,11 +153,26 @@ class CheckpointPipeline:
         # store shard per device).
         self.mesh = mesh
         self.shard_axes = tuple(shard_axes or ())
+        # true multi-process record: ``dist`` is a
+        # parallel.rendezvous.StitchRendezvous carrying this process's
+        # ProcessGroup. Each process fingerprints/gathers ONLY the shards
+        # its devices own and writes ONLY its own hosts' member manifests;
+        # the lead process gathers every host's publication through the
+        # file barrier and writes the v4 stitch (or marks the checkpoint
+        # incomplete past the deadline).
+        self.dist = dist
+        self._anchor = (0, 0)
+        self._incomplete: list[str] = []
+        self._key_chain: dict[str, list[str]] = {}
         if mesh is not None:
-            from repro.checkpoint.mesh import device_maps, mesh_meta
+            from repro.checkpoint.mesh import (device_maps, local_anchor,
+                                               mesh_meta)
             self._dev_ord, self._dev_host = device_maps(mesh,
                                                         self.shard_axes)
             self._mesh_meta = mesh_meta(mesh, self.shard_axes)
+            if dist is not None:
+                self._anchor = local_anchor(mesh, self._dev_ord,
+                                            self._dev_host, 0)
         self._mesh_meta_written = False
         # per-slot lossy policy: leaf paths matching any of these names /
         # glob patterns are stored blockwise-int8 (q8 wire format) when the
@@ -552,7 +568,11 @@ class CheckpointPipeline:
                 layout.append({"path": pstr, "dtype": dtype, "shape": shape,
                                "nbytes": 0, "spec": None, "shards": []})
                 continue
-            shards = owned_shards(leaf, self._dev_ord, self._dev_host)
+            shards = owned_shards(
+                leaf, self._dev_ord, self._dev_host,
+                process_index=(self.dist.group.process_id
+                               if self.dist is not None else None),
+                anchor=self._anchor)
             # the placement is part of the structure signature: a layout
             # change (resharded mid-run, mesh swap) forces a FULL manifest —
             # per-shard digests from another layout cover different bytes
@@ -634,6 +654,8 @@ class CheckpointPipeline:
         self._sig[scope] = sig
         self._last_key[scope] = key
         self._since_full[scope] = 0 if full else since + 1
+        if self.dist is not None:
+            self._key_chain.setdefault(scope, []).append(key)
         return {"key": key, "kind": payload["kind"], "sharded": True,
                 "parent": payload["parent"],
                 "transferred_bytes": payload["transferred_bytes"],
@@ -755,20 +777,26 @@ class CheckpointPipeline:
             for stale in set(hashes_map) - current:
                 del hashes_map[stale]
                 encs_map.pop(stale, None)
-        store.put_manifest({
-            "key": key, "version": 4, "kind": "sharded",
-            "ckpt_kind": payload["kind"], "parent": parent,
-            "treedef": payload["treedef"],
-            "chunk_words": payload["chunk_words"],
-            "mesh": payload["mesh"], "members": members,
-            "meta": payload["meta"], "leaves": payload["layout"],
-        })
-        if not self._mesh_meta_written:
+        stitched = True
+        if self.dist is None:
+            store.put_manifest({
+                "key": key, "version": 4, "kind": "sharded",
+                "ckpt_kind": payload["kind"], "parent": parent,
+                "treedef": payload["treedef"],
+                "chunk_words": payload["chunk_words"],
+                "mesh": payload["mesh"], "members": members,
+                "meta": payload["meta"], "leaves": payload["layout"],
+            })
+        else:
+            stitched = self._dist_stitch(payload, store, members)
+        if not self._mesh_meta_written and \
+                (self.dist is None or self.dist.group.is_lead):
             store.put_meta("mesh", payload["mesh"])
             self._mesh_meta_written = True
-        if full:
+        if full and stitched:
             self._retune_full_every(store, payload["logical_bytes"])
         return {"key": key, "kind": payload["kind"], "sharded": True,
+                "stitched": stitched,
                 "parent": parent,
                 "transferred_bytes": payload["transferred_bytes"],
                 "logical_bytes": payload["logical_bytes"],
@@ -783,6 +811,101 @@ class CheckpointPipeline:
                 "shard_bytes": shard_bytes,
                 "entropy_s": entropy_s,
                 "full_every": self.full_every}
+
+    # ------------------------------------------------- distributed stitch --
+    def _dist_stitch(self, payload: dict, store, members: dict) -> bool:
+        """Multi-process tail of a sharded checkpoint (writer thread).
+        Every process PUBLISHES its member-manifest names + local layout
+        fragment through the file rendezvous; the LEAD process gathers all
+        publications, validates them, merges the global layout, and writes
+        the v4 stitch atomically. Publication order is the crash-safety
+        invariant: member manifests land before the marker, the marker
+        before the stitch — so a crash anywhere in between leaves only
+        unreferenced members (GC food), never a v4 naming a missing one.
+        Past the deadline (or on validation failure) the lead marks the
+        checkpoint ``incomplete`` in run meta and training moves on."""
+        import os as _os
+        from repro.parallel import rendezvous as rdv
+        key = payload["key"]
+        group = self.dist.group
+        if rdv.crash_requested(key, group.process_id):
+            # fault injection: die AFTER member publication, BEFORE the
+            # marker — the exact window the crash-safety argument is about
+            _os._exit(rdv.CRASH_EXIT_CODE)
+        self.dist.publish(key, {
+            "process": group.process_id,
+            "kind": payload["kind"],
+            "members": dict(members),
+            "layout_shards": {lf["path"]: lf["shards"]
+                              for lf in payload["layout"]},
+        })
+        if not group.is_lead:
+            return True            # publication done; the lead stitches
+        got = self.dist.gather(key)
+        merged = self._merge_markers(store, payload, got) \
+            if got is not None else None
+        if merged is None:
+            self._mark_incomplete(store, key)
+            return False
+        layout, all_members = merged
+        store.put_manifest({
+            "key": key, "version": 4, "kind": "sharded",
+            "ckpt_kind": payload["kind"], "parent": payload["parent"],
+            "treedef": payload["treedef"],
+            "chunk_words": payload["chunk_words"],
+            "mesh": payload["mesh"], "members": all_members,
+            "meta": payload["meta"], "leaves": layout,
+        })
+        self.dist.clear(key)
+        return True
+
+    def _merge_markers(self, store, payload: dict,
+                       got: list) -> Optional[tuple]:
+        """Validate every host's publication and merge the global (layout,
+        members). None on any inconsistency — a member manifest missing
+        from disk, a host that decided a different full/delta kind, or a
+        shard set that does not tile a leaf — so a bad fleet state becomes
+        an ``incomplete`` checkpoint instead of a corrupt stitch."""
+        all_members: dict[str, str] = {}
+        for marker in got:
+            if marker.get("kind") != payload["kind"]:
+                return None
+            for hid, mkey in marker["members"].items():
+                if not store.has(mkey):
+                    return None
+                all_members[str(hid)] = mkey
+        layout = []
+        for lf in payload["layout"]:
+            merged = {k: v for k, v in lf.items() if k != "shards"}
+            shards: list[dict] = []
+            for marker in got:
+                shards.extend(marker["layout_shards"].get(lf["path"], []))
+            shards.sort(key=lambda s: s["sid"])
+            merged["shards"] = shards
+            layout.append(merged)
+            if lf["nbytes"] > 0 and lf["shape"]:
+                covered = 0
+                for s in shards:
+                    vol = 1
+                    for lo, hi in s["bounds"]:
+                        vol *= max(0, hi - lo)
+                    covered += vol
+                want = 1
+                for d in lf["shape"]:
+                    want *= int(d)
+                if covered != want:
+                    return None    # shards don't tile the leaf
+        return layout, all_members
+
+    def _mark_incomplete(self, store, key: str):
+        """Record a failed stitch in run meta (lead-only, so the
+        read-modify-write never races): the replay planner skips these
+        keys, and close() rolls final_keys back past them."""
+        self._incomplete.append(key)
+        cur = store.get_meta("incomplete_ckpts") or {"keys": []}
+        if key not in cur["keys"]:
+            cur["keys"].append(key)
+        store.put_meta("incomplete_ckpts", cur)
 
     def _materialized(self, stat: dict):
         self._stats.append(stat)
@@ -862,6 +985,31 @@ class CheckpointPipeline:
         if self.writer is not None:
             self.writer.close()
             self.writer = None
+        if self.dist is not None:
+            # roll each scope's tip back to the newest STITCHED key: a tail
+            # checkpoint whose stitch never happened (crashed peer,
+            # straggler past the deadline) has member manifests but no v4,
+            # and final_keys must never name it. Non-lead processes learn
+            # the outcome here, from the store, without extra coordination.
+            for scope, chain in self._key_chain.items():
+                if chain and not self.dist.group.is_lead:
+                    self._await_stitch(chain[-1])
+                live = [k for k in chain if self.store.has(k)]
+                self._last_key[scope] = live[-1] if live else None
+
+    def _await_stitch(self, key: str):
+        """Non-lead close-time wait for the lead's verdict on the tip key:
+        either the v4 appears or the key lands in the incomplete meta.
+        Bounded by the stitch timeout — a dead lead costs one deadline,
+        never a wedge."""
+        deadline = time.monotonic() + self.dist.timeout_s
+        while time.monotonic() < deadline:
+            if self.store.has(key):
+                return
+            inc = self.store.get_meta("incomplete_ckpts") or {"keys": []}
+            if key in inc.get("keys", []):
+                return
+            time.sleep(0.02)
 
     def chain_keys(self) -> list[str]:
         """The tip checkpoint key of every scope's delta chain. A GC that

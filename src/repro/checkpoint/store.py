@@ -117,9 +117,17 @@ class CheckpointStore:
     """
 
     def __init__(self, root: str, compress_level: int = 3,
-                 run_id: Optional[str] = None):
+                 run_id: Optional[str] = None,
+                 prefer_shards: Optional[Iterable] = None):
         self.root = root
         self.run_id = run_id
+        # shard-pool read affinity: a multi-host replay worker that only has
+        # its own host's pool mounted locally lists those shard ids here, so
+        # fallback chunk scans hit local disk first. Purely an ORDERING —
+        # content addressing keeps every pool a valid source, so resharded
+        # restores that need another host's chunks still work when the
+        # store root is shared (network FS).
+        self.prefer_shards = [str(s) for s in (prefer_shards or ())]
         os.makedirs(os.path.join(root, "objects"), exist_ok=True)
         os.makedirs(os.path.join(root, "manifests"), exist_ok=True)
         os.makedirs(os.path.join(root, "meta"), exist_ok=True)
@@ -188,9 +196,14 @@ class CheckpointStore:
         cands = []
         if shard is not None:
             cands.append(self._chunk_path(h, shard))
+        for s in self.prefer_shards:
+            if shard is None or str(shard) != s:
+                cands.append(self._chunk_path(h, s))
         cands.append(self._chunk_path(h))
+        seen = {str(shard)} if shard is not None else set()
+        seen.update(self.prefer_shards)
         for s in self._shard_ids():
-            if shard is not None and str(shard) == s:
+            if s in seen:
                 continue
             cands.append(self._chunk_path(h, s))
         for p in cands:
@@ -930,6 +943,37 @@ def _manifest_enc_counts(manifest: dict) -> dict:
             e = denc.get(i, "raw")
             counts[e] = counts.get(e, 0) + 1
     return counts
+
+
+_MEMBER_RE = None
+
+
+def member_base(key: str) -> Optional[str]:
+    """Base checkpoint key of a sharded MEMBER manifest name
+    (``train_at_2.0.shard3`` -> ``train_at_2.0``; raw ``train@2.0.shard3``
+    works too); ``None`` for non-member keys. Used by live-set construction
+    (lineage.live_keys, context gc): a member whose global v4 stitch was
+    never written — a host crashed between member publication and the
+    stitch — must NOT seed the gc closure, or the orphans it left would be
+    pinned forever. Members of STITCHED checkpoints need no seeding: the
+    v4 manifest pulls them (and, through per-shard parent chains, every
+    incomplete predecessor a later delta still inherits from) into the
+    closure."""
+    global _MEMBER_RE
+    if _MEMBER_RE is None:
+        import re
+        _MEMBER_RE = re.compile(r"^(?P<base>.+)\.shard\d+$")
+    m = _MEMBER_RE.match(key)
+    return m.group("base") if m else None
+
+
+def filter_orphan_members(keys: Iterable[str]) -> list[str]:
+    """Drop member-manifest names whose base (stitched v4) key is absent
+    from the SAME listing — the gc-seed form of the orphan rule above."""
+    keys = list(keys)
+    present = set(keys)
+    return [k for k in keys
+            if (lambda b: b is None or b in present)(member_base(k))]
 
 
 def _safe(key: str) -> str:

@@ -67,8 +67,26 @@ class FlorContext:
                  log_spill_bytes: int = DEFAULT_SPILL_BYTES,
                  ckpt_quantize_slots=(), ckpt_error_bounds=(),
                  ckpt_overlap: bool = False,
-                 mesh=None, ckpt_shard_axes=()):
+                 mesh=None, ckpt_shard_axes=(),
+                 distributed=False, stitch_timeout_s: float = 30.0):
         assert mode in ("record", "replay")
+        # ---- true multi-process record (jax.distributed) ----
+        # `distributed` is False, True (read the fleet shape from the
+        # already-initialized jax runtime) or an explicit
+        # parallel.rendezvous.ProcessGroup. Every process derives the SAME
+        # run identity; only process 0 (the lead) probes the store,
+        # stitches v4 manifests and finalizes the registry.
+        self.dist_group = None
+        self.rendezvous = None
+        if mode == "record" and distributed:
+            from repro.parallel.rendezvous import ProcessGroup, current_group
+            self.dist_group = distributed \
+                if isinstance(distributed, ProcessGroup) else current_group()
+            # give each record process a distinct worker identity so
+            # per-process artifacts (controller meta, staging dbs) never
+            # collide; single-process record keeps pid as passed
+            pid = self.dist_group.process_id
+        self._is_lead = self.dist_group is None or self.dist_group.is_lead
         if ckpt_quantize_slots:
             _deprecated(
                 "ckpt_quantize_slots is deprecated: declare WHAT error each "
@@ -113,6 +131,15 @@ class FlorContext:
                 # is a crash-restart/resume, not a new run: forking a fresh
                 # namespace would orphan the run's own checkpoints
                 self.run_id = saved["run_id"]
+            elif self.dist_group is not None \
+                    and self.dist_group.num_processes > 1:
+                # every process of the fleet must derive the SAME id with no
+                # coordination channel yet: a deterministic name from the
+                # (shared) run dir. Peers registering it concurrently land
+                # on the resume path (same run_dir/namespace) — never a
+                # collision, never a random retry that would fork the fleet
+                self.run_id = "dist-" + os.path.basename(
+                    os.path.abspath(run_dir).rstrip("/"))
             else:
                 self.run_id = generate_run_id()
                 generated = True
@@ -166,8 +193,21 @@ class FlorContext:
             self.parent_run = parent_run or saved.get("parent_run")
             self.registry = RunRegistry(self.store_root)
             self._registered = False
-        self.store = CheckpointStore(self.store_root, run_id=self.namespace)
-        if mode == "record":
+        # FLOR_PREFER_SHARDS="0,2": read-affinity ordering over the store's
+        # shard pools — a distributed replay worker mounts its own host's
+        # pool first (content addressing keeps every pool valid regardless)
+        prefer = [s.strip() for s in
+                  os.environ.get("FLOR_PREFER_SHARDS", "").split(",")
+                  if s.strip()]
+        self.store = CheckpointStore(self.store_root, run_id=self.namespace,
+                                     prefer_shards=prefer or None)
+        if self.dist_group is not None \
+                and self.dist_group.num_processes > 1:
+            from repro.parallel.rendezvous import StitchRendezvous
+            self.rendezvous = StitchRendezvous(
+                self.store_root, self.run_id, self.dist_group,
+                timeout_s=stitch_timeout_s)
+        if mode == "record" and self._is_lead:
             self._snapshot_source()
         self.warmstart_stats: dict[str, dict] = {}
         if adaptive and mode == "record":
@@ -175,9 +215,21 @@ class FlorContext:
             # measured the store's throughput: reuse the persisted figure and
             # skip the ~8MB probe write; fresh stores still calibrate once
             calib = self.store.get_meta("store_calib")
+            if not (calib and calib.get("write_bps")) \
+                    and not self._is_lead:
+                # only the lead probes a distributed store (two concurrent
+                # probes would race the same __calib__ manifest); peers
+                # briefly wait for its figure, then fall back to defaults
+                deadline = time.monotonic() + min(5.0,
+                                                  float(stitch_timeout_s))
+                while time.monotonic() < deadline:
+                    calib = self.store.get_meta("store_calib")
+                    if calib and calib.get("write_bps"):
+                        break
+                    time.sleep(0.05)
             if calib and calib.get("write_bps"):
                 self.controller.write_bps = float(calib["write_bps"])
-            else:
+            elif self._is_lead:
                 calib = self._calibrate_store()
                 calib["measured_at"] = time.time()
                 self.store.put_meta("store_calib", calib)
@@ -192,11 +244,19 @@ class FlorContext:
             error_bounds=dict(ckpt_error_bounds or {}),
             overlap=ckpt_overlap,
             mesh=mesh, shard_axes=ckpt_shard_axes,
+            dist=self.rendezvous,
             on_materialized=self._on_materialized) \
             if mode == "record" else None
         # backward-compat handle (benchmarks call ctx.writer.drain())
         self.writer = self.pipeline.writer if self.pipeline else None
-        suffix = "record" if mode == "record" else f"replay_p{pid}"
+        # distributed record: non-lead processes run the same SPMD program
+        # and would log the same rows — they keep a per-process debug stream
+        # (invisible to run_logs, which reads record.jsonl + replay_*) so
+        # the query surface sees exactly one copy, the lead's
+        if mode == "record":
+            suffix = "record" if self._is_lead else f"record_p{pid}"
+        else:
+            suffix = f"replay_p{pid}"
         # incremental query-index maintenance (repro.querydb): sealed log
         # segments are ingested into <store_root>/index/flor.db the moment
         # they seal, off the step path, drawing from the same epsilon budget
@@ -209,6 +269,10 @@ class FlorContext:
                 self.log_indexer = SegmentIndexer(
                     self.store_root, self.run_id, suffix,
                     registry=self.registry,
+                    # multi-process record: each process ingests into its
+                    # OWN staging db and merges it into flor.db at finish —
+                    # seal-time writers never contend on the shared index
+                    staging=(pid if self.rendezvous is not None else None),
                     on_overhead=self.controller.observe_logging)
                 if mode == "replay":
                     # this attempt rotates its stream below (fresh=True):
@@ -525,15 +589,21 @@ class FlorContext:
             log_err = e
         final_keys: dict[str, str] = {}
         if self.pipeline is not None:
-            final_keys = {s: k for s, k in self.pipeline._last_key.items()
-                          if k}
-            self.pipeline.close()
-            self.pipeline = None
+            # tips are read AFTER close(): a distributed pipeline rolls each
+            # scope's tip back past keys whose stitch never happened, and
+            # final_keys must never name an unstitched checkpoint
+            pipeline, self.pipeline = self.pipeline, None
+            pipeline.close()
             self.writer = None
+            final_keys = {s: k for s, k in pipeline._last_key.items() if k}
         if self._registered:
-            # the per-scope tips are what a derived run warm-starts from
-            self.registry.finalize(self.run_id, final_keys=final_keys,
-                                   status=status)
+            # the per-scope tips are what a derived run warm-starts from.
+            # Only the LEAD of a distributed fleet finalizes — concurrent
+            # finalize read-modify-writes would lose each other's updates,
+            # and every process computes the same tips anyway
+            if self._is_lead:
+                self.registry.finalize(self.run_id, final_keys=final_keys,
+                                       status=status)
             self._registered = False
         if self.log_indexer is not None:
             # log closed above (final segment sealed+ingested), registry
@@ -541,7 +611,7 @@ class FlorContext:
             # whole store's listing is index-serviceable. Best-effort.
             indexer, self.log_indexer = self.log_indexer, None
             indexer.finish(self.registry)
-        if self.mode == "record" and self._block_profile:
+        if self.mode == "record" and self._block_profile and self._is_lead:
             # merge over any previous profile so a resumed run keeps the
             # epochs it recorded before the restart
             prev = (self.store.get_meta("block_profile") or {}).get("blocks",

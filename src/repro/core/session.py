@@ -105,6 +105,16 @@ class RecordSpec:
     # (default () = all axes: one store shard per device).
     mesh: Optional[Any] = None
     ckpt_shard_axes: tuple = ()
+    # true multi-process record (jax.distributed): every REAL host runs the
+    # fused pass over its local shards and publishes member manifests into
+    # its own pool; process 0 stitches the v4 through a file rendezvous.
+    # ``distributed=True`` reads the fleet shape from the initialized jax
+    # runtime (process_index/process_count); a
+    # parallel.rendezvous.ProcessGroup pins it explicitly. A host past
+    # ``stitch_timeout_s`` marks the checkpoint incomplete (replay skips
+    # it) instead of wedging training.
+    distributed: Any = False
+    stitch_timeout_s: float = 30.0
 
     def __post_init__(self):
         if not 0 < self.epsilon <= 1:
@@ -161,6 +171,12 @@ class RecordSpec:
             if bad:
                 raise ValueError(f"ckpt_shard_axes {bad} not in mesh axes "
                                  f"{sorted(names)}")
+        if self.distributed and self.mesh is None:
+            raise ValueError("distributed record requires mesh= (the global "
+                             "device mesh spanning every process)")
+        if not float(self.stitch_timeout_s) > 0:
+            raise ValueError(f"stitch_timeout_s must be > 0, got "
+                             f"{self.stitch_timeout_s!r}")
 
     def to_kwargs(self) -> dict:
         return {f.name: getattr(self, f.name) for f in fields(self)}

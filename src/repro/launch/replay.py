@@ -30,6 +30,10 @@ import sys
 import time
 
 
+# barrier pseudo-key multi-host replay uses for the merge handoff
+MERGE_BARRIER = "replay.merge"
+
+
 def _parse_segments(spec: str) -> list:
     """'0:init,1:exec,...' -> [(0, 'init'), (1, 'exec'), ...]."""
     out = []
@@ -205,6 +209,26 @@ def main():
                     help="model N replay hosts: tasks are LPT-placed onto "
                          "host queues and workers steal only when their "
                          "home queue drains (sharded-store affinity)")
+    ap.add_argument("--coordinator", default=None,
+                    help="accepted for launcher symmetry with train; "
+                         "replay hosts coordinate through the store "
+                         "filesystem, not a jax.distributed service")
+    ap.add_argument("--process-id", type=int, default=0,
+                    help="this host's id in a TRUE multi-process replay "
+                         "fleet (every host runs this launcher)")
+    ap.add_argument("--num-processes", type=int, default=1,
+                    help="replay fleet size; > 1 partitions the planned "
+                         "tasks across real hosts — each host executes "
+                         "only its share against its own shard pools, "
+                         "host 0 merges after a store-file barrier")
+    ap.add_argument("--merge-timeout", type=float, default=600.0,
+                    help="seconds host 0 waits for every host's share "
+                         "before failing the merge")
+    ap.add_argument("--prefer-shards", default=None,
+                    help="comma-separated store shard ids this host mounts "
+                         "with read affinity (default under "
+                         "--num-processes: a contiguous block of the "
+                         "recorded shards)")
     ap.add_argument("--straggler-factor", type=float, default=None,
                     help="speculatively re-issue a task running this many "
                          "times longer than expected (0 = off; default: "
@@ -260,7 +284,13 @@ def main():
         tasks.append(Task(task_id=tid, visits=plan.visits_for(sh),
                           epochs=[s.epoch for s in sh],
                           est_cost_s=share_cost(plan, sh)))
-    n_hosts = max(1, args.hosts)
+    # ---- true multi-host replay (--num-processes > 1): every host runs
+    # this launcher against the shared store; the plan and the LPT host
+    # assignment are deterministic, so each host independently derives the
+    # SAME partition and executes only its share. Host 0 merges once every
+    # host has arrived at the store-file barrier.
+    fleet = max(1, args.num_processes)
+    n_hosts = fleet if fleet > 1 else max(1, args.hosts)
     if n_hosts > 1:
         assign_hosts(tasks, n_hosts)
     for t in tasks:
@@ -271,7 +301,36 @@ def main():
                                     "est_cost_s": t.est_cost_s,
                                     "host": t.host}
                    for t in tasks}
-    plan.save(assignments=assignments)
+    rdv = None
+    my_tasks = tasks
+    if fleet > 1:
+        from repro.parallel.rendezvous import ProcessGroup, StitchRendezvous
+        from repro.replay import open_run_store
+        store, run_meta = open_run_store(args.run_dir)
+        rdv = StitchRendezvous(store.root,
+                               run_meta.get("run_id") or "replay",
+                               ProcessGroup(args.process_id, fleet),
+                               timeout_s=args.merge_timeout)
+        # a stale marker from a crashed previous invocation must never
+        # satisfy this round's barrier on our behalf
+        rdv.retract(MERGE_BARRIER)
+        my_tasks = [t for t in tasks if t.host == args.process_id]
+        print(f"host {args.process_id}/{fleet}: executing "
+              f"{len(my_tasks)}/{len(tasks)} task(s)")
+        # shard-pool read affinity: mount this host's share of the recorded
+        # store shards first (content addressing keeps every pool valid)
+        if args.prefer_shards is not None:
+            os.environ["FLOR_PREFER_SHARDS"] = args.prefer_shards
+        else:
+            n_store = int((plan.mesh or {}).get("n_store_shards") or 0)
+            mine = [str(h) for h in range(n_store)
+                    if h * fleet // n_store == args.process_id]
+            if mine:
+                os.environ["FLOR_PREFER_SHARDS"] = ",".join(mine)
+    elif args.prefer_shards:
+        os.environ["FLOR_PREFER_SHARDS"] = args.prefer_shards
+    if rdv is None or rdv.group.is_lead:
+        plan.save(assignments=assignments)
     if args.plan_only:
         return
 
@@ -317,9 +376,10 @@ def main():
               f"{straggler:g}x horizon)")
 
     t0 = time.time()
-    ex = DynamicExecutor(tasks, run_task, args.nworkers,
+    ex = DynamicExecutor(my_tasks, run_task, args.nworkers,
                          straggler_factor=straggler,
-                         on_complete=on_complete, n_hosts=n_hosts)
+                         on_complete=on_complete,
+                         n_hosts=1 if fleet > 1 else n_hosts)
     try:
         done = ex.run()
     except TaskFailure as e:
@@ -327,27 +387,48 @@ def main():
         sys.exit(1)
     wall = time.time() - t0
     print(f"parallel replay (planned, {args.partition}): "
-          f"{args.nworkers} workers / {len(tasks)} tasks, "
+          f"{args.nworkers} workers / {len(my_tasks)} tasks, "
           f"wall {wall:.2f}s")
     _print_store_summary(args.run_dir)
 
     # ---- merge per plan segment ----
     # owner log = the pid run_task RETURNED for the winning attempt
     owners = [(f"replay_p{done[task.task_id][1]}", task.epochs)
-              for task in tasks if task.task_id in done]
+              for task in my_tasks if task.task_id in done]
     # drop superseded attempt logs (failed first tries, cancelled straggler
     # duplicates): the query surface globs every replay_*.jsonl, and a
     # partial log from a dead attempt would pollute runs logs/pivot and any
     # later raw-file deferred check. remove_stream handles both layouts
-    # (flat file, or the background writer's segment dir at the same path)
+    # (flat file, or the background writer's segment dir at the same path).
+    # Task ids are fleet-global, so each host only touches its own logs.
     from repro.logging import remove_stream
     keep = {f"replay_p{done[t.task_id][1]}.jsonl"
-            for t in tasks if t.task_id in done}
-    for t in tasks:
+            for t in my_tasks if t.task_id in done}
+    for t in my_tasks:
         for attempt in range(1, ex.max_attempts + 1):
             fn = f"replay_p{t.task_id + (attempt - 1) * pid_stride}.jsonl"
             if fn not in keep:
                 remove_stream(os.path.join(args.run_dir, "logs", fn))
+
+    if rdv is not None:
+        # hand this host's owner map to host 0 through the store barrier;
+        # only the lead merges (and only after EVERY host arrived, so the
+        # merge never reads a log a straggler is still writing)
+        rdv.arrive(MERGE_BARRIER,
+                   {"process": rdv.group.process_id,
+                    "owners": [[src, list(eps)] for src, eps in owners]})
+        if not rdv.group.is_lead:
+            print(f"host {rdv.group.process_id}: share complete "
+                  f"({len(owners)} task log(s)); host 0 merges")
+            return
+        got = rdv.await_all(MERGE_BARRIER, timeout_s=args.merge_timeout)
+        if got is None:
+            print(f"replay merge FAILED: a host missed the merge barrier "
+                  f"within {args.merge_timeout:.0f}s")
+            sys.exit(1)
+        rdv.clear(MERGE_BARRIER)
+        owners = [(src, eps) for marker in got
+                  for src, eps in (marker.get("owners") or [])]
     merged = merge_replay_logs(args.run_dir, owners, out_path=True)
     print(f"merged {len(merged)} log rows from {len(owners)} task log(s) "
           f"-> logs/merged_replay.jsonl")

@@ -51,7 +51,23 @@ def main():
                          "(0 disables)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", default=None,
-                    help="e.g. 1x1; data x model over local devices")
+                    help="e.g. 1x1; data x model over local devices "
+                         "(GLOBAL devices under --num-processes > 1)")
+    ap.add_argument("--coordinator", default="127.0.0.1:12355",
+                    help="jax.distributed coordinator address "
+                         "(host:port) for true multi-process record")
+    ap.add_argument("--process-id", type=int, default=0,
+                    help="this process's id in the record fleet")
+    ap.add_argument("--num-processes", type=int, default=1,
+                    help="record fleet size; > 1 turns on distributed "
+                         "record: each process checkpoints only its local "
+                         "shards, process 0 stitches the v4 manifests")
+    ap.add_argument("--stitch-timeout", type=float, default=30.0,
+                    help="seconds the stitch rendezvous waits for every "
+                         "host before marking a checkpoint incomplete")
+    ap.add_argument("--ckpt-shard-axes", default="",
+                    help="comma-separated mesh axes mapping onto store "
+                         "shards (default: all axes — one shard/device)")
     ap.add_argument("--store-root", default=None,
                     help="SHARED checkpoint store root (multi-run lineage); "
                          "default: private <run-dir>/store")
@@ -68,12 +84,27 @@ def main():
     from repro.parallel import use_mesh
     from repro.train.step import build_train_step
 
+    # true multi-process record: join the fleet BEFORE any jax call touches
+    # the backend, so jax.devices() spans every host
+    group = None
+    if args.num_processes > 1:
+        from repro.parallel.rendezvous import init_distributed
+        group = init_distributed(args.coordinator, args.process_id,
+                                 args.num_processes)
+        print(f"distributed record: process {group.process_id}/"
+              f"{group.num_processes}, {jax.local_device_count()} local / "
+              f"{jax.device_count()} global devices", flush=True)
+
     cfg = C.get_smoke(args.arch) if args.smoke else C.get(args.arch)
     init_state, train_step = build_train_step(cfg)
     mesh = None
     if args.mesh:
         d, m = (int(x) for x in args.mesh.split("x"))
         mesh = jax.make_mesh((d, m), ("data", "model"))
+    if group is not None and mesh is None:
+        ap.error("--num-processes > 1 requires --mesh (the global device "
+                 "mesh spanning every process)")
+    shard_axes = tuple(a for a in args.ckpt_shard_axes.split(",") if a)
 
     with use_mesh(mesh):
         ts = jax.jit(train_step)
@@ -97,7 +128,16 @@ def main():
                 record=flor.RecordSpec(epsilon=args.epsilon,
                                        adaptive=not args.no_adaptive,
                                        async_log=not args.sync_log,
-                                       log_spill_bytes=args.log_spill_bytes),
+                                       log_spill_bytes=args.log_spill_bytes,
+                                       # distributed: sharded checkpoints
+                                       # over the global mesh, per-process
+                                       # local shards, lead-stitched v4s
+                                       mesh=mesh if group is not None
+                                       else None,
+                                       ckpt_shard_axes=shard_axes
+                                       if group is not None else (),
+                                       distributed=group or False,
+                                       stitch_timeout_s=args.stitch_timeout),
                 lineage=flor.LineageSpec(store_root=args.store_root,
                                          run_id=args.run_id,
                                          parent_run=args.parent_run)) as sess:
@@ -109,10 +149,17 @@ def main():
                 print(f"warm start from run {ctx.parent_run!r}", flush=True)
                 state = sess.warm_start("train", like=state)
                 state = jax.tree_util.tree_map(jnp.asarray, state)
-            # crash-restart: resume from the latest epoch checkpoint if any
+            # crash-restart: resume from the latest epoch checkpoint if any.
+            # Shard MEMBER manifests (<key>.shard<h>) and checkpoints a
+            # distributed record marked incomplete never anchor a resume —
+            # only stitched (or flat) epoch keys count as done.
+            from repro.checkpoint.store import _safe
+            inc = {_safe(k) for k in
+                   (ctx.store.get_meta("incomplete_ckpts") or {})
+                   .get("keys") or ()}
             done = set()
             for k in ctx.store.list_keys():
-                if "_at_" in k:
+                if "_at_" in k and ".shard" not in k and k not in inc:
                     try:
                         done.add(int(k.split("_at_")[1].split(".")[0]))
                     except ValueError:

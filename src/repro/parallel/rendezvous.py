@@ -1,0 +1,227 @@
+"""File-based stitch rendezvous for true multi-process mesh record.
+
+PR 7's sharded pipeline simulated every host inside one process, so the
+v4 stitch was a plain function call. Under ``jax.distributed`` each REAL
+host records its local shards and publishes member manifests into its own
+``store/shards/<hid>/`` pool; the only cross-host coordination is a small
+file barrier under ``<store_root>/runs/<run>/.stitch/``:
+
+  * every process ``publish()``-es one JSON marker per checkpoint key
+    (``<key>/p<pid>.json``, via the store's crash-safe ``_atomic_write``)
+    carrying its member-manifest names and local layout fragment, and
+    touches its heartbeat file ``hb.p<pid>``;
+  * the LEAD process (process 0) ``gather()``-s all markers, validates the
+    member manifests, and writes the global v4 manifest atomically — the
+    ONLY writer of the stitch, so there is no election race;
+  * a process that dies between member publication and the stitch leaves
+    only unreferenced member manifests (GC reclaims them — the v4 was
+    never written, so nothing dangles); a straggler past the deadline
+    makes ``gather`` return ``None`` and the lead marks the checkpoint
+    ``incomplete`` in run meta instead of wedging training.
+
+Heartbeats bound the wait from the OTHER side: a process whose marker is
+missing and whose heartbeat file is older than the timeout is declared
+dead immediately rather than burning the remaining deadline.
+
+Fault injection (tests / the distributed example): set
+``FLOR_DIST_CRASH_BEFORE_PUBLISH=<key>`` (optionally scoped with
+``FLOR_DIST_CRASH_PROCESS=<pid>``) and the matching process exits with
+code 43 after writing its member manifests but before publishing its
+marker — the exact window the crash-safety argument is about.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.checkpoint.store import _atomic_write
+
+CRASH_EXIT_CODE = 43
+
+
+def _fsafe(name: str) -> str:
+    return re.sub(r"[^A-Za-z0-9._-]", "_", name)
+
+
+@dataclass(frozen=True)
+class ProcessGroup:
+    """Identity of this process inside a jax.distributed record fleet."""
+    process_id: int
+    num_processes: int
+    coordinator: Optional[str] = None
+
+    def __post_init__(self):
+        if not (0 <= self.process_id < self.num_processes):
+            raise ValueError(
+                f"process_id {self.process_id} outside fleet of "
+                f"{self.num_processes}")
+
+    @property
+    def is_lead(self) -> bool:
+        return self.process_id == 0
+
+
+def init_distributed(coordinator: str, process_id: int,
+                     num_processes: int) -> ProcessGroup:
+    """``jax.distributed.initialize`` + the matching ProcessGroup. A
+    single-process fleet skips the jax service entirely (handy for
+    launcher smoke paths).
+
+    ``FLOR_DIST_HEARTBEAT_SLACK=<k>`` multiplies the coordination
+    service's missing-heartbeat allowance (default interval 10s x 10
+    missed). On an oversubscribed box — CI runners, a laptop running the
+    whole fleet — concurrent XLA compiles can starve a process past the
+    stock 100s window, and the coordinator then aborts the HEALTHY peers;
+    the slack keeps a slow-but-alive fleet out of that failure mode. The
+    knob rides the internal initialize (the public one does not expose
+    heartbeat tuning in this jax line) and falls back to the public API
+    when the internals have moved."""
+    group = ProcessGroup(process_id, num_processes, coordinator)
+    if num_processes > 1:
+        import jax
+        slack = max(1, int(os.environ.get("FLOR_DIST_HEARTBEAT_SLACK",
+                                          "1") or 1))
+        if slack > 1:
+            try:
+                from jax._src.distributed import global_state
+                global_state.initialize(
+                    coordinator_address=coordinator,
+                    num_processes=num_processes,
+                    process_id=process_id,
+                    service_max_missing_heartbeats=10 * slack,
+                    client_max_missing_heartbeats=10 * slack)
+                return group
+            except (ImportError, TypeError):
+                pass
+        jax.distributed.initialize(coordinator_address=coordinator,
+                                   num_processes=num_processes,
+                                   process_id=process_id)
+    return group
+
+
+def current_group() -> ProcessGroup:
+    """ProcessGroup of an already-initialized jax runtime (process 0/1
+    when jax.distributed was never initialized)."""
+    import jax
+    return ProcessGroup(int(jax.process_index()), int(jax.process_count()))
+
+
+def crash_requested(key: str, process_id: int) -> bool:
+    """Whether the fault-injection env asks THIS process to die before
+    publishing ``key``'s marker."""
+    want = os.environ.get("FLOR_DIST_CRASH_BEFORE_PUBLISH")
+    if not want or want != key:
+        return False
+    pid = os.environ.get("FLOR_DIST_CRASH_PROCESS")
+    return pid is None or int(pid) == process_id
+
+
+class StitchRendezvous:
+    """Crash-safe file barrier under ``<store_root>/runs/<run>/.stitch/``.
+
+    Every mutation goes through ``_atomic_write`` (tmp + ``os.replace``),
+    so a reader never observes a torn marker; a marker either exists whole
+    or not at all, which is exactly the publication-ordering guarantee the
+    v4 stitch needs.
+    """
+
+    POLL_S = 0.02
+
+    def __init__(self, store_root: str, run_id: str, group: ProcessGroup,
+                 timeout_s: float = 30.0):
+        self.root = os.path.join(str(store_root), "runs", _fsafe(run_id),
+                                 ".stitch")
+        self.group = group
+        self.timeout_s = float(timeout_s)
+        os.makedirs(self.root, exist_ok=True)
+
+    # ------------------------------------------------------------ paths --
+    def _key_dir(self, key: str) -> str:
+        return os.path.join(self.root, _fsafe(key))
+
+    def _marker(self, key: str, pid: int) -> str:
+        return os.path.join(self._key_dir(key), f"p{pid}.json")
+
+    def _hb_path(self, pid: int) -> str:
+        return os.path.join(self.root, f"hb.p{pid}")
+
+    # ------------------------------------------------------- publication --
+    def heartbeat(self):
+        _atomic_write(self._hb_path(self.group.process_id),
+                      str(time.time()).encode())
+
+    def publish(self, key: str, payload: dict):
+        """Atomically publish this process's marker for ``key`` and renew
+        the heartbeat. The fault-injection window sits just above this
+        call (see ``crash_requested``) — by the time a marker exists, the
+        member manifests it names are durably on disk."""
+        d = self._key_dir(key)
+        os.makedirs(d, exist_ok=True)
+        _atomic_write(self._marker(key, self.group.process_id),
+                      json.dumps(payload, sort_keys=True).encode())
+        self.heartbeat()
+
+    # ----------------------------------------------------------- gather --
+    def _hb_stale(self, pid: int) -> bool:
+        try:
+            age = time.time() - os.path.getmtime(self._hb_path(pid))
+        except OSError:
+            return False          # never beat yet: charge the deadline
+        return age > self.timeout_s
+
+    def gather(self, key: str,
+               timeout_s: Optional[float] = None) -> Optional[list]:
+        """Lead-only. All processes' payloads for ``key`` ordered by
+        process id, or ``None`` once the deadline passes or a missing
+        process's heartbeat goes stale (it is dead; waiting longer cannot
+        help)."""
+        budget = self.timeout_s if timeout_s is None else float(timeout_s)
+        deadline = time.monotonic() + budget
+        want = range(self.group.num_processes)
+        while True:
+            found = {}
+            for pid in want:
+                try:
+                    with open(self._marker(key, pid), "rb") as f:
+                        found[pid] = json.loads(f.read())
+                except (OSError, ValueError):
+                    pass
+            if len(found) == self.group.num_processes:
+                return [found[p] for p in want]
+            if time.monotonic() >= deadline:
+                return None
+            if any(p not in found and self._hb_stale(p) for p in want):
+                return None
+            time.sleep(self.POLL_S)
+
+    def clear(self, key: str):
+        """Drop a stitched key's marker dir (the v4 manifest is the
+        durable record; markers are scratch)."""
+        shutil.rmtree(self._key_dir(key), ignore_errors=True)
+
+    def retract(self, key: str):
+        """Remove this process's OWN marker for ``key`` (no heartbeat).
+        Barrier users call it at startup so a stale marker left by a
+        crashed previous invocation can never satisfy this round's
+        ``await_all`` on their behalf."""
+        try:
+            os.remove(self._marker(key, self.group.process_id))
+        except OSError:
+            pass
+
+    # ---------------------------------------------------------- barrier --
+    def arrive(self, name: str, payload: Optional[dict] = None):
+        """Generic named barrier arrival (e.g. replay-merge handoff):
+        publish a marker under the pseudo-key ``name``."""
+        self.publish(name, payload if payload is not None
+                     else {"process": self.group.process_id})
+
+    def await_all(self, name: str,
+                  timeout_s: Optional[float] = None) -> Optional[list]:
+        """Lead-side wait for every process's ``arrive(name)``."""
+        return self.gather(name, timeout_s)

@@ -32,6 +32,14 @@ def index_path(store_root: str) -> str:
     return os.path.join(store_root, "index", "flor.db")
 
 
+def staging_path(store_root: str, label) -> str:
+    """Per-process staging database for multi-process record: process
+    ``label`` ingests its sealed segments here (zero contention on the
+    shared ``flor.db``) and ``absorb``-s the file into the main index at
+    finish. A crashed process's leftover is swept by ``reindex``."""
+    return os.path.join(store_root, "index", "staging", f"p{label}.db")
+
+
 def spill_fields(value) -> tuple[Optional[str], Optional[str]]:
     """(spill_ref, spill_digest) of a large-value pointer row written by the
     background log's spill path (``{"ref": "logref__<stream>__<seq>",
@@ -51,9 +59,12 @@ class LogIndex:
     write method is transactional — rows and their watermark commit
     atomically."""
 
-    def __init__(self, store_root: str, create: bool = False):
+    def __init__(self, store_root: str, create: bool = False,
+                 db_path: Optional[str] = None):
         self.store_root = store_root
-        self.path = index_path(store_root)
+        # db_path overrides the default <root>/index/flor.db — the staging
+        # databases of multi-process record use the same schema + methods
+        self.path = db_path or index_path(store_root)
         self.conn = connect(self.path, create=create)
 
     def close(self):
@@ -131,6 +142,48 @@ class LogIndex:
                 self.conn.execute(
                     "DELETE FROM segments WHERE run_id=? AND stream=? "
                     "AND seg=?", (run_id, stream, s))
+
+    def absorb(self, other_path: str) -> int:
+        """Merge a staging database (same schema) into this index: for each
+        (run, stream, segment) the staging db ingested, replace this db's
+        rows and watermark with the staged ones — the exact DELETE+INSERT
+        a direct ingest performs, so a merged index is engine-identical to
+        one that ingested the segments itself. Rows copy ordered by
+        (source, seg, rowid): per-stream file order is preserved under
+        fresh rowids, which is all ``select_rows``' (seg, rowid) ordering
+        needs. Rows + watermarks commit in ONE transaction — a crash
+        mid-merge leaves the main index at its previous consistent state
+        and the staging file intact for the next sweep."""
+        if not os.path.exists(other_path):
+            return 0
+        self.conn.execute("ATTACH DATABASE ? AS stg", (other_path,))
+        try:
+            segs = self.conn.execute(
+                "SELECT run_id, stream, seg FROM stg.segments").fetchall()
+            with self.conn:
+                for rid, stream, seg in segs:
+                    self.conn.execute(
+                        "DELETE FROM records WHERE run_id=? AND source=? "
+                        "AND seg=?", (rid, stream, seg))
+                self.conn.execute(
+                    "INSERT INTO records(run_id, source, seg, seq, epoch, "
+                    "step, key, value_json, spill_ref, spill_digest) "
+                    "SELECT run_id, source, seg, seq, epoch, step, key, "
+                    "value_json, spill_ref, spill_digest FROM stg.records "
+                    "ORDER BY source, seg, rowid")
+                self.conn.execute(
+                    "INSERT OR REPLACE INTO segments "
+                    "SELECT * FROM stg.segments")
+                # staged run rows only fill gaps: the main mirror's rows
+                # (possibly already finalized via set_runs) stay as-is
+                self.conn.execute(
+                    "INSERT OR IGNORE INTO runs SELECT * FROM stg.runs")
+            return len(segs)
+        finally:
+            try:
+                self.conn.execute("DETACH DATABASE stg")
+            except Exception:
+                pass
 
     # -------------------------------------------------------------- runs --
     def upsert_run(self, rec: dict):

@@ -42,19 +42,32 @@ class SegmentIndexer:
     index-serviceable."""
 
     def __init__(self, store_root: str, run_id: str, stream: str,
-                 registry=None, on_overhead: Optional[Callable] = None):
+                 registry=None, on_overhead: Optional[Callable] = None,
+                 staging=None):
         self.store_root = store_root
         self.run_id = run_id
         self.stream = stream
         self.registry = registry
         self.on_overhead = on_overhead
+        # multi-process record: ``staging`` labels a PER-PROCESS database
+        # (<root>/index/staging/p<label>.db) this indexer ingests into —
+        # concurrent recorders never contend on the shared flor.db; each
+        # process absorbs its own staging file into the main index at
+        # finish(), and `reindex` sweeps leftovers of crashed processes
+        self.staging = staging
         self.dead = False
         self._idx: Optional[LogIndex] = None
         self._seeded = False
 
     def _index(self) -> LogIndex:
         if self._idx is None:
-            self._idx = ensure_index(self.store_root)
+            if self.staging is not None:
+                from repro.querydb.index import staging_path
+                self._idx = LogIndex(
+                    self.store_root, create=True,
+                    db_path=staging_path(self.store_root, self.staging))
+            else:
+                self._idx = ensure_index(self.store_root)
         return self._idx
 
     def _seed_run(self, idx: LogIndex):
@@ -99,23 +112,81 @@ class SegmentIndexer:
             self.dead = True
 
     def finish(self, registry=None):
-        """Close-time sync: mirror the full registry listing (the run's own
-        record now carries final status/keys) and stamp the directory
-        signature, then release the handle. Best-effort, like every other
-        path into the index."""
+        """Close-time sync: merge this process's staging database into the
+        main index (multi-process record), mirror the full registry listing
+        (the run's own record now carries final status/keys) and stamp the
+        directory signature, then release the handle. Best-effort, like
+        every other path into the index."""
         registry = registry or self.registry
         try:
+            if self.staging is not None:
+                # release the staging handle first (WAL checkpoint), then
+                # absorb into the main db — sqlite's busy timeout serializes
+                # sibling processes merging concurrently. The staging file
+                # is deleted only after the absorb transaction committed.
+                if self._idx is not None:
+                    self._idx.close()
+                    self._idx = None
+                from repro.querydb.index import ensure_index, staging_path
+                sp = staging_path(self.store_root, self.staging)
+                if not self.dead and os.path.exists(sp):
+                    main = ensure_index(self.store_root)
+                    try:
+                        main.absorb(sp)
+                        _remove_db(sp)
+                    finally:
+                        main.close()
             if not self.dead and registry is not None:
                 from repro.checkpoint.lineage import registry_dirsig
-                idx = self._index()
-                sig = registry_dirsig(self.store_root)
-                idx.set_runs(registry.list_runs(), sig)
+                from repro.querydb.index import ensure_index
+                idx = ensure_index(self.store_root) if self.staging \
+                    is not None else self._index()
+                try:
+                    sig = registry_dirsig(self.store_root)
+                    idx.set_runs(registry.list_runs(), sig)
+                finally:
+                    if self.staging is not None:
+                        idx.close()
         except Exception:
             self.dead = True
         finally:
             if self._idx is not None:
                 self._idx.close()
                 self._idx = None
+
+
+def _remove_db(db_path: str):
+    """Delete a sqlite database and its WAL sidecar files."""
+    for suffix in ("", "-wal", "-shm", "-journal"):
+        try:
+            os.remove(db_path + suffix)
+        except OSError:
+            pass
+
+
+def sweep_staging(store_root: str, idx: LogIndex) -> int:
+    """Absorb (then delete) leftover per-process staging databases — the
+    residue of record processes that crashed between sealing segments and
+    merging at finish. Absorbing (rather than just deleting) keeps streams
+    the file walk cannot enumerate (non-lead record_p<N> debug streams);
+    anything else the walk re-ingests from the segment files anyway."""
+    sdir = os.path.join(store_root, "index", "staging")
+    swept = 0
+    try:
+        names = sorted(os.listdir(sdir))
+    except OSError:
+        return 0
+    for fn in names:
+        if not fn.endswith(".db"):
+            continue
+        sp = os.path.join(sdir, fn)
+        try:
+            idx.absorb(sp)
+        except Exception:
+            pass          # torn staging db from a crash: drop it regardless
+        _remove_db(sp)
+        swept += 1
+    return swept
 
 
 def reindex(path: str) -> dict:
@@ -139,6 +210,7 @@ def reindex(path: str) -> dict:
     stats = {"runs": len(listing), "segments_ingested": 0,
              "segments_skipped": 0, "segments_pruned": 0, "rows": 0}
     try:
+        stats["staging_swept"] = sweep_staging(root, idx)
         idx.set_runs(listing, sig)
         for rec in listing:
             rid = rec.get("run_id")
@@ -185,4 +257,5 @@ def reindex(path: str) -> dict:
     return stats
 
 
-__all__ = ["SegmentIndexer", "reindex", "open_index", "ensure_index"]
+__all__ = ["SegmentIndexer", "reindex", "sweep_staging", "open_index",
+           "ensure_index"]

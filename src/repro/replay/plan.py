@@ -106,6 +106,7 @@ class ReplayPlan:
     segments: list                    # [Segment, ...] one per epoch
     probe_source: dict = field(default_factory=dict)   # how probes resolved
     mesh: dict = field(default_factory=dict)   # recorded mesh meta, if any
+    incomplete: list = field(default_factory=list)  # dist ckpts never stitched
 
     # ------------------------------------------------------------ queries --
     def segment(self, epoch) -> Segment:
@@ -304,9 +305,21 @@ def build_plan(run_dir: str,
     for bid, per_epoch in profile.items():
         for e, cell in per_epoch.items():
             occurrences.setdefault(bid, {})[int(e)] = float(cell.get("s", 0))
+    # checkpoints a distributed record marked incomplete (a host died or
+    # straggled past the stitch deadline): their v4 was never written —
+    # usually they are already invisible to the listing, but a key the lead
+    # flagged must never anchor a restore even if a partial artifact exists.
+    # Meta records raw keys; list_keys() returns sanitized names — compare
+    # in sanitized space.
+    from repro.checkpoint.store import _safe
+    incomplete = {_safe(k) for k in
+                  (store.get_meta("incomplete_ckpts") or {})
+                  .get("keys") or ()}
     keys_by_epoch: dict[int, list[str]] = {}
     blocks_by_epoch: dict[int, set] = {}
     for k in store.list_keys():
+        if k in incomplete:
+            continue
         parsed = _parse_ckpt_key(k)
         if parsed is None:
             continue
@@ -440,4 +453,5 @@ def build_plan(run_dir: str,
                       probed=frozenset(probed), init_mode=init_mode,
                       outer_probe=bool(outer_probe), main_loop=main_loop,
                       segments=segments, probe_source=probe_source,
-                      mesh=dict(store.get_meta("mesh") or {}))
+                      mesh=dict(store.get_meta("mesh") or {}),
+                      incomplete=sorted(incomplete))

@@ -1,0 +1,312 @@
+"""True multi-process mesh record: two REAL processes join a
+``jax.distributed`` fleet, each checkpoints only its local shards, and the
+lead stitches v4 manifests through the crash-safe file rendezvous.
+
+The cross-process cases run in subprocesses (4 forced host-platform devices
+per process -> a 2x4 global mesh; conftest strips XLA_FLAGS from THIS
+process). The CPU backend cannot jit multi-process computations, so the
+children compute their SPMD-replicated state locally and place it on the
+global mesh with ``make_array_from_callback`` — exactly the layout a real
+multi-host training step leaves behind, and the only part the checkpoint
+path sees.
+
+Fault injection: ``FLOR_DIST_CRASH_BEFORE_PUBLISH=<key>`` kills the matching
+process (exit 43) after its member manifests are durable but before its
+rendezvous marker — the exact window the crash-safety argument is about.
+"""
+import json
+import os
+import socket
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.parallel.rendezvous import (CRASH_EXIT_CODE, ProcessGroup,
+                                       StitchRendezvous, crash_requested)
+
+
+# ------------------------------------------------------------- rendezvous --
+def test_process_group_validates_and_leads():
+    g0 = ProcessGroup(0, 2)
+    g1 = ProcessGroup(1, 2)
+    assert g0.is_lead and not g1.is_lead
+    with pytest.raises(ValueError):
+        ProcessGroup(2, 2)
+    with pytest.raises(ValueError):
+        ProcessGroup(-1, 1)
+
+
+def test_rendezvous_publish_gather_clear(tmp_path):
+    root = str(tmp_path / "store")
+    r0 = StitchRendezvous(root, "r", ProcessGroup(0, 2), timeout_s=5.0)
+    r1 = StitchRendezvous(root, "r", ProcessGroup(1, 2), timeout_s=5.0)
+    r0.publish("train@0.0", {"process": 0, "members": {"0": "a"}})
+    r1.publish("train@0.0", {"process": 1, "members": {"1": "b"}})
+    got = r0.gather("train@0.0")
+    assert [m["process"] for m in got] == [0, 1]
+    r0.clear("train@0.0")
+    # cleared markers are gone: a fresh gather times out
+    assert r0.gather("train@0.0", timeout_s=0.1) is None
+
+
+def test_rendezvous_deadline_and_stale_heartbeat(tmp_path):
+    root = str(tmp_path / "store")
+    r0 = StitchRendezvous(root, "r", ProcessGroup(0, 2), timeout_s=0.3)
+    r1 = StitchRendezvous(root, "r", ProcessGroup(1, 2), timeout_s=0.3)
+    r0.publish("k", {"process": 0})
+    # the missing process never beat: gather charges the full deadline
+    assert r0.gather("k", timeout_s=0.3) is None
+    # a STALE heartbeat short-circuits the wait (the peer is dead)
+    r1.heartbeat()
+    os.utime(r1._hb_path(1), (1, 1))
+    assert r0.gather("k", timeout_s=30.0) is None
+    # a marker arriving late still satisfies a fresh gather
+    r1.publish("k", {"process": 1})
+    assert len(r0.gather("k")) == 2
+
+
+def test_rendezvous_retract_own_marker(tmp_path):
+    root = str(tmp_path / "store")
+    r1 = StitchRendezvous(root, "r", ProcessGroup(1, 2), timeout_s=1.0)
+    r1.arrive("replay.merge")
+    r1.retract("replay.merge")
+    r0 = StitchRendezvous(root, "r", ProcessGroup(0, 2), timeout_s=1.0)
+    r0.arrive("replay.merge")
+    assert r0.await_all("replay.merge", timeout_s=0.2) is None
+
+
+def test_crash_requested_env_scoping(monkeypatch):
+    assert not crash_requested("train@2.0", 0)
+    monkeypatch.setenv("FLOR_DIST_CRASH_BEFORE_PUBLISH", "train@2.0")
+    assert crash_requested("train@2.0", 0)
+    assert crash_requested("train@2.0", 1)
+    assert not crash_requested("train@1.0", 0)
+    monkeypatch.setenv("FLOR_DIST_CRASH_PROCESS", "1")
+    assert crash_requested("train@2.0", 1)
+    assert not crash_requested("train@2.0", 0)
+
+
+# ----------------------------------------------------- 2-process children --
+# Each child joins the fleet, records 3 epochs of a deterministic state
+# through the full Session path (staging index dbs, per-process log streams,
+# distributed stitch), then waits at a file barrier so neither process tears
+# down the jax coordinator while its peer is still closing.
+CHILD = textwrap.dedent("""
+    import os, sys
+    run_dir, port, pid = sys.argv[1], sys.argv[2], int(sys.argv[3])
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.parallel.rendezvous import StitchRendezvous, init_distributed
+    group = init_distributed(f"127.0.0.1:{port}", pid, 2)
+    assert jax.device_count() == 8 and jax.local_device_count() == 4
+    import repro.flor as flor
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+    def host_state(epoch):
+        rng = np.random.default_rng(7)
+        w = (rng.normal(size=(64, 32)).astype(np.float32)
+             * (1.0 + 0.001 * epoch))
+        b = np.arange(32, dtype=np.float32) * (2.0 + 0.001 * epoch)
+        return {"w": w, "b": b}
+    def global_tree(epoch):
+        h = host_state(epoch)
+        specs = {"w": P("data", "model"), "b": P("model")}
+        return {k: jax.make_array_from_callback(
+                    h[k].shape, NamedSharding(mesh, specs[k]),
+                    lambda idx, a=h[k]: a[idx])
+                for k in h}
+    timeout = float(os.environ.get("T_STITCH", "30"))
+    with flor.Session(run_dir, mode="record",
+                      record=flor.RecordSpec(adaptive=False, mesh=mesh,
+                                             distributed=group,
+                                             stitch_timeout_s=timeout)) as s:
+        state = global_tree(0)
+        with s.checkpointing(state=state) as ckpt:
+            for epoch in s.loop("epochs", range(3)):
+                for _ in s.loop("train", range(2)):
+                    pass
+                ckpt.state = global_tree(epoch + 1)
+                flor.log("epoch", epoch)
+    rdv = StitchRendezvous(os.path.join(run_dir, "store"),
+                           "dist-" + os.path.basename(run_dir.rstrip("/")),
+                           group, timeout_s=timeout)
+    rdv.arrive("exit")
+    rdv.await_all("exit")
+    print(f"CHILD_OK p{pid}", flush=True)
+    os._exit(0)
+""")
+
+RESTORE_CHECK = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import sys
+    import numpy as np, jax
+    from jax.sharding import Mesh
+    from repro.checkpoint import CheckpointStore, restore_sharded_tree
+    store = CheckpointStore(os.path.join(sys.argv[1], "store"))
+    rng = np.random.default_rng(7)
+    w = rng.normal(size=(64, 32)).astype(np.float32) * 1.002
+    truth = {"w": w, "b": np.arange(32, dtype=np.float32) * 2.002}
+    like = {"state": {k: np.empty_like(v) for k, v in truth.items()}}
+    got = store.get_tree("train@2.0", like=like)["state"]
+    assert all(np.array_equal(got[k], truth[k]) for k in truth)
+    for shape in ((4, 2), (1, 8), (8, 1)):
+        mesh = Mesh(np.array(jax.devices()).reshape(shape),
+                    ("data", "model"))
+        out = restore_sharded_tree(store, "train@2.0", mesh)
+        for k in truth:
+            arr = np.asarray(jax.device_get(out[f"['state']['{k}']"]))
+            assert np.array_equal(arr, truth[k]), (shape, k)
+    print("DREC_RESTORE_OK")
+""")
+
+
+def _free_port() -> int:
+    s = socket.socket()
+    s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def _fleet(run_dir: str, env_extra=None) -> list:
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env.pop("JAX_PLATFORMS", None)
+    env.update(env_extra or {})
+    port = _free_port()
+    procs = [subprocess.Popen(
+                 [sys.executable, "-c", CHILD, run_dir, str(port), str(p)],
+                 env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+                 text=True)
+             for p in (0, 1)]
+    return [(p.wait(), p.stdout.read()) for p in procs]
+
+
+def _host_state(epoch):
+    rng = np.random.default_rng(7)
+    w = (rng.normal(size=(64, 32)).astype(np.float32) * (1.0 + 0.001 * epoch))
+    b = np.arange(32, dtype=np.float32) * (2.0 + 0.001 * epoch)
+    return {"w": w, "b": b}
+
+
+@pytest.mark.slow
+def test_two_process_record_replays_bit_identical(tmp_path):
+    """2 processes x 4 devices record a (2, 4)-mesh run; the stitched v4s
+    replay bit-identically on (4, 2), (1, 8), (8, 1) and single-process
+    unsharded."""
+    run = str(tmp_path / "drun")
+    rcs = _fleet(run)
+    assert [rc for rc, _ in rcs] == [0, 0], rcs
+    assert all("CHILD_OK" in out for _, out in rcs), rcs
+
+    from repro.checkpoint import CheckpointStore
+    store = CheckpointStore(os.path.join(run, "store"))
+    keys = set(store.list_keys())
+    # every epoch stitched (v4 + 8 members each)
+    for e in range(3):
+        assert f"train_at_{e}.0" in keys
+        assert {f"train_at_{e}.0.shard{h}" for h in range(8)} <= keys
+        m = store.get_manifest(f"train@{e}.0")
+        assert m["version"] == 4 and len(m["members"]) == 8
+    assert store.get_meta("incomplete_ckpts") in (None, {"keys": []})
+    # both processes' markers were consumed by the stitch
+    sdir = os.path.join(run, "store", "runs", "dist-drun", ".stitch")
+    assert not [d for d in os.listdir(sdir) if d.startswith("train")]
+    # per-process log streams: the lead's record.jsonl is the query
+    # surface's copy; the peer's SPMD-identical rows live beside it
+    logs = set(os.listdir(os.path.join(run, "logs")))
+    assert {"record.jsonl", "record_p1.jsonl"} <= logs
+    # staging index dbs merged and removed at close
+    assert os.listdir(os.path.join(run, "store", "index", "staging")) == []
+    # deterministic distributed run id; lead finalized the registry
+    from repro.checkpoint.lineage import RunRegistry
+    recs = {r["run_id"]: r
+            for r in RunRegistry(os.path.join(run, "store")).list_runs()}
+    assert recs["dist-drun"]["status"] == "finished"
+    assert recs["dist-drun"]["final_keys"] == {"train": "train@2.0"}
+
+    # single-process, unsharded restore in THIS process (1 device)
+    truth = _host_state(2)
+    like = {"state": {k: np.empty_like(v) for k, v in truth.items()}}
+    got = store.get_tree("train@2.0", like=like)["state"]
+    assert all(np.array_equal(got[k], truth[k]) for k in truth)
+
+    # cross-mesh restores need 8 devices -> subprocess
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", RESTORE_CHECK, run],
+                         capture_output=True, text=True, timeout=600,
+                         env=env)
+    assert "DREC_RESTORE_OK" in out.stdout, out.stderr[-3000:]
+
+
+@pytest.mark.slow
+def test_crash_between_publish_and_stitch(tmp_path):
+    """Kill process 1 after its final-epoch member manifests are durable
+    but before its marker: the store is never corrupted — the lead marks
+    the checkpoint incomplete, the run finalizes at the last COMPLETE
+    checkpoint, replay plans skip the incomplete key, and GC reclaims the
+    orphan members."""
+    run = str(tmp_path / "crun")
+    rcs = _fleet(run, env_extra={
+        "T_STITCH": "6",
+        "FLOR_DIST_CRASH_BEFORE_PUBLISH": "train@2.0",
+        "FLOR_DIST_CRASH_PROCESS": "1",
+    })
+    assert rcs[0][0] == 0, rcs[0][1]
+    assert rcs[1][0] == CRASH_EXIT_CODE, rcs[1][1]
+
+    from repro.checkpoint import CheckpointStore
+    store = CheckpointStore(os.path.join(run, "store"))
+    keys = set(store.list_keys())
+    # publication-ordering invariant: orphan members, NO v4 naming them
+    assert "train_at_2.0" not in keys
+    orphans = {k for k in keys if k.startswith("train_at_2.0.shard")}
+    assert orphans, keys
+    assert "train_at_1.0" in keys
+    # the lead recorded the failed stitch
+    assert store.get_meta("incomplete_ckpts") == {"keys": ["train@2.0"]}
+    # the run finalized at the last complete checkpoint
+    from repro.checkpoint.lineage import RunRegistry
+    reg = RunRegistry(os.path.join(run, "store"))
+    rec = {r["run_id"]: r for r in reg.list_runs()}["dist-crun"]
+    assert rec["status"] == "finished"
+    assert rec["final_keys"] == {"train": "train@1.0"}
+    # replay planner skips the incomplete key
+    from repro.replay.plan import build_plan
+    plan = build_plan(run)
+    assert plan.incomplete == ["train_at_2.0"]
+    # last complete checkpoint replays bit-identically
+    truth = _host_state(1)
+    like = {"state": {k: np.empty_like(v) for k, v in truth.items()}}
+    got = store.get_tree("train@1.0", like=like)["state"]
+    assert all(np.array_equal(got[k], truth[k]) for k in truth)
+    # GC reclaims the orphans (they are unreferenced by construction)
+    res = reg.gc(store)
+    assert res["deleted_manifests"] == len(orphans)
+    keys_after = set(store.list_keys())
+    assert not [k for k in keys_after if "2.0" in k]
+    assert "train_at_1.0" in keys_after
+    # ...and the restore still works afterwards
+    got = store.get_tree("train@1.0", like=like)["state"]
+    assert all(np.array_equal(got[k], truth[k]) for k in truth)
+    # a dead process's staging index db is swept (absorbed) on reindex.
+    # Whether the crash itself leaves one depends on seal timing, so plant
+    # one the way a crashed recorder would have: created, never merged.
+    from repro.querydb.index import LogIndex, staging_path
+    root = os.path.join(run, "store")
+    LogIndex(root, create=True, db_path=staging_path(root, 9)).close()
+    staging = os.path.join(root, "index", "staging")
+    assert any(f.endswith(".db") for f in os.listdir(staging))
+    from repro.querydb.maintain import reindex
+    stats = reindex(run)
+    assert stats["staging_swept"] >= 1
+    assert not any(f.endswith(".db") for f in os.listdir(staging))

@@ -712,3 +712,88 @@ def test_lineage_chain_restores_bit_identically(tmp_path_factory, plan):
     for (rid, key), t in truth.items():
         got = store.get_tree(f"{rid}::{key}", like=t)
         assert _leaves_equal(t, got), (rid, key)
+
+
+# ------------------------------------- true multi-process registry races ----
+RACE_CHILD = """
+import os, sys, time
+store, rid, rdir, go, mode, rounds = (sys.argv[1], sys.argv[2], sys.argv[3],
+                                      sys.argv[4], sys.argv[5],
+                                      int(sys.argv[6]))
+from repro.checkpoint.lineage import RunIdCollision, RunRegistry
+reg = RunRegistry(store)
+deadline = time.time() + 30
+while not os.path.exists(go):
+    if time.time() > deadline:
+        sys.exit(3)
+    time.sleep(0.001)
+wins = colls = 0
+for _ in range(rounds):
+    try:
+        reg.register(rid, run_dir=rdir, namespace=None, exclusive=True)
+        wins += 1
+        if mode == "churn":
+            # vanish-and-reappear churn: the exact window where a loser of
+            # the link race used to fall through to a non-atomic clobber
+            reg.unregister(rid)
+    except RunIdCollision:
+        colls += 1
+print("RACE", wins, colls)
+"""
+
+
+def _race_fleet(tmp_path, mode, n=4, rounds=40, same_dir=False):
+    import subprocess
+    import sys as _sys
+    store = str(tmp_path / "store")
+    os.makedirs(store, exist_ok=True)
+    go = str(tmp_path / "go")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    procs = [subprocess.Popen(
+                 [_sys.executable, "-c", RACE_CHILD, store, "shared-id",
+                  str(tmp_path / ("dir" if same_dir else f"dir{i}")),
+                  go, mode, str(rounds)],
+                 env=env, stdout=subprocess.PIPE,
+                 stderr=subprocess.STDOUT, text=True)
+             for i in range(n)]
+    with open(go, "w") as f:
+        f.write("go")
+    outs = [(p.wait(), p.stdout.read()) for p in procs]
+    assert [rc for rc, _ in outs] == [0] * n, outs
+    stats = []
+    for _, out in outs:
+        tok = out.strip().splitlines()[-1].split()
+        assert tok[0] == "RACE", out
+        stats.append((int(tok[1]), int(tok[2])))
+    return store, stats
+
+
+@pytest.mark.slow
+def test_registry_exclusive_race_one_winner(tmp_path):
+    """N processes race the same run id for DIFFERENT run dirs: exactly one
+    ever owns it; everyone else gets RunIdCollision every round."""
+    rounds = 40
+    store, stats = _race_fleet(tmp_path, "keep", rounds=rounds)
+    assert all(w + c == rounds for w, c in stats), stats
+    winners = [i for i, (w, _) in enumerate(stats) if w > 0]
+    assert len(winners) == 1, stats
+    assert stats[winners[0]][0] == rounds       # resume path, every round
+    rec = RunRegistry(store).get("shared-id")
+    assert rec and rec["run_dir"].endswith(f"dir{winners[0]}")
+
+
+@pytest.mark.slow
+def test_registry_exclusive_race_under_churn(tmp_path):
+    """Winners unregister immediately, so losers observe the record vanish
+    mid-race — the loop must re-attempt the atomic create, never fall
+    through to a non-atomic write. Every attempt resolves to a win or a
+    clean collision, and the registry ends structurally sound."""
+    rounds = 40
+    store, stats = _race_fleet(tmp_path, "churn", rounds=rounds)
+    assert all(w + c == rounds for w, c in stats), stats
+    assert sum(w for w, _ in stats) >= 1
+    reg = RunRegistry(store)
+    rec = reg.get("shared-id")
+    assert rec is None or rec["run_id"] == "shared-id"
+    reg.list_runs()                             # no torn records

@@ -519,3 +519,126 @@ def test_bit_identity_on_private_store(tmp_path):
     _assert_engines_agree(run)
     assert pivot(run, "loss", engine="index") == \
         pivot(run, "loss", engine="files")
+
+
+# --------------------------------------- multi-process store concurrency ----
+REC_CHILD = """
+import os, sys
+import numpy as np
+import repro.flor as flor
+store, run_dir, run_id, epochs = (sys.argv[1], sys.argv[2], sys.argv[3],
+                                  int(sys.argv[4]))
+with flor.Session(run_dir, record=flor.RecordSpec(adaptive=False),
+                  lineage=flor.LineageSpec(store_root=store,
+                                           run_id=run_id)) as sess:
+    state = {"w": np.arange(6.0), "b": np.zeros(3)}
+    with sess.checkpointing(state=state) as ckpt:
+        for e in sess.loop("epochs", range(epochs)):
+            for _ in sess.loop("train", range(2)):
+                ckpt.state = {k: v + 1.0 for k, v in ckpt.state.items()}
+            sess.log("loss", 1.0 / (e + 1))
+            sess.log("acc", e * 0.125)
+print("REC_OK", run_id)
+"""
+
+QUERY_CHILD = """
+import os, sqlite3, sys, time
+from repro.core.query import log_records, pivot
+from repro.querydb import index_path
+store, stopfile = sys.argv[1], sys.argv[2]
+n = 0
+while not os.path.exists(stopfile):
+    rows = log_records(store, engine="auto")
+    pivot(store, "loss", engine="auto")
+    ip = index_path(store)
+    if os.path.exists(ip):
+        # WAL must stay structurally sound under two concurrent writers
+        conn = sqlite3.connect(ip, timeout=30.0)
+        try:
+            ok, = conn.execute("PRAGMA integrity_check").fetchone()
+            assert ok == "ok", ok
+        finally:
+            conn.close()
+    n += 1
+    time.sleep(0.02)
+print("QUERY_OK", n)
+"""
+
+
+@pytest.mark.slow
+def test_concurrent_recorders_with_live_reader(tmp_path):
+    """Two REAL processes record into one store root while a third queries
+    the whole time: the shared WAL index never corrupts, no query ever
+    fails, and after catch-up both engines agree bit-identically and the
+    index covers both runs."""
+    import subprocess
+    import sys as _sys
+    store = str(tmp_path / "store")
+    stop = str(tmp_path / "stop")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    q = subprocess.Popen([_sys.executable, "-c", QUERY_CHILD, store, stop],
+                         env=env, stdout=subprocess.PIPE,
+                         stderr=subprocess.STDOUT, text=True)
+    recs = [subprocess.Popen(
+                [_sys.executable, "-c", REC_CHILD, store,
+                 str(tmp_path / f"run{i}"), f"c{i}", "8"],
+                env=env, stdout=subprocess.PIPE,
+                stderr=subprocess.STDOUT, text=True)
+            for i in (0, 1)]
+    outs = [(p.wait(), p.stdout.read()) for p in recs]
+    with open(stop, "w") as f:
+        f.write("done")
+    qrc, qout = q.wait(timeout=120), q.stdout.read()
+    assert [rc for rc, _ in outs] == [0, 0], outs
+    assert qrc == 0 and "QUERY_OK" in qout, qout
+    reindex(store)
+    files = _assert_engines_agree(store)
+    assert len([r for r in files if r.get("key") == "loss"]) == 16
+    assert pivot(store, "loss", engine="index") == \
+        pivot(store, "loss", engine="files")
+    idx = open_index(store)
+    from repro.core.query import _registered_runs, _run_log_files
+    for rec in _registered_runs(store):
+        assert idx.covers(rec["run_id"],
+                          _run_log_files(rec["run_dir"],
+                                         include_replay=True)), rec
+    idx.close()
+
+
+def test_staging_absorb_engine_identical(tmp_path):
+    """Rows routed through a per-process staging db and absorbed into the
+    main index (the multi-process merge path) serve bit-identically to
+    rows ingested directly — and a finalized main runs row survives a
+    stale 'running' staging row."""
+    from repro.logging.segment import _seal_of
+    from repro.querydb.index import staging_path
+    from repro.querydb.maintain import sweep_staging
+    store = str(tmp_path / "store")
+    runA = str(tmp_path / "runA")
+    _record(runA, store, "rA", epochs=3)
+    ref = _assert_engines_agree(store)
+
+    # drop rA's directly-ingested rows, rebuild them via staging + absorb
+    idx = open_index(store)
+    idx.invalidate_stream("rA", "record")
+    assert idx.conn.execute("SELECT count(*) FROM records "
+                            "WHERE run_id='rA'").fetchone()[0] == 0
+    reg_rec = RunRegistry(store).get("rA")
+    assert reg_rec["status"] == "finished"
+    stg = LogIndex(store, create=True, db_path=staging_path(store, 5))
+    stg.upsert_run({**reg_rec, "status": "running"})   # stale staging row
+    for n, seg_path in list_segments(os.path.join(runA, "logs",
+                                                  "record.jsonl")):
+        stg.ingest_segment("rA", "record", n, seg_path,
+                           sealed=_seal_of(seg_path) is not None)
+    stg.close()
+    assert sweep_staging(store, idx) == 1
+    assert not os.path.exists(staging_path(store, 5))
+    # absorbed rows are engine-identical to the direct ingest
+    assert _assert_engines_agree(store) == ref
+    # the finalized main mirror won the runs-row merge
+    status, = idx.conn.execute("SELECT status FROM runs WHERE "
+                               "run_id='rA'").fetchone()
+    assert status == "finished"
+    idx.close()
