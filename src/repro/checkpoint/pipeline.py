@@ -777,7 +777,10 @@ class CheckpointPipeline:
             for stale in set(hashes_map) - current:
                 del hashes_map[stale]
                 encs_map.pop(stale, None)
-        stitched = True
+        # stitched: True = v4 written, False = marked incomplete, None =
+        # outcome unknown here (non-lead of a distributed fleet; the lead
+        # decides, close() reconciles the tips from the store)
+        stitched: Optional[bool] = True
         if self.dist is None:
             store.put_manifest({
                 "key": key, "version": 4, "kind": "sharded",
@@ -813,7 +816,8 @@ class CheckpointPipeline:
                 "full_every": self.full_every}
 
     # ------------------------------------------------- distributed stitch --
-    def _dist_stitch(self, payload: dict, store, members: dict) -> bool:
+    def _dist_stitch(self, payload: dict, store,
+                     members: dict) -> Optional[bool]:
         """Multi-process tail of a sharded checkpoint (writer thread).
         Every process PUBLISHES its member-manifest names + local layout
         fragment through the file rendezvous; the LEAD process gathers all
@@ -823,7 +827,12 @@ class CheckpointPipeline:
         before the stitch — so a crash anywhere in between leaves only
         unreferenced members (GC food), never a v4 naming a missing one.
         Past the deadline (or on validation failure) the lead marks the
-        checkpoint ``incomplete`` in run meta and training moves on."""
+        checkpoint ``incomplete`` in run meta and training moves on.
+
+        Returns the stitch outcome on the lead (True = v4 written, False =
+        incomplete); ``None`` on non-leads, whose publication returns long
+        before the lead's verdict exists — their stats must not claim an
+        outcome, and close() reconciles their tips from the store."""
         import os as _os
         from repro.parallel import rendezvous as rdv
         key = payload["key"]
@@ -840,7 +849,7 @@ class CheckpointPipeline:
                               for lf in payload["layout"]},
         })
         if not group.is_lead:
-            return True            # publication done; the lead stitches
+            return None      # publication done; outcome is the lead's call
         got = self.dist.gather(key)
         merged = self._merge_markers(store, payload, got) \
             if got is not None else None

@@ -596,6 +596,10 @@ class FlorContext:
             pipeline.close()
             self.writer = None
             final_keys = {s: k for s, k in pipeline._last_key.items() if k}
+        if self.rendezvous is not None:
+            # all stitches are settled (pipeline closed above): stop the
+            # liveness beater so a dead-on-exit process cannot look alive
+            self.rendezvous.close()
         if self._registered:
             # the per-scope tips are what a derived run warm-starts from.
             # Only the LEAD of a distributed fleet finalizes — concurrent

@@ -420,8 +420,10 @@ def main():
         if not rdv.group.is_lead:
             print(f"host {rdv.group.process_id}: share complete "
                   f"({len(owners)} task log(s)); host 0 merges")
+            rdv.close()
             return
         got = rdv.await_all(MERGE_BARRIER, timeout_s=args.merge_timeout)
+        rdv.close()
         if got is None:
             print(f"replay merge FAILED: a host missed the merge barrier "
                   f"within {args.merge_timeout:.0f}s")

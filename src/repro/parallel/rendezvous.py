@@ -19,9 +19,16 @@ file barrier under ``<store_root>/runs/<run>/.stitch/``:
     makes ``gather`` return ``None`` and the lead marks the checkpoint
     ``incomplete`` in run meta instead of wedging training.
 
-Heartbeats bound the wait from the OTHER side: a process whose marker is
-missing and whose heartbeat file is older than the timeout is declared
-dead immediately rather than burning the remaining deadline.
+Heartbeats bound the wait from the OTHER side: every live process runs a
+background beater thread that renews its ``hb.p<pid>`` file continuously
+(a beat only at publish time would go stale between checkpoints whenever
+the cadence exceeds the stitch timeout). A gather measures staleness
+RELATIVE TO ITS OWN START — a heartbeat is evidence of death only once it
+has been silent for ``timeout_s`` within the current gather — because the
+``.stitch/`` dir (and the heartbeat files in it) outlives checkpoints and
+even whole runs: replay reuses the record run's dir, and a leftover
+record-phase heartbeat must not declare a replay host dead before it had
+a chance to start.
 
 Fault injection (tests / the distributed example): set
 ``FLOR_DIST_CRASH_BEFORE_PUBLISH=<key>`` (optionally scoped with
@@ -35,6 +42,7 @@ import json
 import os
 import re
 import shutil
+import threading
 import time
 from dataclasses import dataclass
 from typing import Optional
@@ -139,6 +147,17 @@ class StitchRendezvous:
         self.group = group
         self.timeout_s = float(timeout_s)
         os.makedirs(self.root, exist_ok=True)
+        # continuous liveness: beat NOW (so a peer's gather never sees only
+        # a stale record-phase leftover) and keep beating on a daemon
+        # thread until close() — a beat only at publish time goes stale
+        # between checkpoints whenever the cadence exceeds timeout_s
+        self._beat_interval = min(max(self.timeout_s / 4.0, 0.05), 5.0)
+        self._beat_stop = threading.Event()
+        self.heartbeat()
+        self._beater = threading.Thread(
+            target=self._beat_loop, daemon=True,
+            name=f"stitch-hb-p{group.process_id}")
+        self._beater.start()
 
     # ------------------------------------------------------------ paths --
     def _key_dir(self, key: str) -> str:
@@ -155,6 +174,20 @@ class StitchRendezvous:
         _atomic_write(self._hb_path(self.group.process_id),
                       str(time.time()).encode())
 
+    def _beat_loop(self):
+        while not self._beat_stop.wait(self._beat_interval):
+            try:
+                self.heartbeat()
+            except OSError:
+                pass    # store dir gone (gc'd run): liveness is moot
+
+    def close(self):
+        """Stop the background beater. The rendezvous stays usable (publish
+        still beats once per call); only continuous liveness ends — callers
+        close when the record/replay session is done with coordination."""
+        self._beat_stop.set()
+        self._beater.join(timeout=2 * self._beat_interval)
+
     def publish(self, key: str, payload: dict):
         """Atomically publish this process's marker for ``key`` and renew
         the heartbeat. The fault-injection window sits just above this
@@ -167,21 +200,31 @@ class StitchRendezvous:
         self.heartbeat()
 
     # ----------------------------------------------------------- gather --
-    def _hb_stale(self, pid: int) -> bool:
+    def _hb_stale(self, pid: int, since: float) -> bool:
+        """Dead iff the heartbeat has been silent for ``timeout_s`` WITHIN
+        the current gather (``since`` = the gather's wall-clock start).
+        Absolute file age is meaningless across invocations: the heartbeat
+        file survives in ``.stitch/`` between checkpoints and between the
+        record run and a later replay, so an old mtime only proves the
+        peer has not STARTED yet — it gets the timeout to show up and its
+        beater makes the file fresh the moment it does."""
         try:
-            age = time.time() - os.path.getmtime(self._hb_path(pid))
+            m = os.path.getmtime(self._hb_path(pid))
         except OSError:
             return False          # never beat yet: charge the deadline
-        return age > self.timeout_s
+        return time.time() - max(m, since) > self.timeout_s
 
     def gather(self, key: str,
                timeout_s: Optional[float] = None) -> Optional[list]:
         """Lead-only. All processes' payloads for ``key`` ordered by
         process id, or ``None`` once the deadline passes or a missing
         process's heartbeat goes stale (it is dead; waiting longer cannot
-        help)."""
+        help — the early exit matters when the budget exceeds the
+        heartbeat timeout, e.g. a long merge deadline over a short
+        liveness window)."""
         budget = self.timeout_s if timeout_s is None else float(timeout_s)
         deadline = time.monotonic() + budget
+        start = time.time()
         want = range(self.group.num_processes)
         while True:
             found = {}
@@ -195,7 +238,8 @@ class StitchRendezvous:
                 return [found[p] for p in want]
             if time.monotonic() >= deadline:
                 return None
-            if any(p not in found and self._hb_stale(p) for p in want):
+            if any(p not in found and self._hb_stale(p, start)
+                   for p in want):
                 return None
             time.sleep(self.POLL_S)
 

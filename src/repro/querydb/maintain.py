@@ -63,9 +63,10 @@ class SegmentIndexer:
         if self._idx is None:
             if self.staging is not None:
                 from repro.querydb.index import staging_path
-                self._idx = LogIndex(
-                    self.store_root, create=True,
-                    db_path=staging_path(self.store_root, self.staging))
+                sp = staging_path(self.store_root, self.staging)
+                self._idx = LogIndex(self.store_root, create=True,
+                                     db_path=sp)
+                _write_alive_marker(sp)
             else:
                 self._idx = ensure_index(self.store_root)
         return self._idx
@@ -156,12 +157,66 @@ class SegmentIndexer:
 
 
 def _remove_db(db_path: str):
-    """Delete a sqlite database and its WAL sidecar files."""
-    for suffix in ("", "-wal", "-shm", "-journal"):
+    """Delete a sqlite database, its WAL sidecar files, and the alive
+    marker the staging path hangs next to it."""
+    for suffix in ("", "-wal", "-shm", "-journal", ".alive"):
         try:
             os.remove(db_path + suffix)
         except OSError:
             pass
+
+
+def _write_alive_marker(db_path: str):
+    """Stamp ``<db>.alive`` with this process's identity (atomic rename,
+    so a concurrent sweep never reads a torn marker). The sweep uses it to
+    tell a LIVE recorder's staging db from a crashed process's leftover —
+    deleting a live one would orphan every row the recorder seals after
+    the sweep (it keeps writing to the unlinked inode, and its finish()
+    absorb finds no file)."""
+    import json
+    import socket
+    from repro.checkpoint.store import _atomic_write
+    _atomic_write(db_path + ".alive",
+                  json.dumps({"pid": os.getpid(),
+                              "host": socket.gethostname()}).encode())
+
+
+_FOREIGN_LIVE_WINDOW_S = 600.0
+
+
+def _staging_live(db_path: str) -> bool:
+    """Whether the process that owns this staging db still looks alive. No
+    marker means no live owner: a SegmentIndexer stamps the marker the
+    moment it creates the db, so an unmarked file is a pre-marker layout
+    or test fixture — sweepable either way. A marker from THIS host is
+    checked against the pid; one from another host (shared store) cannot
+    be probed, so the db counts as live while it moved recently."""
+    import json
+    import socket
+    try:
+        with open(db_path + ".alive", "rb") as f:
+            mark = json.loads(f.read())
+    except (OSError, ValueError):
+        return False
+    if mark.get("host") == socket.gethostname():
+        try:
+            pid = int(mark.get("pid") or 0)
+        except (TypeError, ValueError):
+            return False
+        if pid <= 0:
+            return False
+        try:
+            os.kill(pid, 0)
+        except OSError:
+            return False
+        return True
+    newest = 0.0
+    for suffix in ("", "-wal", "-shm", ".alive"):
+        try:
+            newest = max(newest, os.path.getmtime(db_path + suffix))
+        except OSError:
+            pass
+    return time.time() - newest < _FOREIGN_LIVE_WINDOW_S
 
 
 def sweep_staging(store_root: str, idx: LogIndex) -> int:
@@ -169,7 +224,12 @@ def sweep_staging(store_root: str, idx: LogIndex) -> int:
     residue of record processes that crashed between sealing segments and
     merging at finish. Absorbing (rather than just deleting) keeps streams
     the file walk cannot enumerate (non-lead record_p<N> debug streams);
-    anything else the walk re-ingests from the segment files anyway."""
+    anything else the walk re-ingests from the segment files anyway.
+
+    A staging db whose owner is still alive (``_staging_live``) is left
+    untouched: a reindex racing an in-flight distributed record must not
+    delete a database another process is mid-write on — its rows merge at
+    that process's own finish()."""
     sdir = os.path.join(store_root, "index", "staging")
     swept = 0
     try:
@@ -180,6 +240,8 @@ def sweep_staging(store_root: str, idx: LogIndex) -> int:
         if not fn.endswith(".db"):
             continue
         sp = os.path.join(sdir, fn)
+        if _staging_live(sp):
+            continue
         try:
             idx.absorb(sp)
         except Exception:

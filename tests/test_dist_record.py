@@ -20,6 +20,8 @@ import socket
 import subprocess
 import sys
 import textwrap
+import threading
+import time
 
 import numpy as np
 import pytest
@@ -57,15 +59,81 @@ def test_rendezvous_deadline_and_stale_heartbeat(tmp_path):
     r0 = StitchRendezvous(root, "r", ProcessGroup(0, 2), timeout_s=0.3)
     r1 = StitchRendezvous(root, "r", ProcessGroup(1, 2), timeout_s=0.3)
     r0.publish("k", {"process": 0})
-    # the missing process never beat: gather charges the full deadline
+    # the missing process is alive (its beater renews the heartbeat):
+    # gather charges the full deadline
     assert r0.gather("k", timeout_s=0.3) is None
-    # a STALE heartbeat short-circuits the wait (the peer is dead)
-    r1.heartbeat()
+    # a heartbeat that stays silent for the timeout WITHIN the gather
+    # short-circuits a longer budget (the peer is dead): stop r1's beater
+    # and age its heartbeat, then gather with a 30s budget — the stale
+    # check must fire at ~timeout_s, not burn the budget
+    r1.close()
     os.utime(r1._hb_path(1), (1, 1))
+    t0 = time.monotonic()
     assert r0.gather("k", timeout_s=30.0) is None
+    assert time.monotonic() - t0 < 5.0
     # a marker arriving late still satisfies a fresh gather
     r1.publish("k", {"process": 1})
     assert len(r0.gather("k")) == 2
+    r0.close()
+
+
+def test_rendezvous_slow_cadence_not_declared_dead(tmp_path):
+    """A live peer whose LAST beat predates the stitch timeout (checkpoint
+    cadence longer than timeout_s) must not be declared dead at the start
+    of the next gather — staleness is relative to the gather, not the
+    heartbeat file's absolute age."""
+    root = str(tmp_path / "store")
+    r0 = StitchRendezvous(root, "r", ProcessGroup(0, 2), timeout_s=0.3)
+    r1 = StitchRendezvous(root, "r", ProcessGroup(1, 2), timeout_s=0.3)
+    # simulate a long gap since r1's previous publish: freeze its beater
+    # and age the heartbeat WAY past timeout_s
+    r1.close()
+    os.utime(r1._hb_path(1), (1, 1))
+    r0.publish("k1", {"process": 0})
+    late = threading.Timer(0.1, lambda: r1.publish("k1", {"process": 1}))
+    late.start()
+    try:
+        got = r0.gather("k1", timeout_s=5.0)
+    finally:
+        late.join()
+    assert got is not None and [m["process"] for m in got] == [0, 1]
+    r0.close()
+
+
+def test_rendezvous_record_leftover_heartbeats_ignored_by_replay(tmp_path):
+    """Replay reuses the record run's .stitch/ dir, where record-phase
+    hb.p* files persist. A replay merge starting long after the record
+    ended must give every host the full merge timeout, not fail the
+    barrier because the leftover heartbeats look stale."""
+    root = str(tmp_path / "store")
+    # record phase: both processes beat, then the run ends
+    rec0 = StitchRendezvous(root, "r", ProcessGroup(0, 2), timeout_s=0.3)
+    rec1 = StitchRendezvous(root, "r", ProcessGroup(1, 2), timeout_s=0.3)
+    rec0.close()
+    rec1.close()
+    # ... much later: replay. Age BOTH leftover heartbeats far past the
+    # merge timeout before any replay host constructs its rendezvous.
+    os.utime(rec0._hb_path(0), (1, 1))
+    os.utime(rec1._hb_path(1), (1, 1))
+    rep0 = StitchRendezvous(root, "r", ProcessGroup(0, 2), timeout_s=1.0)
+    rep0.retract("replay.merge")
+    rep0.arrive("replay.merge", {"process": 0})
+
+    def late_host():
+        rep1 = StitchRendezvous(root, "r", ProcessGroup(1, 2),
+                                timeout_s=1.0)
+        rep1.retract("replay.merge")
+        rep1.arrive("replay.merge", {"process": 1})
+        rep1.close()
+
+    late = threading.Timer(0.2, late_host)
+    late.start()
+    try:
+        got = rep0.await_all("replay.merge", timeout_s=5.0)
+    finally:
+        late.join()
+    assert got is not None and [m["process"] for m in got] == [0, 1]
+    rep0.close()
 
 
 def test_rendezvous_retract_own_marker(tmp_path):

@@ -642,3 +642,41 @@ def test_staging_absorb_engine_identical(tmp_path):
                                "run_id='rA'").fetchone()
     assert status == "finished"
     idx.close()
+
+
+def test_sweep_staging_skips_live_recorder(tmp_path):
+    """A staging db whose .alive marker names a running pid is an
+    IN-FLIGHT recorder's database: sweeping (deleting) it would orphan
+    every row that recorder seals afterwards, so the sweep must leave it
+    for the owner's finish()-time merge. A marker naming a dead pid is a
+    crash leftover and is swept; the marker goes with it."""
+    import json as _json
+    import subprocess
+    import sys
+    from repro.querydb.index import ensure_index, staging_path
+    from repro.querydb.maintain import _write_alive_marker, sweep_staging
+    store = str(tmp_path / "store")
+    # live: marked with THIS process's pid
+    live_sp = staging_path(store, 1)
+    LogIndex(store, create=True, db_path=live_sp).close()
+    _write_alive_marker(live_sp)
+    # dead: marker rewritten with the pid of a child that already exited
+    dead_sp = staging_path(store, 2)
+    LogIndex(store, create=True, db_path=dead_sp).close()
+    _write_alive_marker(dead_sp)
+    proc = subprocess.Popen([sys.executable, "-c", "pass"])
+    proc.wait()
+    with open(dead_sp + ".alive") as f:
+        mark = _json.load(f)
+    mark["pid"] = proc.pid
+    with open(dead_sp + ".alive", "w") as f:
+        _json.dump(mark, f)
+    idx = ensure_index(store)
+    try:
+        assert sweep_staging(store, idx) == 1
+        assert os.path.exists(live_sp)          # live db untouched
+        assert os.path.exists(live_sp + ".alive")
+        assert not os.path.exists(dead_sp)      # leftover absorbed+removed
+        assert not os.path.exists(dead_sp + ".alive")
+    finally:
+        idx.close()
